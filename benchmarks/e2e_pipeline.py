@@ -1,0 +1,44 @@
+"""End-to-end C-FedRAG pipeline latency decomposition (paper Fig. 2/3 flow):
+dispatch+seal / local retrieval / aggregate (rerank) / prompt build,
+per stage, per query — the serving-cost picture of the architecture."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.pipeline import CFedRAGConfig, CFedRAGSystem
+from repro.data.corpus import make_federated_corpus
+from repro.data.tokenizer import HashTokenizer
+from repro.launch.serve import overlap_reranker
+
+
+def run(n_queries=40):
+    corpus = make_federated_corpus(n_facts=192, n_distractors=192, n_queries=n_queries)
+    tok = HashTokenizer()
+    sys_ = CFedRAGSystem(
+        corpus, CFedRAGConfig(aggregation="rerank"), tokenizer=tok, reranker=overlap_reranker(tok)
+    )
+    stages = {"collect": 0.0, "aggregate": 0.0, "prompt": 0.0}
+    for q in corpus.queries[:n_queries]:
+        t0 = time.monotonic()
+        responses = sys_.orchestrator.collect_contexts(q.text)
+        t1 = time.monotonic()
+        ctx = sys_.orchestrator.aggregate(q.text, responses)
+        t2 = time.monotonic()
+        sys_.orchestrator.build_prompt(q.text, ctx)
+        t3 = time.monotonic()
+        stages["collect"] += t1 - t0
+        stages["aggregate"] += t2 - t1
+        stages["prompt"] += t3 - t2
+    return [(k, v / n_queries * 1e6) for k, v in stages.items()]
+
+
+def main(argv=None):
+    for name, us in run():
+        print(f"e2e_{name},{us:.1f},per-query")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Kernel micro-benchmarks: wall time of the jnp production path on CPU
+(numbers are CPU-relative; the TPU roofline for the same ops comes from
+the dry-run) + interpret-mode correctness spot checks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.retrieval_topk.ref import retrieval_topk_ref
+from repro.kernels.ssd_scan.ref import ssd_chunk_ref
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.monotonic()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.monotonic() - t0) / iters * 1e6  # us
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # retrieval: paper scale = 10k snippets/corpus, d=768 (contriever)
+    q = jax.random.normal(key, (8, 256))
+    c = jax.random.normal(jax.random.fold_in(key, 1), (10_000, 256))
+    f = jax.jit(lambda q, c: retrieval_topk_ref(q, c, 8))
+    us = _time(f, q, c)
+    rows.append(("retrieval_topk_10k", us, f"{2*8*10_000*256/us/1e3:.2f} GFLOP/s-cpu"))
+
+    # flash attention fwd, 1k seq
+    qq = jax.random.normal(key, (1, 1024, 8, 64), jnp.float32)
+    kk = jax.random.normal(jax.random.fold_in(key, 2), (1, 1024, 4, 64), jnp.float32)
+    vv = jax.random.normal(jax.random.fold_in(key, 3), (1, 1024, 4, 64), jnp.float32)
+    f = jax.jit(lambda a, b, c_: flash_attention_ref(a, b, c_))
+    us = _time(f, qq, kk, vv)
+    rows.append(("attention_fwd_1k", us, f"{4*1024*1024*8*64/us/1e3:.2f} GFLOP/s-cpu"))
+
+    # decode attention against 8k cache
+    qd = jax.random.normal(key, (4, 8, 64))
+    kc = jax.random.normal(jax.random.fold_in(key, 4), (4, 8192, 4, 64))
+    vc = jax.random.normal(jax.random.fold_in(key, 5), (4, 8192, 4, 64))
+    lens = jnp.full((4,), 8192)
+    f = jax.jit(lambda a, b, c_, l: decode_attention_ref(a, b, c_, l))
+    us = _time(f, qd, kc, vc, lens)
+    bytes_moved = 4 * 8192 * 4 * 64 * 4 * 2
+    rows.append(("decode_attn_8k_cache", us, f"{bytes_moved/us/1e3:.2f} GB/s-cpu"))
+
+    # ssd chunk
+    x = jax.random.normal(key, (2, 256, 8, 64))
+    b = jax.random.normal(jax.random.fold_in(key, 6), (2, 256, 8, 64))
+    cc2 = jax.random.normal(jax.random.fold_in(key, 7), (2, 256, 8, 64))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 8), (2, 256, 8)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 9), (8,)))
+    f = jax.jit(lambda *t: ssd_chunk_ref(*t))
+    us = _time(f, x, b, cc2, dt, a)
+    rows.append(("ssd_chunk_L256", us, ""))
+    return rows
+
+
+def main(argv=None):
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

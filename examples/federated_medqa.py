@@ -1,0 +1,96 @@
+"""End-to-end driver: TRAIN a ~1M-param generator for a few hundred steps
+on the grounding/copy stream, then SERVE it as F_inf inside the C-FedRAG
+pipeline and measure end-to-end QA exact-match with vs without federated
+retrieval — the full paper loop (train -> retrieve -> re-rank -> generate)
+at CPU scale.
+
+    PYTHONPATH=src python examples/federated_medqa.py --steps 300
+
+Also exercises checkpoint/restart: the trainer checkpoints every 50 steps
+and `--resume auto` continues a killed run.
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_config
+from repro.core.pipeline import CFedRAGConfig, CFedRAGSystem
+from repro.data.corpus import make_federated_corpus
+from repro.data.pipeline import LMBatchStream
+from repro.data.tokenizer import ANS, HashTokenizer
+from repro.launch.serve import overlap_reranker
+from repro.models import lm as LM
+from repro.optim.optimizers import cosine_schedule, get_optimizer
+from repro.runtime.sharding import ShardingPolicy, base_rules
+from repro.runtime.train_loop import Trainer, TrainerConfig
+
+POL = ShardingPolicy(rules=base_rules(False), mesh=None)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=96)
+    ap.add_argument("--ckpt-dir", default="/tmp/medqa_ckpt")
+    ap.add_argument("--queries", type=int, default=24)
+    args = ap.parse_args()
+
+    tok = HashTokenizer(2048)
+    cfg = (
+        smoke_config(get_config("qwen3-0.6b"))
+        .with_overrides(vocab_size=2048, n_layers=4, d_model=128, n_heads=4,
+                        n_kv_heads=2, head_dim=32, d_ff=256)
+    )
+
+    print(f"1) training the generator ({args.steps} steps on the grounding stream)...")
+    stream = LMBatchStream(args.batch, args.seq, cfg.vocab_size, seed=3, copy_task_frac=0.8)
+    trainer = Trainer(
+        cfg, POL, get_optimizer("adamw"), stream,
+        TrainerConfig(total_steps=args.steps, ckpt_every=50, ckpt_dir=args.ckpt_dir),
+        lr_fn=cosine_schedule(3e-3, 20, args.steps),
+    )
+    params, _ = trainer.run(resume="auto")
+    print(f"   loss: {trainer.metrics_log[0]['loss']:.3f} -> {trainer.metrics_log[-1]['loss']:.3f}")
+
+    print("2) standing up C-FedRAG with the trained generator as F_inf...")
+    corpus = make_federated_corpus(n_facts=128, n_distractors=128, n_queries=args.queries, seed=2)
+
+    def generator(prompt_tokens: np.ndarray) -> np.ndarray:
+        return np.asarray(
+            LM.generate(cfg, POL, params, {"tokens": jnp.asarray(prompt_tokens)}, n_tokens=2)
+        )
+
+    system = CFedRAGSystem(
+        corpus, CFedRAGConfig(aggregation="rerank"), tokenizer=tok,
+        reranker=overlap_reranker(tok), generator=generator,
+    )
+
+    print("3) end-to-end QA: answer exact-match with vs without retrieval")
+    em_rag, em_norag, recall = 0, 0, 0
+    for q in corpus.queries[: args.queries]:
+        ans_tok = tok.token(q.answer)
+        res = system.orchestrator.answer(q.text)
+        recall += q.gold_chunk_id in list(res["context"]["chunk_ids"])
+        em_rag += int(res["answer_tokens"][0] == ans_tok)
+        # no-RAG: query-only prompt
+        bare = system.orchestrator.build_prompt(q.text, {"chunk_tokens": np.zeros((0, 1), np.int32)})
+        em_norag += int(generator(bare)[0][0] == ans_tok)
+    n = args.queries
+    print(f"   recall@8 = {recall/n:.3f}")
+    print(f"   answer EM with C-FedRAG   : {em_rag/n:.3f}")
+    print(f"   answer EM without retrieval: {em_norag/n:.3f}")
+    if em_rag > em_norag:
+        print("   -> retrieval grounding improves generation (paper Table 1 direction)")
+    else:
+        print("   -> (CPU-scale model too weak to exploit context at this budget; "
+              "recall@8 above is the retrieval-quality signal)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Quickstart: stand up a 2-site C-FedRAG system and answer queries.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Walks the paper's Algorithm 1 end to end on the synthetic provenance
+corpus: providers vectorize their shards, the enclave orchestrator
+broadcasts a query over attested channels, collects local top-8s,
+re-ranks 16 -> 8 in-enclave, and reports whether the gold evidence made
+the context window.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core.pipeline import CFedRAGConfig, CFedRAGSystem
+from repro.data.corpus import make_federated_corpus
+from repro.data.tokenizer import HashTokenizer
+from repro.launch.serve import overlap_reranker
+
+
+def main():
+    print("building federated corpus (4 corpora x 2 sites, known provenance)...")
+    corpus = make_federated_corpus(n_facts=128, n_distractors=128, n_queries=20)
+    tok = HashTokenizer()
+
+    print("standing up providers + enclave orchestrator (mutual attestation)...")
+    system = CFedRAGSystem(
+        corpus,
+        CFedRAGConfig(aggregation="rerank", m_local=8, n_global=8),
+        tokenizer=tok,
+        reranker=overlap_reranker(tok),
+    )
+    for p in system.providers:
+        print(f"  provider {p.provider_id}: {p.list_products()}")
+
+    print("\nanswering queries through the confidential pipeline:")
+    for q in corpus.queries[:5]:
+        res = system.orchestrator.answer(q.text)
+        ids = list(res["context"]["chunk_ids"])
+        hit = q.gold_chunk_id in ids
+        srcs = sorted(set(int(x) for x in res["context"]["providers"]))
+        print(
+            f"  {q.text!r:44s} -> gold in context: {'YES' if hit else 'no '}"
+            f"  (context from providers {srcs}, {res['context']['n_candidates']} candidates)"
+        )
+
+    stats = system.eval_retrieval(20)
+    print(f"\nrecall@8 = {stats['recall_at_n']:.3f}   MRR = {stats['mrr']:.3f}")
+    print("done — see examples/federated_medqa.py for the trained end-to-end variant.")
+
+
+if __name__ == "__main__":
+    main()

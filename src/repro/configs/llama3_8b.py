@@ -1,0 +1,9 @@
+"""Llama3-8B-Instruct-like — the paper's inference model F_inf (§2.3.2)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-8b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size=128256,
+    rope_theta=500_000.0,
+)

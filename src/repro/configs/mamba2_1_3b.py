@@ -1,0 +1,9 @@
+"""mamba2-1.3b [ssm] — SSD, attn-free, no FFN (d_ff=0) [arXiv:2405.21060]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=0, n_kv_heads=0, head_dim=64,
+    d_ff=0, vocab_size=50280,
+    ssm_state=128, ssm_head_dim=64, ssm_expand=2, ssm_groups=1, conv_width=4,
+)

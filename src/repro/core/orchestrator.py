@@ -1,0 +1,145 @@
+"""Orchestrator (paper §2.3.2, Algorithm 1) — runs inside the CC enclave.
+
+Flow per query:
+  1. select k_n <= k providers (all by default; compatibility selector opt-in)
+  2. broadcast the sealed query over attested channels
+  3. collect local top-m responses under a deadline/quorum (straggler
+     mitigation is *native* to Algorithm 1's k_n <= k semantics)
+  4. aggregate inside the enclave:
+       embedding_rank  merge by provider-reported scores
+       rerank          cross-encoder F_aggr over all candidates (paper's
+                       bge-reranker-base role), keep global top-n
+  5. build the augmented prompt and run F_inf (generation LLM) in-enclave
+"""
+from __future__ import annotations
+
+import secrets
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.confidential import Enclave, SecureChannel
+from repro.core.provider import DataProvider, pack, unpack
+from repro.data.tokenizer import ANS, BOS, CTX, EOS, PAD, QRY, SEP, HashTokenizer
+
+
+class Orchestrator:
+    def __init__(
+        self,
+        providers: Sequence[DataProvider],
+        tokenizer: HashTokenizer,
+        *,
+        aggregation: str = "rerank",  # embedding_rank | rerank
+        reranker: Callable | None = None,  # (query_tokens, cand_tokens (C,S)) -> (C,) scores
+        generator: Callable | None = None,  # (prompt_tokens (1,S)) -> (1,T) answer tokens
+        m_local: int = 8,
+        n_global: int = 8,
+        quorum: int = 1,
+        deadline_s: float | None = None,
+        selector=None,  # core.advanced.ProviderSelector (paper §2.2 routing)
+        selector_top_p: int = 0,  # 0 -> broadcast to all (paper's basic setup)
+        rewriter=None,  # core.advanced.QueryRewriter (per-provider expansion)
+    ):
+        self.providers = list(providers)
+        self.tok = tokenizer
+        self.aggregation = aggregation
+        self.reranker = reranker
+        self.generator = generator
+        self.m_local, self.n_global = m_local, n_global
+        self.quorum = quorum
+        self.deadline_s = deadline_s
+        self.selector = selector
+        self.selector_top_p = selector_top_p
+        self.rewriter = rewriter
+        self.enclave = Enclave("cfedrag-orchestrator-v1")
+        self._establish_channels()
+
+    def _establish_channels(self):
+        """Mutual attestation with every provider (paper §2.3.1 mTLS): each
+        side verifies the other's measurement before deriving session keys
+        (directional keys agree because both are derived from the same
+        static-DH secret with measurement-ordered labels)."""
+        for p in self.providers:
+            ch = SecureChannel.establish(self.enclave, p.enclave, p.enclave.measurement)
+            p.channel = SecureChannel.establish(p.enclave, self.enclave, self.enclave.measurement)
+            setattr(p, "_orch_channel", ch)
+
+    def select_providers(self, query_text: str) -> list[DataProvider]:
+        if self.selector is not None and self.selector_top_p:
+            q_tokens = self.tok.encode(query_text, max_len=24)
+            return self.selector.select(q_tokens, self.providers, self.selector_top_p)
+        return self.providers  # broadcast policy (paper's basic setup)
+
+    # ------------------------------------------------------------------ #
+    def collect_contexts(self, query_text: str) -> list[dict]:
+        """Steps 1-3: dispatch + quorum collection."""
+        base_tokens = self.tok.encode(query_text, max_len=24)
+        responses = []
+        t0 = time.monotonic()
+        for p in self.select_providers(query_text):
+            if self.deadline_s is not None and time.monotonic() - t0 > self.deadline_s:
+                break  # deadline: proceed with what we have (k_n <= k)
+            q_tokens = base_tokens
+            if self.rewriter is not None:  # personalized expansion (§2.2)
+                q_tokens = self.rewriter.rewrite(base_tokens, p.provider_id)
+            try:
+                ch = getattr(p, "_orch_channel")
+                nonce, sealed = ch.seal(pack({"query_tokens": q_tokens, "m": np.int64(self.m_local)}))
+                r_nonce, r_sealed = p.handle_request(nonce, sealed)
+                responses.append(unpack(ch.open(r_nonce, r_sealed)))
+            except (ConnectionError, TimeoutError):
+                continue  # straggler/failed provider: tolerated by quorum
+        if len(responses) < self.quorum:
+            raise RuntimeError(
+                f"quorum not met: {len(responses)}/{self.quorum} providers answered"
+            )
+        return responses
+
+    def aggregate(self, query_text: str, responses: list[dict]) -> dict:
+        """Step 4: in-enclave context aggregation (global re-rank)."""
+        all_tokens = np.concatenate([r["chunk_tokens"] for r in responses], 0)
+        all_ids = np.concatenate([r["chunk_ids"] for r in responses], 0)
+        all_scores = np.concatenate([r["scores"] for r in responses], 0)
+        providers = np.concatenate(
+            [np.full(len(r["chunk_ids"]), int(r["provider"])) for r in responses]
+        )
+        if self.aggregation == "rerank" and self.reranker is not None:
+            q_tokens = self.tok.encode(query_text, max_len=24)
+            rank_scores = np.asarray(self.reranker(q_tokens, all_tokens))
+        else:
+            rank_scores = all_scores
+        n = min(self.n_global, len(all_ids))
+        order = np.argsort(-rank_scores)[:n]
+        return {
+            "chunk_tokens": all_tokens[order],
+            "chunk_ids": all_ids[order],
+            "scores": rank_scores[order],
+            "providers": providers[order],
+            "n_candidates": len(all_ids),
+        }
+
+    def build_prompt(self, query_text: str, context: dict, max_len: int = 512) -> np.ndarray:
+        """[BOS] CTX chunk1 SEP chunk2 ... QRY query ANS"""
+        ids = [BOS, CTX]
+        for row in context["chunk_tokens"]:
+            ids += [int(t) for t in row if t not in (PAD, BOS, EOS)]
+            ids.append(SEP)
+        ids.append(QRY)
+        ids += [int(t) for t in self.tok.encode(query_text, bos=False) if t not in (PAD, EOS)]
+        ids.append(ANS)
+        ids = ids[-max_len:]
+        return np.asarray(ids, np.int32)[None, :]
+
+    def answer(self, query_text: str) -> dict:
+        responses = self.collect_contexts(query_text)
+        context = self.aggregate(query_text, responses)
+        out = {
+            "context": context,
+            "n_providers": len(responses),
+        }
+        if self.generator is not None:
+            prompt = self.build_prompt(query_text, context)
+            out["answer_tokens"] = np.asarray(self.generator(prompt))[0]
+            out["prompt"] = prompt
+        return out

@@ -1,0 +1,126 @@
+"""CFedRAGSystem — end-to-end wiring of Algorithm 1.
+
+Builds providers from a FederatedCorpus (paper topology: 2 sites x 2
+corpora), an in-enclave orchestrator with the chosen aggregation model,
+and model-backed reranker/generator callables.  Used by the Table 1
+benchmark, the examples, and the integration tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.filters import MaxChunksFilter, ProvenanceStripFilter
+from repro.core.orchestrator import Orchestrator
+from repro.core.provider import DataProvider
+from repro.data.corpus import FederatedCorpus
+from repro.data.embeddings import bag_embed
+from repro.data.tokenizer import HashTokenizer
+
+
+@dataclasses.dataclass
+class CFedRAGConfig:
+    m_local: int = 8  # paper §3.2: top-8 per site
+    n_global: int = 8  # paper §3.3: final context window of 8
+    aggregation: str = "rerank"
+    split_by: str = "site"  # site (paper: 2 providers) | corpus (4 providers)
+    embed_dim: int = 256
+    chunk_max_len: int = 40
+    quorum: int = 1
+    use_pallas: bool = False
+
+
+class CFedRAGSystem:
+    def __init__(
+        self,
+        corpus: FederatedCorpus,
+        cfg: CFedRAGConfig | None = None,
+        tokenizer: HashTokenizer | None = None,
+        embed_fn: Callable | None = None,
+        reranker: Callable | None = None,
+        generator: Callable | None = None,
+    ):
+        self.cfg = cfg or CFedRAGConfig()
+        self.corpus = corpus
+        self.tok = tokenizer or HashTokenizer()
+        self.embed_fn = embed_fn or (
+            lambda toks: bag_embed(jnp.asarray(toks), dim=self.cfg.embed_dim)
+        )
+        groups: dict[object, list] = {}
+        for c in corpus.chunks:
+            key = c.site if self.cfg.split_by == "site" else c.corpus
+            groups.setdefault(key, []).append(c)
+        self.providers = [
+            DataProvider(
+                provider_id=i,
+                chunks=chunks,
+                embed_fn=self.embed_fn,
+                tokenizer=self.tok,
+                chunk_max_len=self.cfg.chunk_max_len,
+                filters=[MaxChunksFilter(self.cfg.m_local), ProvenanceStripFilter()],
+                use_pallas=self.cfg.use_pallas,
+            )
+            for i, (_, chunks) in enumerate(sorted(groups.items(), key=lambda kv: str(kv[0])))
+        ]
+        for p in self.providers:
+            p.build_index()
+        self.orchestrator = Orchestrator(
+            self.providers,
+            self.tok,
+            aggregation=self.cfg.aggregation,
+            reranker=reranker,
+            generator=generator,
+            m_local=self.cfg.m_local,
+            n_global=self.cfg.n_global,
+            quorum=self.cfg.quorum,
+        )
+
+    # ---- evaluation (Table 1 protocol on synthetic provenance) ----
+    def eval_retrieval(self, n_queries: int | None = None) -> dict:
+        """recall@n of the gold chunk in the final context window."""
+        queries = self.corpus.queries[:n_queries] if n_queries else self.corpus.queries
+        hits = 0
+        per_corpus: dict = {}
+        mrr = 0.0
+        for q in queries:
+            res = self.orchestrator.answer(q.text)
+            ids = list(res["context"]["chunk_ids"])
+            hit = q.gold_chunk_id in ids
+            hits += hit
+            if hit:
+                mrr += 1.0 / (ids.index(q.gold_chunk_id) + 1)
+            stats = per_corpus.setdefault(q.corpus, [0, 0])
+            stats[0] += hit
+            stats[1] += 1
+        n = len(queries)
+        return {
+            "recall_at_n": hits / n,
+            "mrr": mrr / n,
+            "n_queries": n,
+            "per_corpus": {c: h / t for c, (h, t) in per_corpus.items()},
+        }
+
+
+def single_silo_system(corpus: FederatedCorpus, corpus_name: str, cfg: CFedRAGConfig | None = None, **kw):
+    """Vanilla-RAG baseline on one corpus only (Table 1 MedRag(X) rows)."""
+    sub = FederatedCorpus(
+        chunks=corpus.corpus_chunks(corpus_name), queries=corpus.queries
+    )
+    c = dataclasses.replace(cfg or CFedRAGConfig(), split_by="corpus", aggregation="embedding_rank")
+    return CFedRAGSystem(sub, c, **kw)
+
+
+def centralized_system(corpus: FederatedCorpus, cfg: CFedRAGConfig | None = None, **kw):
+    """Centralized MedRag(MedCorp) baseline: all corpora in one index."""
+    c = dataclasses.replace(cfg or CFedRAGConfig(), split_by="none_all")
+    # split_by key constant -> single provider holding everything
+    c = dataclasses.replace(c, split_by="site")
+    merged = FederatedCorpus(
+        chunks=[dataclasses.replace(ch, site=0) for ch in corpus.chunks],
+        queries=corpus.queries,
+    )
+    return CFedRAGSystem(merged, c, **kw)

@@ -1,0 +1,107 @@
+"""Data provider (paper §2.3.4): standardized retrieval API behind an
+attested channel.
+
+Each provider owns its corpus shard, vectorizes it once with its embedding
+model of choice (off-the-shelf bag embedder or an FL-trained dual
+encoder), and answers ``retrieve`` requests with its local top-m — raw
+chunks never leave except as filtered, AEAD-sealed responses to an
+attested orchestrator.  Providers never talk to each other and never
+receive inbound connections except via the orchestrator channel (paper
+§4.1).
+"""
+from __future__ import annotations
+
+import io
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.confidential import Enclave, SecureChannel
+from repro.core.filters import Filter, apply_filters
+from repro.data.corpus import Chunk
+from repro.data.tokenizer import HashTokenizer
+from repro.kernels.retrieval_topk.ops import retrieval_topk
+
+
+def pack(payload: dict) -> bytes:
+    buf = io.BytesIO()
+    np.savez(buf, **payload)
+    return buf.getvalue()
+
+
+def unpack(raw: bytes) -> dict:
+    with np.load(io.BytesIO(raw), allow_pickle=False) as z:
+        return {k: z[k] for k in z.files}
+
+
+class DataProvider:
+    def __init__(
+        self,
+        provider_id: int,
+        chunks: Sequence[Chunk],
+        embed_fn: Callable,  # (tokens (N,S) int32) -> (N,D) f32 unit-norm
+        tokenizer: HashTokenizer,
+        chunk_max_len: int = 40,
+        filters: list[Filter] | None = None,
+        use_pallas: bool = False,
+        fail: bool = False,
+        delay_s: float = 0.0,
+    ):
+        self.provider_id = provider_id
+        self.chunks = list(chunks)
+        self.embed_fn = embed_fn
+        self.tok = tokenizer
+        self.filters = filters or []
+        self.use_pallas = use_pallas
+        self.fail = fail
+        self.delay_s = delay_s
+        self.enclave = Enclave(f"cfedrag-provider-v1:{provider_id}")
+        self.chunk_tokens = np.stack(
+            [tokenizer.encode(c.text, max_len=chunk_max_len) for c in self.chunks]
+        )
+        self.embeddings: np.ndarray | None = None
+        self.channel: SecureChannel | None = None
+
+    # ---- lifecycle ----
+    def build_index(self, batch: int = 512):
+        outs = []
+        for i in range(0, len(self.chunk_tokens), batch):
+            outs.append(np.asarray(self.embed_fn(self.chunk_tokens[i : i + batch])))
+        self.embeddings = np.concatenate(outs, 0)
+
+    def list_products(self) -> dict:
+        corpora = sorted({c.corpus for c in self.chunks})
+        return {
+            "provider": self.provider_id,
+            "products": corpora,
+            "n_chunks": len(self.chunks),
+        }
+
+    # ---- retrieval API (sealed request/response) ----
+    def handle_request(self, nonce: bytes, sealed: bytes) -> tuple[bytes, bytes]:
+        """Sealed {query_tokens, m} -> sealed {scores, chunk_ids, chunk_tokens}."""
+        if self.fail:
+            raise ConnectionError(f"provider {self.provider_id} down")
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        assert self.channel is not None, "no established channel"
+        req = unpack(self.channel.open(nonce, sealed))
+        out = self.retrieve(req["query_tokens"], int(req["m"]))
+        return self.channel.seal(pack(out))
+
+    def retrieve(self, query_tokens: np.ndarray, m: int) -> dict:
+        assert self.embeddings is not None, "index not built"
+        q_emb = np.asarray(self.embed_fn(query_tokens[None, :]))
+        m_eff = min(m, len(self.chunks))
+        scores, idx = retrieval_topk(
+            q_emb, self.embeddings, m_eff, use_pallas=self.use_pallas
+        )
+        idx = np.asarray(idx[0])
+        payload = {
+            "provider": np.int32(self.provider_id),
+            "scores": np.asarray(scores[0]),
+            "chunk_ids": np.asarray([self.chunks[i].chunk_id for i in idx], np.int64),
+            "chunk_tokens": self.chunk_tokens[idx],
+        }
+        return apply_filters(self.filters, payload)

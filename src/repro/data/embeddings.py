@@ -1,0 +1,30 @@
+"""Training-free bag-of-words hash embedder.
+
+Deterministic per-token Gaussian vectors (PRNG keyed by token id), mean-
+pooled and L2-normalized: lexical-overlap similarity.  Serves as (a) the
+"off-the-shelf embedding model" baseline the paper contrasts with
+FL-trained embedders and (b) a fast oracle for retrieval tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.tokenizer import PAD
+
+
+@functools.partial(jax.jit, static_argnames=("dim", "seed"))
+def bag_embed(tokens: jax.Array, dim: int = 256, seed: int = 17):
+    """tokens: (N, S) int32 -> (N, dim) f32, unit norm."""
+    table_key = jax.random.PRNGKey(seed)
+    # per-token embedding generated on the fly from the token id
+    def tok_vec(tid):
+        k = jax.random.fold_in(table_key, tid)
+        return jax.random.normal(k, (dim,), jnp.float32)
+
+    vecs = jax.vmap(jax.vmap(tok_vec))(tokens)  # (N,S,dim)
+    mask = (tokens != PAD).astype(jnp.float32)[..., None]
+    pooled = (vecs * mask).sum(1) / jnp.maximum(mask.sum(1), 1.0)
+    return pooled / jnp.maximum(jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-9)

@@ -1,0 +1,19 @@
+"""Jitted public wrapper for flash-decode."""
+import functools
+
+import jax
+
+from repro.kernels.decode_attention.kernel import (
+    combine_partials,
+    decode_attention_pallas,
+)
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def decode_attention(q, k_cache, v_cache, lengths, use_pallas: bool = False):
+    if use_pallas:
+        return decode_attention_pallas(
+            q, k_cache, v_cache, lengths, interpret=jax.default_backend() != "tpu"
+        )
+    return decode_attention_ref(q, k_cache, v_cache, lengths)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for flash-decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    b, h, dh = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    qr = q.astype(jnp.float32).reshape(b, kv, h // kv, dh)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache.astype(jnp.float32))
+    logits = logits / np.sqrt(dh)
+    valid = jnp.arange(s)[None, None, None, :] < lengths[:, None, None, None]
+    logits = jnp.where(valid, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, dh).astype(q.dtype)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for flash attention (GQA, causal)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    qr = q.astype(jnp.float32).reshape(b, sq, kv, h // kv, dh)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qr, k.astype(jnp.float32))
+    logits = logits / np.sqrt(dh)
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(k.shape[1])[None, :]
+        logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, dh).astype(q.dtype)

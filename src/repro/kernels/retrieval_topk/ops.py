@@ -1,0 +1,17 @@
+"""Jitted public wrapper: picks the Pallas kernel on TPU, the jnp oracle
+elsewhere (CPU dry-runs / tests use interpret mode explicitly)."""
+import functools
+
+import jax
+
+from repro.kernels.retrieval_topk.kernel import retrieval_topk_pallas
+from repro.kernels.retrieval_topk.ref import retrieval_topk_ref
+
+
+@functools.partial(jax.jit, static_argnames=("k", "use_pallas"))
+def retrieval_topk(queries, corpus, k: int, use_pallas: bool = False):
+    if use_pallas:
+        return retrieval_topk_pallas(
+            queries, corpus, k, interpret=jax.default_backend() != "tpu"
+        )
+    return retrieval_topk_ref(queries, corpus, k)

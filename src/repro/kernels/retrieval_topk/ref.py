@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for retrieval_topk."""
+import jax
+import jax.numpy as jnp
+
+
+def retrieval_topk_ref(queries, corpus, k):
+    scores = queries.astype(jnp.float32) @ corpus.astype(jnp.float32).T
+    s, i = jax.lax.top_k(scores, k)
+    return s, i.astype(jnp.int32)

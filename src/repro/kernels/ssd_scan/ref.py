@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(x, b, c, dt, a):
+    xf = x.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    da = dt * a[None, None, :]  # (B,L,H)
+    cum = jnp.cumsum(da, axis=1)
+    cum_h = cum.transpose(0, 2, 1)  # (B,H,L)
+    cb = jnp.einsum("bihs,bjhs->bhij", cf, bf)
+    l = x.shape[1]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    decay = jnp.exp(jnp.where(mask, cum_h[:, :, :, None] - cum_h[:, :, None, :], -1e30))
+    scores = cb * decay * dt.transpose(0, 2, 1)[:, :, None, :]
+    y = jnp.einsum("bhij,bjhp->bihp", scores, xf)
+    wgt = jnp.exp(cum[:, -1:, :] - cum) * dt
+    st = jnp.einsum("bjh,bjhs,bjhp->bhps", wgt, bf, xf)
+    dec = jnp.exp(cum[:, -1, :])
+    return y, st, dec

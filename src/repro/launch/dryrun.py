@@ -1,0 +1,304 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell,
+prove the sharding config is coherent, and extract the roofline terms.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun.json
+
+The dry-run lowers the PURE-JNP model path (kernels are opaque custom
+calls to XLA cost analysis — DESIGN.md §4 kernel policy) with the same
+shardings as production.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import SHAPES, all_configs, applicable, get_config  # noqa: E402
+from repro.launch.inputs import cache_specs, input_specs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import (  # noqa: E402
+    Roofline,
+    model_flops_for,
+    parse_collective_bytes,
+    parse_convert_bytes,
+    parse_dus_bytes,
+    ssd_correction,
+)
+from repro.models import encoder as ENC  # noqa: E402
+from repro.models import lm as LM  # noqa: E402
+from repro.models.params import abstract_params, make_pspecs  # noqa: E402
+from repro.optim.optimizers import get_optimizer  # noqa: E402
+from repro.runtime.sharding import make_policy  # noqa: E402
+from repro.runtime.steps import make_decode_step, make_prefill_step, make_train_step  # noqa: E402
+
+
+def _attach(tree_abs, tree_pspec, mesh):
+    from jax.sharding import NamedSharding
+
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=NamedSharding(mesh, s)),
+        tree_abs,
+        tree_pspec,
+    )
+
+
+def _opt_pspecs(opt_name: str, specs, rules, axis_sizes):
+    """Optimizer-state PartitionSpecs derived from the param logical axes."""
+    from repro.models.params import ParamSpec, spec_to_pspec
+
+    def p_spec(s):
+        return spec_to_pspec(s, rules, axis_sizes)
+
+    def drop_last(s):
+        return spec_to_pspec(ParamSpec(s.shape[:-1], s.axes[:-1], s.init), rules, axis_sizes)
+
+    def drop_2nd_last(s):
+        return spec_to_pspec(
+            ParamSpec(s.shape[:-2] + s.shape[-1:], s.axes[:-2] + s.axes[-1:], s.init),
+            rules,
+            axis_sizes,
+        )
+
+    from jax.sharding import PartitionSpec as P
+
+    is_spec = lambda x: isinstance(x, ParamSpec)
+    if opt_name == "adamw":
+        return {
+            "mu": jax.tree.map(p_spec, specs, is_leaf=is_spec),
+            "nu": jax.tree.map(p_spec, specs, is_leaf=is_spec),
+            "count": P(),
+        }
+    if opt_name == "adafactor":
+        def fac(s):
+            if s.ndim >= 2 and s.shape[-1] >= 128 and s.shape[-2] >= 128:
+                return {"vr": drop_last(s), "vc": drop_2nd_last(s)}
+            return {"v": p_spec(s)}
+
+        class _NS:  # tiny shim so tree.map sees ParamSpec leaves
+            pass
+
+        return {
+            "v": jax.tree.map(fac, specs, is_leaf=is_spec),
+            "count": P(),
+        }
+    raise ValueError(opt_name)
+
+
+def _lower_cell(cfg, shape, mesh, pol, opt_name, decode_donate=False, grad_rs=False):
+    """lower+compile one step for one cfg; returns compiled."""
+    specs_fn = ENC.param_specs if cfg.family == "encoder" else LM.param_specs
+    specs = specs_fn(cfg)
+    axis_sizes = dict(mesh.shape)
+    pspecs = make_pspecs(specs, pol.rules, axis_sizes)
+    params_abs = _attach(abstract_params(specs), pspecs, mesh)
+    batch_abs = input_specs(cfg, shape, pol)
+    with mesh:
+        if shape.kind == "train":
+            opt = get_optimizer(opt_name)
+            opt_abs = jax.eval_shape(opt.init, params_abs)
+            opt_abs = _attach(opt_abs, _opt_pspecs(opt_name, specs, pol.rules, axis_sizes), mesh)
+            step_fn = make_train_step(cfg, pol, opt, grad_pspecs=pspecs if grad_rs else None)
+            lowered = jax.jit(step_fn).lower(
+                params_abs, opt_abs, batch_abs, jax.ShapeDtypeStruct((), jnp.int32)
+            )
+        elif shape.kind == "prefill":
+            step_fn = make_prefill_step(cfg, pol)
+            lowered = jax.jit(step_fn).lower(params_abs, batch_abs)
+        else:  # decode
+            cache_abs = cache_specs(cfg, shape, pol)
+            step_fn = make_decode_step(cfg, pol)
+            # donate_argnums=(1,) aliases the KV cache update in place —
+            # the production serving configuration (no copy-on-write)
+            jitted = jax.jit(step_fn, donate_argnums=(1,) if decode_donate else ())
+            lowered = jitted.lower(
+                params_abs, cache_abs, batch_abs["tokens"], jax.ShapeDtypeStruct((), jnp.int32)
+            )
+        return lowered.compile()
+
+
+def _measure(compiled, n_chips):
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = parse_collective_bytes(hlo)
+    raw = float(cost.get("bytes accessed", 0.0))
+    conv = float(parse_convert_bytes(hlo))
+    return {
+        "flops": float(cost.get("flops", 0.0)) * n_chips,
+        # corrected: standalone converts fuse away on TPU (roofline.py)
+        "bytes": max(raw - conv, raw * 0.25) * n_chips,
+        "bytes_raw": raw * n_chips,
+        "dus_bytes": float(parse_dus_bytes(hlo)) * n_chips,
+        "coll": float(sum(v for k, v in coll.items() if k != "collective_count")) * n_chips,
+        "detail": coll,
+    }
+
+
+def dryrun_cell(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str,
+    opt_name: str | None = None,
+    verbose: bool = True,
+    measure: bool = True,
+    cfg_overrides: dict | None = None,
+    rules_patch: dict | None = None,
+    decode_donate: bool = False,
+    grad_rs: bool = False,
+):
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.with_overrides(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "status": "skip", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+    pol = make_policy(
+        mesh,
+        multi_pod=(mesh_kind == "multi"),
+        shape_kind=shape.kind,
+        global_batch=shape.global_batch,
+        seq_len=shape.seq_len,
+        long_context=shape.name == "long_500k",
+    )
+    if rules_patch:
+        pol.rules.update(rules_patch)
+    # big models need the factored optimizer to fit (DESIGN.md §4)
+    if opt_name is None:
+        big = cfg.param_count(False) + cfg.embedding_params() > 20e9
+        opt_name = "adafactor" if big else "adamw"
+
+    # 1) FULL rolled-scan compile: proves the sharding config + memory analysis
+    t0 = time.monotonic()
+    compiled = _lower_cell(cfg, shape, mesh, pol, opt_name, decode_donate, grad_rs)
+    compile_s = time.monotonic() - t0
+    mem = compiled.memory_analysis()
+
+    # 2) cost measurement: XLA cost_analysis counts while-loop bodies ONCE, so
+    # the rolled numbers undercount the layer scan.  Compile unrolled 1-block
+    # and 2-block variants; body = m2 - m1, outside = m1 - body;
+    # total = outside + n_blocks * body (scan blocks are homogeneous).
+    period = cfg.scan_period
+    if measure:
+        # raise the flash chunk so the unrolled inner scan stays small
+        # (<=8 steps); total attention flops/bytes are chunk-invariant.
+        meas_chunk = max(cfg.attn_chunk, shape.seq_len // 8)
+        cfg1 = cfg.with_overrides(n_layers=period, scan_unroll=True, attn_chunk=meas_chunk)
+        cfg2 = cfg.with_overrides(n_layers=2 * period, scan_unroll=True, attn_chunk=meas_chunk)
+        m1 = _measure(_lower_cell(cfg1, shape, mesh, pol, opt_name, decode_donate, grad_rs), n_chips)
+        m2 = _measure(_lower_cell(cfg2, shape, mesh, pol, opt_name, decode_donate, grad_rs), n_chips)
+        keys = ("flops", "bytes", "bytes_raw", "dus_bytes", "coll")
+        body = {k: m2[k] - m1[k] for k in keys}
+        totals = {k: max(m1[k] - body[k], 0.0) + cfg.n_blocks * body[k] for k in keys}
+        ssd = ssd_correction(cfg, shape)  # rolled SSD chunks (see roofline.py)
+        totals["flops"] += ssd["flops"]
+        totals["bytes"] += ssd["bytes"]
+        coll_detail = {
+            k: (m2["detail"][k] - m1["detail"][k]) * cfg.n_blocks
+            + max(2 * m1["detail"][k] - m2["detail"][k], 0)
+            for k in m1["detail"]
+        }
+    else:
+        m = _measure(compiled, n_chips)
+        totals = {k: m[k] for k in ("flops", "bytes", "bytes_raw", "dus_bytes", "coll")}
+        coll_detail = m["detail"]
+
+    rl = Roofline(
+        arch=arch,
+        shape=shape_name,
+        mesh=mesh_kind,
+        n_chips=n_chips,
+        hlo_flops=totals["flops"],
+        hlo_bytes=totals["bytes"],
+        collective_bytes=totals["coll"],
+        collective_detail=coll_detail,
+        model_flops=model_flops_for(cfg, shape),
+        memory_per_device=int(getattr(mem, "temp_size_in_bytes", 0) + getattr(mem, "argument_size_in_bytes", 0)),
+    )
+    out = {
+        "status": "ok",
+        "compile_s": compile_s,
+        "bytes_raw": totals.get("bytes_raw", totals["bytes"]),
+        "dus_bytes": totals.get("dus_bytes", 0.0),
+        "opt": opt_name if shape.kind == "train" else None,
+        "memory_analysis": {
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "peak_bytes_per_device": int(
+                getattr(mem, "temp_size_in_bytes", 0) + getattr(mem, "argument_size_in_bytes", 0)
+            ),
+        },
+        **rl.to_dict(),
+    }
+    if verbose:
+        print(
+            f"[{arch} x {shape_name} x {mesh_kind}] compile={compile_s:.1f}s "
+            f"flops={out['hlo_flops']:.3e} bytes={out['hlo_bytes']:.3e} "
+            f"coll={out['collective_bytes']:.3e} dominant={out['dominant']} "
+            f"bound={out['step_bound_s']*1e3:.2f}ms mfu_bound={out['mfu_bound']:.3f} "
+            f"useful={out['useful_flops_frac']:.2f} "
+            f"mem/dev={out['memory_analysis']['peak_bytes_per_device']/2**30:.2f}GiB"
+        )
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true", help="all assigned (arch x shape) cells")
+    ap.add_argument("--opt", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        from repro.configs import ASSIGNED_ARCHS
+
+        cells = [(a, s) for a in ASSIGNED_ARCHS for s in SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    for arch, shape in cells:
+        for mk in meshes:
+            try:
+                # roofline measurement is single-pod (the table's scope);
+                # multi-pod cells prove compile + record memory analysis.
+                results.append(
+                    dryrun_cell(arch, shape, mk, args.opt, measure=(mk == "single"))
+                )
+            except Exception as e:  # a failing cell is a bug: record it loudly
+                traceback.print_exc()
+                results.append(
+                    {"arch": arch, "shape": shape, "mesh": mk, "status": "FAIL", "error": str(e)[:500]}
+                )
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1, default=str)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"\ndone: {n_ok} ok, {n_skip} documented skips, {n_fail} FAILURES")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,102 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""§Perf hillclimbing on the three selected cells (EXPERIMENTS.md §Perf).
+
+Each iteration is an explicit hypothesis -> change -> re-lower -> validate
+cycle; every run is a full dryrun_cell with the lever applied, so the
+before/after numbers come from the same measurement pipeline as the
+baseline table.
+
+  cell A  qwen3-4b x decode_32k   (serving path; paper's F_inf decode)
+  cell B  qwen2-moe-a2.7b x train_4k  (most collective-bound: MoE EP)
+  cell C  smollm-360m x train_4k  (worst roofline fraction: unshardeable TP)
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+
+from repro.launch.dryrun import dryrun_cell  # noqa: E402
+
+PURE_DP_PATCH = {
+    # small models whose heads don't divide TP: use the model axis as extra
+    # data parallelism (DDP, replicated weights) instead of wasting it.
+    "act_batch": ("data", "model"),
+    "embed": None, "heads": None, "kv_heads": None, "mlp": None,
+    "vocab": ("data", "model"),
+    "act_heads": None, "act_kv_heads": None, "act_ff": None, "act_vocab": None,
+    "dt": None, "ssm_heads": None, "experts": None, "expert_in": None,
+    "cache_batch": ("data", "model"), "cache_kv": None,
+}
+
+
+def run_cell(tag, **kw):
+    r = dryrun_cell(**kw)
+    r["tag"] = tag
+    keep = (
+        "tag arch shape mesh status compute_s memory_s collective_s dominant "
+        "step_bound_s useful_flops_frac mfu_bound bytes_raw dus_bytes "
+        "hlo_flops hlo_bytes collective_bytes collective_detail".split()
+    )
+    slim = {k: r.get(k) for k in keep}
+    slim["mem_per_dev_gib"] = r["memory_analysis"]["peak_bytes_per_device"] / 2**30 if r["status"] == "ok" else None
+    return slim
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=["A", "B", "C"])
+    ap.add_argument("--out", required=True)
+    args = ap.parse_args()
+    runs = []
+
+    if args.cell == "A":
+        # baseline
+        runs.append(run_cell("A0-baseline", arch="qwen3-4b", shape_name="decode_32k", mesh_kind="single"))
+        # A1: kv-head replication 8 -> 16 (math-identical weight duplication;
+        # hypothesis: cache + K/V reads stop being replicated over model=16,
+        # memory term / ~8, cache mem/dev / ~8 at 2x logical cache)
+        runs.append(run_cell("A1-kv-replicate-16", arch="qwen3-4b", shape_name="decode_32k",
+                             mesh_kind="single", cfg_overrides={"n_kv_heads": 16}))
+        # A2: + donate cache (in-place KV update; hypothesis: removes the
+        # dus copy-on-write — dus_bytes drop out of the memory term)
+        runs.append(run_cell("A2-kv16+donate", arch="qwen3-4b", shape_name="decode_32k",
+                             mesh_kind="single", cfg_overrides={"n_kv_heads": 16},
+                             decode_donate=True))
+    elif args.cell == "B":
+        runs.append(run_cell("B0-baseline", arch="qwen2-moe-a2.7b", shape_name="train_4k", mesh_kind="single"))
+        # B1: all-to-all EP (hypothesis: psum moves 2xT_loc x d per direction
+        # over model; a2a moves only the routed tokens cap*tp*d ~ k*slack/tp
+        # of that -> collective term drops several x)
+        runs.append(run_cell("B1-a2a-EP", arch="qwen2-moe-a2.7b", shape_name="train_4k",
+                             mesh_kind="single", cfg_overrides={"moe_impl": "a2a"}))
+        # B2: a2a + tighter capacity (slack 1.5 -> 1.25: buffer + flops trim)
+        runs.append(run_cell("B2-a2a+slack1.25", arch="qwen2-moe-a2.7b", shape_name="train_4k",
+                             mesh_kind="single",
+                             cfg_overrides={"moe_impl": "a2a", "capacity_slack": 1.25}))
+    else:
+        runs.append(run_cell("C0-baseline", arch="smollm-360m", shape_name="train_4k", mesh_kind="single"))
+        # C1: pure-DP resharding (hypothesis: 15 heads / 5 kv can't use TP;
+        # batch over (data x model) removes the 16x redundant compute ->
+        # compute & memory terms / ~16; grads all-reduce over 256 instead
+        # of 16 adds collective bytes)
+        runs.append(run_cell("C1-pure-DP", arch="smollm-360m", shape_name="train_4k",
+                             mesh_kind="single", rules_patch=PURE_DP_PATCH))
+    with open(args.out, "w") as f:
+        json.dump(runs, f, indent=1, default=str)
+    for r in runs:
+        if r["status"] != "ok":
+            print(r["tag"], r["status"])
+            continue
+        print(
+            f"{r['tag']:22s} compute={r['compute_s']*1e3:9.2f}ms memory={r['memory_s']*1e3:9.2f}ms "
+            f"coll={r['collective_s']*1e3:8.2f}ms bound={r['step_bound_s']*1e3:9.2f}ms "
+            f"dominant={r['dominant']:10s} mfu={r['mfu_bound']:.4f} mem/dev={r['mem_per_dev_gib']:.1f}GiB"
+        )
+
+
+if __name__ == "__main__":
+    main()

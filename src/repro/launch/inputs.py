@@ -1,0 +1,90 @@
+"""ShapeDtypeStruct input stand-ins per (arch x shape) cell — shardable,
+weak-type-correct, zero allocation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import lm as LM
+from repro.runtime.sharding import ShardingPolicy
+
+
+def _sds(shape, dtype, pol: ShardingPolicy, *axes):
+    sharding = None
+    if pol.mesh is not None:
+        sharding = NamedSharding(pol.mesh, pol.spec(*axes, shape=shape))
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _filter_pspec(pspec, shape, sizes):
+    """Drop mesh axes that don't divide the dim (NamedSharding divisibility)."""
+    from jax.sharding import PartitionSpec as P
+
+    entries = []
+    for d, e in enumerate(pspec):
+        if e is None:
+            entries.append(None)
+            continue
+        cand = (e,) if isinstance(e, str) else tuple(e)
+        keep, fac = [], 1
+        for a in cand:
+            sz = sizes.get(a, 1)
+            if shape[d] % (fac * sz) == 0:
+                keep.append(a)
+                fac *= sz
+        entries.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    entries += [None] * (len(shape) - len(entries))
+    return P(*entries)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, pol: ShardingPolicy) -> dict:
+    """Batch pytree of ShapeDtypeStructs for the step kind."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.family == "encoder":
+            return {
+                "frames": _sds((b, s, cfg.d_model), jnp.bfloat16, pol, "act_batch", "act_seq", "act_embed"),
+                "mask": _sds((b, s), jnp.bool_, pol, "act_batch", "act_seq"),
+                "targets": _sds((b, s), jnp.int32, pol, "act_batch", "act_seq"),
+            }
+        batch = {
+            "tokens": _sds((b, s), jnp.int32, pol, "act_batch", "act_seq"),
+            "targets": _sds((b, s), jnp.int32, pol, "act_batch", "act_seq"),
+        }
+        if cfg.frontend == "patches":
+            batch["patch_embeds"] = _sds(
+                (b, cfg.n_patches, cfg.d_model), jnp.bfloat16, pol, "act_batch", None, "act_embed"
+            )
+        return batch
+    if shape.kind == "prefill":
+        if cfg.family == "encoder":
+            return {"frames": _sds((b, s, cfg.d_model), jnp.bfloat16, pol, "act_batch", "act_seq", "act_embed")}
+        batch = {"tokens": _sds((b, s), jnp.int32, pol, "act_batch", "act_seq")}
+        if cfg.frontend == "patches":
+            batch["patch_embeds"] = _sds(
+                (b, cfg.n_patches, cfg.d_model), jnp.bfloat16, pol, "act_batch", None, "act_embed"
+            )
+        return batch
+    # decode: one new token against a seq_len cache
+    return {"tokens": _sds((b, 1), jnp.int32, pol, "act_batch", None)}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig, pol: ShardingPolicy):
+    """Abstract decode cache with its shardings."""
+    abstract = LM.init_cache(
+        cfg, shape.global_batch, shape.seq_len, dtype=jnp.bfloat16, abstract=True
+    )
+    pspecs = LM.cache_pspecs(cfg, pol)
+    if pol.mesh is None:
+        return abstract
+    sizes = dict(pol.mesh.shape)
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(
+            a.shape, a.dtype,
+            sharding=NamedSharding(pol.mesh, _filter_pspec(s, a.shape, sizes)),
+        ),
+        abstract,
+        pspecs,
+    )

@@ -1,0 +1,258 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute  = HLO_FLOPs   / (chips * 197 TFLOP/s bf16)
+memory   = HLO_bytes   / (chips * 819 GB/s HBM)
+collect. = coll_bytes  / (chips * 49.5 GB/s ICI)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``.  Collective
+bytes are NOT in cost_analysis: we parse the (SPMD-partitioned, per-
+device) HLO and sum OPERAND sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, then multiply by the
+device count to get the global number (cost_analysis flops are likewise
+per-device-module x n_devices handled in ``normalize``; empirically
+jax cost_analysis on a sharded module reports per-device numbers).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(.*)$")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_convert_bytes(hlo_text: str) -> int:
+    """Total (input+output) bytes of standalone `convert` instructions.
+
+    The CPU backend materializes bf16<->f32 converts around every dot
+    (bf16 matmuls are emulated); on TPU these converts either don't exist
+    (native bf16 MXU operands) or fuse into the producer/consumer fusion
+    (no extra HBM pass).  The roofline memory term subtracts them:
+    corrected = measured - convert_in_out_bytes.  Raw and corrected are
+    both reported in EXPERIMENTS.md."""
+    total = 0
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*\bconvert\(", line)
+        if not m:
+            continue
+        out_dt, dims = m.group(1), m.group(2)
+        if out_dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(",") if dims else []:
+            n *= int(d)
+        in_bytes = n * (2 if out_dt == "f32" else 4)  # partner dtype approx
+        total += n * _DTYPE_BYTES[out_dt] + in_bytes
+    return total
+
+
+def parse_dus_bytes(hlo_text: str) -> int:
+    """Bytes written by dynamic-update-slice ops on large buffers — the
+    KV-cache copy-on-write cost that buffer DONATION removes in serving."""
+    total = 0
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*([a-z0-9]+)\[([0-9,]*)\][^=]*\bdynamic-update-slice", line)
+        if not m:
+            continue
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(",") if dims else []:
+            n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind OPERAND bytes from (per-device) HLO text."""
+    # index: instruction name -> result bytes
+    sizes: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1).lstrip("%"), m.group(2)
+        # result type = everything before the op name token; cheap approx:
+        # take the type prefix up to the first " op(" occurrence
+        op_split = re.split(r"\s[a-z0-9\-]+\(", rest, maxsplit=1)
+        sizes[name] = _type_bytes(op_split[0])
+
+    out = {k: 0 for k in COLLECTIVES}
+    out["collective_count"] = 0
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        rest = m.group(2)
+        opm = re.search(r"\s((?:all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(?:-start)?)\(([^)]*)\)", rest)
+        if not opm:
+            continue
+        kind = opm.group(1).replace("-start", "")
+        operands = [o.strip().lstrip("%") for o in opm.group(2).split(",")]
+        b = 0
+        for o in operands:
+            o = o.split(" ")[0]
+            if o in sizes:
+                b += sizes[o]
+            else:
+                # inline-typed operand, e.g. "bf16[8,128]{1,0} %x"
+                b += _type_bytes(o)
+        out[kind] += b
+        out["collective_count"] += 1
+    return out
+
+
+# ---------------- hardware model (TPU v5e) ----------------
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 49.5e9  # B/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    hlo_flops: float  # global
+    hlo_bytes: float  # global
+    collective_bytes: float  # global
+    collective_detail: dict
+    model_flops: float
+    memory_per_device: int  # peak from memory_analysis
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / (self.n_chips * PEAK_FLOPS)
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / (self.n_chips * HBM_BW)
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / (self.n_chips * ICI_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+    @property
+    def mfu_bound(self) -> float:
+        """Roofline fraction: model-useful FLOP/s at the step bound vs peak."""
+        return self.model_flops / (self.n_chips * PEAK_FLOPS * max(self.step_bound_s, 1e-12))
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(
+            compute_s=self.compute_s,
+            memory_s=self.memory_s,
+            collective_s=self.collective_s,
+            dominant=self.dominant,
+            step_bound_s=self.step_bound_s,
+            useful_flops_frac=self.useful_flops_frac,
+            mfu_bound=self.mfu_bound,
+        )
+        return d
+
+
+def ssd_correction(cfg, shape) -> dict:
+    """Analytic cost of the (nc-1) SSD chunks the measurement compiles do
+    not count (the intra-chunk scan stays rolled; XLA counts its body once).
+
+    Per chunk per (batch, head), f32:
+      flops_fwd ~ 2L^2(ds+hd) [CB^T + scores@X] + 6L^2 [decay/mask/scale]
+                  + 6L*hd*ds  [state update + inter-chunk output]
+      bytes_fwd ~ 28 L^2      [cb/decay/scores materialized, ~7 f32 passes]
+    Train multiplies by ~3 (remat fwd + bwd)."""
+    if cfg.ssm_state == 0 or shape.kind == "decode":
+        return {"flops": 0.0, "bytes": 0.0}
+    n_mamba = sum(1 for i in range(cfg.n_layers) if cfg.mixer_kind(i) == "mamba")
+    if n_mamba == 0:
+        return {"flops": 0.0, "bytes": 0.0}
+    l = min(cfg.ssd_chunk, shape.seq_len)
+    nc = (shape.seq_len + l - 1) // l
+    b, h = shape.global_batch, cfg.ssm_heads
+    ds, hd = cfg.ssm_state, cfg.ssm_head_dim
+    mult = 3.0 if shape.kind == "train" else 1.0
+    per_chunk_flops = 2 * l * l * (ds + hd) + 6 * l * l + 6 * l * hd * ds
+    per_chunk_bytes = 28.0 * l * l
+    scale = b * h * n_mamba * (nc - 1) * mult
+    return {"flops": per_chunk_flops * scale, "bytes": per_chunk_bytes * scale}
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N_active·D (train) / 2·N_active·D (inference) + attention term."""
+    n_active = cfg.param_count(active=True)
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens, mult = b * s, 6
+    elif shape.kind == "prefill":
+        tokens, mult = b * s, 2
+    else:  # decode: one token per sequence
+        tokens, mult = b * 1, 2
+    flops = mult * n_active * tokens
+    # attention score/value FLOPs (not in 6ND):
+    hd = cfg.resolved_head_dim
+    n_attn = sum(1 for i in range(cfg.n_layers) if cfg.mixer_kind(i) == "attn")
+    if shape.kind == "train":
+        # fwd attn = 2 matmuls x 2*B*(S^2/2)*H*hd; train ~ 3x fwd
+        flops += 3 * (2 * 2 * b * (s * s // 2) * cfg.n_heads * hd) * n_attn
+    elif shape.kind == "prefill":
+        flops += 2 * b * (s * s // 2) * cfg.n_heads * hd * 2 * n_attn
+    else:
+        flops += 2 * b * s * cfg.n_heads * hd * 2 * n_attn
+    # SSD state-math term (the attention-equivalent for mamba mixers)
+    n_mamba = sum(1 for i in range(cfg.n_layers) if cfg.mixer_kind(i) == "mamba")
+    if n_mamba and cfg.ssm_state:
+        h2, ds, hd2 = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+        if shape.kind == "decode":
+            flops += 2 * b * h2 * hd2 * ds * 2 * n_mamba
+        else:
+            l = min(cfg.ssd_chunk, s)
+            nc = (s + l - 1) // l
+            per = 2 * l * l * (ds + hd2) + 6 * l * hd2 * ds
+            mult = 3 if shape.kind == "train" else 1
+            flops += per * b * h2 * nc * n_mamba * mult
+    return float(flops)

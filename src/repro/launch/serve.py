@@ -1,0 +1,72 @@
+"""C-FedRAG serving launcher: build the federated corpus, stand up the
+providers + enclave orchestrator, and answer queries.
+
+  python -m repro.launch.serve --queries 5 --aggregation rerank
+
+Uses the bag embedder + lexical-overlap reranker by default (training-free
+CPU path); pass --generator-ckpt to decode answers with a trained reduced
+LM (see examples/federated_medqa.py for the full train->serve loop)."""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core.pipeline import CFedRAGConfig, CFedRAGSystem
+from repro.data.corpus import make_federated_corpus
+from repro.data.embeddings import bag_embed
+from repro.data.tokenizer import HashTokenizer
+
+
+def overlap_reranker(tok: HashTokenizer):
+    """Lexical-overlap cross-scorer (training-free F_aggr stand-in; the
+    trained cross-encoder variant lives in benchmarks/table1)."""
+
+    def rerank(query_tokens: np.ndarray, cand_tokens: np.ndarray) -> np.ndarray:
+        q = set(int(t) for t in query_tokens if t > 7)
+        scores = []
+        for row in cand_tokens:
+            c = set(int(t) for t in row if t > 7)
+            scores.append(len(q & c) / (len(q) ** 0.5 * max(len(c), 1) ** 0.5))
+        return np.asarray(scores, np.float32)
+
+    return rerank
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", type=int, default=5)
+    ap.add_argument("--aggregation", default="rerank", choices=["embedding_rank", "rerank"])
+    ap.add_argument("--n-facts", type=int, default=128)
+    ap.add_argument("--m-local", type=int, default=8)
+    ap.add_argument("--n-global", type=int, default=8)
+    ap.add_argument("--kill-provider", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    corpus = make_federated_corpus(n_facts=args.n_facts, n_distractors=args.n_facts, n_queries=args.queries)
+    tok = HashTokenizer()
+    sys_ = CFedRAGSystem(
+        corpus,
+        CFedRAGConfig(aggregation=args.aggregation, m_local=args.m_local, n_global=args.n_global),
+        tokenizer=tok,
+        reranker=overlap_reranker(tok) if args.aggregation == "rerank" else None,
+    )
+    if args.kill_provider is not None:
+        sys_.providers[args.kill_provider].fail = True
+        print(f"!! provider {args.kill_provider} marked down (quorum keeps serving)")
+
+    for q in corpus.queries[: args.queries]:
+        res = sys_.orchestrator.answer(q.text)
+        ids = list(res["context"]["chunk_ids"])
+        hit = q.gold_chunk_id in ids
+        print(
+            f"Q: {q.text!r:45s} gold_chunk={q.gold_chunk_id:4d} "
+            f"hit@{args.n_global}={'Y' if hit else 'n'} "
+            f"providers={res['n_providers']} candidates={res['context']['n_candidates']}"
+        )
+    stats = sys_.eval_retrieval(args.queries)
+    print(f"\nrecall@{args.n_global}: {stats['recall_at_n']:.3f}  mrr: {stats['mrr']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Training launcher.
+
+Real-hardware entry point (and CPU-scale driver for the e2e examples):
+  python -m repro.launch.train --arch qwen3-0.6b --reduced --steps 200 \\
+      --batch 8 --seq 256 --ckpt-dir /tmp/ck --resume auto
+
+--reduced swaps in the smoke-scale config of the same family so the
+driver runs on CPU; on a TPU pod the full config + production mesh is
+selected automatically (mesh axes collapse to the device count)."""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import SHAPES, get_config, smoke_config
+from repro.data.pipeline import LMBatchStream
+from repro.launch.mesh import make_smoke_mesh
+from repro.optim.optimizers import cosine_schedule, get_optimizer
+from repro.runtime.sharding import make_policy
+from repro.runtime.train_loop import Trainer, TrainerConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--opt", default="adamw")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", default="auto")
+    ap.add_argument("--fail-at", type=int, default=None)
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = smoke_config(cfg)
+    n_dev = len(jax.devices())
+    mesh = make_smoke_mesh((n_dev, 1)) if n_dev > 1 else None
+    pol = make_policy(mesh, shape_kind="train", global_batch=args.batch, seq_len=args.seq)
+
+    stream = LMBatchStream(args.batch, args.seq, cfg.vocab_size)
+    opt = get_optimizer(args.opt)
+    tcfg = TrainerConfig(
+        total_steps=args.steps,
+        ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir,
+        fail_at_step=args.fail_at,
+    )
+    trainer = Trainer(cfg, pol, opt, stream, tcfg, lr_fn=cosine_schedule(args.lr, 20, args.steps))
+    params, _ = trainer.run(resume=args.resume)
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(trainer.metrics_log, f, indent=1)
+    last = trainer.metrics_log[-1] if trainer.metrics_log else {}
+    print(f"final: {last}")
+    return params, trainer
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""bge-reranker-style cross encoder: the paper's aggregation model F_aggr.
+
+Takes a (query, chunk) token pair packed into one sequence and outputs a
+relevance score; the orchestrator scores all k_n x m candidates pairwise
+and keeps the global top-n (paper §2.3.2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.lm import _stack_specs
+from repro.models.params import ParamSpec
+from repro.runtime.sharding import ShardingPolicy
+
+f32 = jnp.float32
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    block = {
+        "mixer_norm": ParamSpec((d,), ("norm",), "ones"),
+        "attn": L.attn_specs(cfg),
+        "ffn_norm": ParamSpec((d,), ("norm",), "ones"),
+        "mlp": L.mlp_specs(cfg),
+    }
+    return {
+        "embed": L.embed_specs(cfg),
+        "type_embed": ParamSpec((2, d), (None, "embed"), "normal"),
+        "blocks": _stack_specs(block, cfg.n_layers),
+        "final_norm": ParamSpec((d,), ("norm",), "ones"),
+        "score": {"w": ParamSpec((d, 1), ("embed", None), "fan_in", fan_in_dims=(0,))},
+    }
+
+
+def score_pairs(cfg: ModelConfig, pol: ShardingPolicy, params, tokens, type_ids):
+    """tokens: (B,S) packed [query ; chunk]; type_ids: (B,S) 0=query 1=chunk.
+    Returns relevance scores (B,)."""
+    h = L.embed_apply(cfg, pol, params["embed"], tokens)
+    h = h + params["type_embed"].astype(h.dtype)[type_ids]
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+
+    def body(hh, bp):
+        x = L.rmsnorm(hh, bp["mixer_norm"], cfg.norm_eps)
+        hh = hh + L.attn_apply(cfg, pol, bp["attn"], x, positions, causal=False)
+        x = L.rmsnorm(hh, bp["ffn_norm"], cfg.norm_eps)
+        hh = hh + L.mlp_apply(cfg, pol, bp["mlp"], x)
+        return hh, None
+
+    h, _ = jax.lax.scan(body, h, params["blocks"])
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    cls = h[:, 0, :].astype(f32)  # first-token pooling
+    return (cls @ params["score"]["w"].astype(f32))[:, 0]
+
+
+def rank_loss(cfg, pol, params, batch):
+    """Listwise softmax ranking loss: for each query, one positive among
+    n_cand candidates.  batch: tokens (B, n_cand, S), type_ids same,
+    label (B,) index of the positive."""
+    b, n, s = batch["tokens"].shape
+    scores = score_pairs(
+        cfg, pol, params,
+        batch["tokens"].reshape(b * n, s),
+        batch["type_ids"].reshape(b * n, s),
+    ).reshape(b, n)
+    logp = jax.nn.log_softmax(scores, axis=-1)
+    loss = -jnp.take_along_axis(logp, batch["label"][:, None], axis=-1).mean()
+    acc = (scores.argmax(-1) == batch["label"]).mean()
+    return loss, {"loss": loss, "acc": acc}

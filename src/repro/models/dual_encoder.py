@@ -1,0 +1,66 @@
+"""Contriever-style dual encoder: the paper's embedding model F_emb.
+
+Token encoder + mean pooling; trained with in-batch-negative InfoNCE
+(contrastive, as Contriever).  Shared weights for query/document towers.
+This is the model the paper federates with FL (core/federated.py trains it
+with FedAvg / secure aggregation across providers).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.lm import _stack_specs
+from repro.models.params import ParamSpec
+from repro.runtime.sharding import ShardingPolicy
+
+f32 = jnp.float32
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    block = {
+        "mixer_norm": ParamSpec((d,), ("norm",), "ones"),
+        "attn": L.attn_specs(cfg),
+        "ffn_norm": ParamSpec((d,), ("norm",), "ones"),
+        "mlp": L.mlp_specs(cfg),
+    }
+    return {
+        "embed": L.embed_specs(cfg),
+        "blocks": _stack_specs(block, cfg.n_layers),
+        "final_norm": ParamSpec((d,), ("norm",), "ones"),
+    }
+
+
+def encode(cfg: ModelConfig, pol: ShardingPolicy, params, tokens, pad_id: int = 0):
+    """tokens: (B,S) -> L2-normalized embeddings (B, d)."""
+    h = L.embed_apply(cfg, pol, params["embed"], tokens)
+    positions = jnp.broadcast_to(jnp.arange(tokens.shape[1]), tokens.shape)
+
+    def body(hh, bp):
+        x = L.rmsnorm(hh, bp["mixer_norm"], cfg.norm_eps)
+        hh = hh + L.attn_apply(cfg, pol, bp["attn"], x, positions, causal=False)
+        x = L.rmsnorm(hh, bp["ffn_norm"], cfg.norm_eps)
+        hh = hh + L.mlp_apply(cfg, pol, bp["mlp"], x)
+        return hh, None
+
+    h, _ = jax.lax.scan(body, h, params["blocks"])
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    msk = (tokens != pad_id).astype(f32)[..., None]
+    pooled = (h.astype(f32) * msk).sum(1) / jnp.maximum(msk.sum(1), 1.0)
+    return pooled / jnp.maximum(jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-9)
+
+
+def info_nce_loss(cfg, pol, params, batch, temperature: float = 0.05):
+    """batch: query_tokens (B,S), doc_tokens (B,S) — positives aligned,
+    in-batch negatives."""
+    q = encode(cfg, pol, params, batch["query_tokens"])
+    d = encode(cfg, pol, params, batch["doc_tokens"])
+    sim = (q @ d.T) / temperature  # (B,B)
+    labels = jnp.arange(q.shape[0])
+    logp = jax.nn.log_softmax(sim, axis=-1)
+    loss = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+    acc = (sim.argmax(-1) == labels).mean()
+    return loss, {"loss": loss, "acc": acc}

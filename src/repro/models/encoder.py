@@ -1,0 +1,78 @@
+"""Encoder-only backbone (HuBERT-xlarge) + masked-prediction objective.
+
+Frontend stub per the assignment: ``input_specs()`` provides precomputed
+frame embeddings (B, S, d_model); the CNN feature extractor is out of
+scope.  Bidirectional attention, no KV cache / decode step (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.params import ParamSpec
+from repro.runtime.sharding import ShardingPolicy
+
+f32 = jnp.float32
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    block = {
+        "mixer_norm": ParamSpec((d,), ("norm",), "ones"),
+        "attn": L.attn_specs(cfg),
+        "ffn_norm": ParamSpec((d,), ("norm",), "ones"),
+        "mlp": L.mlp_specs(cfg),
+    }
+    from repro.models.lm import _stack_specs
+
+    return {
+        "mask_embed": ParamSpec((d,), ("norm",), "normal"),
+        "blocks": _stack_specs(block, cfg.n_layers),
+        "final_norm": ParamSpec((d,), ("norm",), "ones"),
+        "head": {"w": ParamSpec((d, cfg.vocab_size), ("embed", "vocab"), "fan_in", fan_in_dims=(0,))},
+    }
+
+
+def encode(cfg: ModelConfig, pol: ShardingPolicy, params, frames, mask=None):
+    """frames: (B,S,d) precomputed embeddings; mask: (B,S) bool -> replace
+    masked positions with the learned mask embedding (HuBERT-style)."""
+    h = frames.astype(jnp.dtype(cfg.dtype))
+    if mask is not None:
+        h = jnp.where(mask[..., None], params["mask_embed"].astype(h.dtype), h)
+    h = pol.shard(h, "act_batch", "act_seq", "act_embed")
+    positions = jnp.broadcast_to(jnp.arange(h.shape[1]), h.shape[:2])
+
+    def body(carry, bp):
+        hh = carry
+        x = L.rmsnorm(hh, bp["mixer_norm"], cfg.norm_eps)
+        hh = hh + L.attn_apply(cfg, pol, bp["attn"], x, positions, causal=False)
+        x = L.rmsnorm(hh, bp["ffn_norm"], cfg.norm_eps)
+        hh = hh + L.mlp_apply(cfg, pol, bp["mlp"], x)
+        return hh, None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(
+        body, h, params["blocks"], unroll=cfg.n_layers if cfg.scan_unroll else 1
+    )
+    return L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+
+
+def loss_fn(cfg: ModelConfig, pol: ShardingPolicy, params, batch):
+    """Masked-prediction CE over the codebook (vocab_size)."""
+    h = encode(cfg, pol, params, batch["frames"], batch["mask"])
+    logits = (h @ params["head"]["w"].astype(h.dtype)).astype(f32)
+    logits = pol.shard(logits, "act_batch", "act_seq", "act_vocab")
+    from repro.models.lm import sharded_ce
+
+    m = batch["mask"].astype(f32)
+    ce = sharded_ce(logits, batch["targets"], m)
+    return ce, {"ce": ce, "tokens": m.sum()}
+
+
+def embed_corpus(cfg: ModelConfig, pol: ShardingPolicy, params, frames):
+    """Mean-pooled utterance embedding (provider-side audio retrieval)."""
+    h = encode(cfg, pol, params, frames)
+    return h.mean(axis=1)

@@ -1,0 +1,250 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA attention, SwiGLU MLP.
+
+Pure functions: ``*_specs(cfg)`` builds the ParamSpec subtree,
+``*_apply(cfg, pol, params, ...)`` runs it.  All matmuls run in
+``cfg.dtype`` (bf16) with f32 softmax/norm accumulation.
+
+Attention impls:
+  naive      materialized S_q x S_k logits (small seq, oracle)
+  flash_jnp  lax.scan over KV chunks with online softmax — the dry-run /
+             XLA production path (O(S·chunk) memory, exact)
+  pallas     kernels/flash_attention (TPU target; validated in interpret mode)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec
+from repro.runtime.sharding import ShardingPolicy
+
+# --------------------------------------------------------------------- #
+# norms / rope
+# --------------------------------------------------------------------- #
+
+
+def rmsnorm(x, scale, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) * 2.0 / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))  # (hd/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# attention cores  (q: (B,Sq,H,hd); k,v: (B,Sk,KV,hd))
+# --------------------------------------------------------------------- #
+
+
+def _gqa_logits(q, k):
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    qr = q.reshape(b, sq, kv, h // kv, hd)
+    return jnp.einsum(
+        "bqkgd,bskd->bkgqs", qr, k, preferred_element_type=jnp.float32
+    )
+
+
+def _gqa_out(probs, v, out_dtype):
+    b, kv, g, sq, sk = probs.shape
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, kv * g, v.shape[-1]).astype(out_dtype)
+
+
+def naive_attention(q, k, v, *, causal: bool, q_offset=0):
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = _gqa_logits(q, k) * scale  # (B,KV,G,Sq,Sk) f32
+    if causal:
+        qpos = q_offset + jnp.arange(q.shape[1])
+        kpos = jnp.arange(k.shape[1])
+        mask = qpos[:, None] >= kpos[None, :]
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return _gqa_out(probs, v, q.dtype)
+
+
+def flash_jnp_attention(q, k, v, *, causal: bool, chunk: int, q_offset=0, unroll=False):
+    """Online-softmax over KV chunks (exact; O(Sq*chunk) live memory)."""
+    b, sq, h, hd = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    assert sk % chunk == 0, (sk, chunk)
+    n = sk // chunk
+    g = h // kv
+    scale = 1.0 / np.sqrt(hd)
+    qr = q.reshape(b, sq, kv, g, hd)
+    ks = k.reshape(b, n, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, n, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+    qpos = q_offset + jnp.arange(sq)
+
+    def body(carry, kc_vc):
+        m, l, acc = carry
+        (kc, vc), i = kc_vc
+        logits = (
+            jnp.einsum("bqkgd,bskd->bkgqs", qr, kc, preferred_element_type=jnp.float32)
+            * scale
+        )  # (B,KV,G,Sq,chunk)
+        if causal:
+            kpos = i * chunk + jnp.arange(chunk)
+            mask = qpos[:, None] >= kpos[None, :]
+            logits = jnp.where(mask, logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(vc.dtype), vc
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kv, g, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, a0), ((ks, vs), jnp.arange(n)),
+        unroll=n if unroll else 1,
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def attention_core(cfg: ModelConfig, q, k, v, *, causal: bool, q_offset=0):
+    if cfg.attn_impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        return fa_ops.flash_attention(q, k, v, causal=causal, q_offset=q_offset)
+    if cfg.attn_impl == "flash_jnp" and k.shape[1] > cfg.attn_chunk:
+        return flash_jnp_attention(
+            q, k, v, causal=causal, chunk=cfg.attn_chunk, q_offset=q_offset,
+            unroll=cfg.scan_unroll,
+        )
+    return naive_attention(q, k, v, causal=causal, q_offset=q_offset)
+
+
+# --------------------------------------------------------------------- #
+# attention block
+# --------------------------------------------------------------------- #
+
+
+def attn_specs(cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    s = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim"), "fan_in", fan_in_dims=(0,)),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim"), "fan_in", fan_in_dims=(0,)),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim"), "fan_in", fan_in_dims=(0,)),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed"), "fan_in", fan_in_dims=(0, 1)),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = ParamSpec((hd,), ("norm",), "ones")
+        s["k_norm"] = ParamSpec((hd,), ("norm",), "ones")
+    return s
+
+
+def attn_qkv(cfg: ModelConfig, pol: ShardingPolicy, p, x, positions):
+    """Project + rope + qk-norm.  x: (B,S,d) -> q,k,v."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    q = pol.shard(q, "act_batch", "act_seq", "act_heads", None)
+    k = pol.shard(k, "act_batch", "act_seq", "act_kv_heads", None)
+    v = pol.shard(v, "act_batch", "act_seq", "act_kv_heads", None)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(cfg: ModelConfig, pol: ShardingPolicy, p, x, positions, *, causal=None):
+    causal = cfg.causal if causal is None else causal
+    q, k, v = attn_qkv(cfg, pol, p, x, positions)
+    out = attention_core(cfg, q, k, v, causal=causal)
+    out = pol.shard(out, "act_batch", "act_seq", "act_heads", None)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return pol.shard(out, "act_batch", "act_seq", "act_embed")
+
+
+def attn_decode(cfg: ModelConfig, pol: ShardingPolicy, p, x, k_cache, v_cache, pos):
+    """Single-token decode.  x: (B,1,d); caches: (B,S,KV,hd); pos: scalar."""
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k_new, v_new = attn_qkv(cfg, pol, p, x, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+    k_cache = pol.shard(k_cache, "cache_batch", "cache_seq", "cache_kv", None)
+    v_cache = pol.shard(v_cache, "cache_batch", "cache_seq", "cache_kv", None)
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = _gqa_logits(q, k_cache.astype(q.dtype)) * scale  # (B,KV,G,1,S)
+    kpos = jnp.arange(k_cache.shape[1])
+    logits = jnp.where(kpos <= pos, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = _gqa_out(probs, v_cache.astype(q.dtype), q.dtype)  # (B,1,H,hd)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, k_cache, v_cache
+
+
+# --------------------------------------------------------------------- #
+# SwiGLU MLP
+# --------------------------------------------------------------------- #
+
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "wg": ParamSpec((d, f), ("embed", "mlp"), "fan_in", fan_in_dims=(0,)),
+        "wu": ParamSpec((d, f), ("embed", "mlp"), "fan_in", fan_in_dims=(0,)),
+        "wd": ParamSpec((f, d), ("mlp", "embed"), "fan_in", fan_in_dims=(0,)),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, pol: ShardingPolicy, p, x):
+    dt = x.dtype
+    h = jax.nn.silu(x @ p["wg"].astype(dt)) * (x @ p["wu"].astype(dt))
+    h = pol.shard(h, "act_batch", "act_seq", "act_ff")
+    out = h @ p["wd"].astype(dt)
+    return pol.shard(out, "act_batch", "act_seq", "act_embed")
+
+
+# --------------------------------------------------------------------- #
+# embeddings / head
+# --------------------------------------------------------------------- #
+
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    s = {"tok": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"), "normal")}
+    return s
+
+
+def head_specs(cfg: ModelConfig) -> dict:
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": ParamSpec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"), "fan_in", fan_in_dims=(0,))}
+
+
+def embed_apply(cfg: ModelConfig, pol: ShardingPolicy, p, tokens):
+    out = jnp.take(p["tok"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    return pol.shard(out, "act_batch", "act_seq", "act_embed")
+
+
+def head_apply(cfg: ModelConfig, pol: ShardingPolicy, params, x):
+    w = params["embed"]["tok"].T if cfg.tie_embeddings else params["head"]["w"]
+    logits = (x @ w.astype(x.dtype)).astype(jnp.dtype(cfg.logit_dtype))
+    return pol.shard(logits, "act_batch", "act_seq", "act_vocab")

@@ -1,0 +1,209 @@
+"""Mamba2 / SSD (state-space duality) mixer — TPU-native chunked form.
+
+The SSD formulation (Dao & Gu, arXiv:2405.21060) splits the sequence into
+chunks of length L: the intra-chunk term is a small masked "attention"
+(MXU-friendly matmuls), the inter-chunk term is a length-S/L recurrence
+over (H, hd, ds) states carried by ``lax.scan``.  Decode is the O(1)
+recurrent step.  All state math in f32.
+
+Sharding: heads over `model` (B/C are per-group, replicated — the GQA
+analogue), sequence/batch over `data` like attention.
+
+Used for both the ``mamba2-1.3b`` arch and Jamba's mamba layers (DESIGN.md:
+Jamba-1.5 ships Mamba-1 layers; we use the SSD formulation as the
+TPU-efficient member of the same model class — recorded as an adaptation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec
+from repro.runtime.sharding import ShardingPolicy
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    g, ds, h, w = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.conv_width
+    return {
+        "wz": ParamSpec((d, di), ("embed", "mlp"), "fan_in", fan_in_dims=(0,)),
+        "wx": ParamSpec((d, di), ("embed", "mlp"), "fan_in", fan_in_dims=(0,)),
+        "wB": ParamSpec((d, g * ds), ("embed", None), "fan_in", fan_in_dims=(0,)),
+        "wC": ParamSpec((d, g * ds), ("embed", None), "fan_in", fan_in_dims=(0,)),
+        "wdt": ParamSpec((d, h), ("embed", "dt"), "fan_in", fan_in_dims=(0,)),
+        "conv_x": ParamSpec((w, di), ("conv", "mlp"), "fan_in", fan_in_dims=(0,)),
+        "conv_B": ParamSpec((w, g * ds), ("conv", None), "fan_in", fan_in_dims=(0,)),
+        "conv_C": ParamSpec((w, g * ds), ("conv", None), "fan_in", fan_in_dims=(0,)),
+        "A_log": ParamSpec((h,), ("dt",), "zeros"),
+        "D": ParamSpec((h,), ("dt",), "ones"),
+        "dt_bias": ParamSpec((h,), ("dt",), "zeros"),
+        "norm": ParamSpec((di,), ("mlp",), "ones"),
+        "wo": ParamSpec((di, d), ("mlp", "embed"), "fan_in", fan_in_dims=(0,)),
+    }
+
+
+def _causal_conv(x, kernel, state=None):
+    """Depthwise causal conv along seq.  x: (B,S,C); kernel: (W,C);
+    state: (B,W-1,C) history or None (zero history).  Returns (y, new_state)."""
+    w = kernel.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], w - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+W-1, C)
+    y = sum(
+        xp[:, i : i + x.shape[1], :] * kernel[i][None, None, :] for i in range(w)
+    )
+    new_state = xp[:, -(w - 1) :, :] if w > 1 else state
+    return y, new_state
+
+
+def _project(cfg, p, x):
+    dt_ = x.dtype
+    z = x @ p["wz"].astype(dt_)
+    xin = x @ p["wx"].astype(dt_)
+    B = x @ p["wB"].astype(dt_)
+    C = x @ p["wC"].astype(dt_)
+    dt_raw = x @ p["wdt"].astype(dt_)
+    return z, xin, B, C, dt_raw
+
+
+def _ssd_chunked(cfg: ModelConfig, xh, Bh, Ch, dt, a, init_state=None):
+    """Chunked SSD.  xh: (B,S,H,hd); Bh/Ch: (B,S,G,ds); dt: (B,S,H) f32 (post-
+    softplus); a: (H,) negative.  Returns (y (B,S,H,hd), final_state (B,H,hd,ds))."""
+    b, s, h, hd = xh.shape
+    g, ds = Bh.shape[2], Bh.shape[3]
+    l = min(cfg.ssd_chunk, s)
+    s_orig = s
+    if s % l:  # pad: dt=0 rows decay by exp(0)=1 and contribute nothing
+        pad = l - s % l
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bh = jnp.pad(Bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Ch = jnp.pad(Ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // l
+    rep = h // g
+
+    def resh(t, feat):
+        return t.reshape(b, nc, l, *feat).transpose(1, 0, 2, *range(3, 3 + len(feat)))
+
+    xs = resh(xh, (h, hd))
+    bs = resh(Bh, (g, ds))
+    cs_ = resh(Ch, (g, ds))
+    dts = resh(dt, (h,))
+
+    mask = jnp.tril(jnp.ones((l, l), bool))
+
+    def chunk_body(state, inp):
+        xc, bc, cc, dtc = inp  # (B,L,H,hd), (B,L,G,ds), (B,L,G,ds), (B,L,H)
+        xf = xc.astype(jnp.float32)
+        da = dtc * a  # (B,L,H), <= 0
+        cum = jnp.cumsum(da, axis=1)  # inclusive
+        cum_h = cum.transpose(0, 2, 1)  # (B,H,L)
+        # intra-chunk: scores(i,j) = (C_i·B_j) * exp(cum_i - cum_j) * dt_j, j<=i
+        cb = jnp.einsum("bigs,bjgs->bgij", cc.astype(jnp.float32), bc.astype(jnp.float32))
+        cb = jnp.repeat(cb, rep, axis=1)  # (B,H,L,L)
+        decay_arg = cum_h[:, :, :, None] - cum_h[:, :, None, :]
+        decay = jnp.exp(jnp.where(mask, decay_arg, -1e30))  # masked-safe
+        scores = cb * decay * dtc.transpose(0, 2, 1)[:, :, None, :]
+        y_intra = jnp.einsum("bhij,bjhp->bihp", scores, xf)
+        # inter-chunk: contribution of the carried state
+        ci = jnp.repeat(cc.astype(jnp.float32), rep, axis=2)  # (B,L,H,ds)
+        y_inter = jnp.einsum("bihs,bhps->bihp", ci, state) * jnp.exp(cum)[..., None]
+        # new state: exp(cum_L)*state + sum_j exp(cum_L - cum_j) dt_j B_j (x)_j
+        wgt = jnp.exp(cum[:, -1:, :] - cum) * dtc  # (B,L,H)
+        bi = jnp.repeat(bc.astype(jnp.float32), rep, axis=2)  # (B,L,H,ds)
+        state_new = state * jnp.exp(cum[:, -1, :])[:, :, None, None] + jnp.einsum(
+            "bjh,bjhs,bjhp->bhps", wgt, bi, xf
+        )
+        return state_new, (y_intra + y_inter)
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, hd, ds), jnp.float32)
+    # NOTE: stays rolled even under cfg.scan_unroll — the dry-run cost
+    # measurement corrects the missing (nc-1) chunks analytically
+    # (launch/roofline.ssd_correction); unrolling nc=128 chunks x 7 mamba
+    # layers is compile-prohibitive.
+    body = jax.checkpoint(chunk_body) if cfg.remat == "block" else chunk_body
+    final_state, ys = jax.lax.scan(body, init_state, (xs, bs, cs_, dts))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)[:, :s_orig]
+    return y, final_state
+
+
+def mamba_apply(cfg: ModelConfig, pol: ShardingPolicy, p, x, *, init=None):
+    """Full-sequence forward.  x: (B,S,d).  init: optional (conv_states, ssm_state)
+    for chunked prefill.  Returns (out, (conv_states, ssm_state))."""
+    b, s, d = x.shape
+    h, hd, g, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    z, xin, B, C, dt_raw = _project(cfg, p, x)
+    cst = init[0] if init else (None, None, None)
+    xin, cs_x = _causal_conv(xin, p["conv_x"].astype(xin.dtype), cst[0])
+    B, cs_b = _causal_conv(B, p["conv_B"].astype(B.dtype), cst[1])
+    C, cs_c = _causal_conv(C, p["conv_C"].astype(C.dtype), cst[2])
+    xin, B, C = jax.nn.silu(xin), jax.nn.silu(B), jax.nn.silu(C)
+    xin = pol.shard(xin, "act_batch", "act_seq", "act_ff")
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,)
+    xh = xin.reshape(b, s, h, hd)
+    Bh = B.reshape(b, s, g, ds)
+    Ch = C.reshape(b, s, g, ds)
+    y, ssm_state = _ssd_chunked(
+        cfg, xh, Bh, Ch, dt, a, init_state=init[1] if init else None
+    )
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    # gated per-head RMSNorm (TP-friendly: normalizes over hd only)
+    gated = y * jax.nn.silu(z.astype(jnp.float32)).reshape(b, s, h, hd)
+    var = jnp.mean(gated * gated, axis=-1, keepdims=True)
+    scale = p["norm"].astype(jnp.float32).reshape(h, hd)
+    y = (gated * jax.lax.rsqrt(var + cfg.norm_eps) * scale).astype(x.dtype)
+    out = y.reshape(b, s, cfg.d_inner) @ p["wo"].astype(x.dtype)
+    return pol.shard(out, "act_batch", "act_seq", "act_embed"), ((cs_x, cs_b, cs_c), ssm_state)
+
+
+def mamba_decode(cfg: ModelConfig, pol: ShardingPolicy, p, x, conv_states, ssm_state):
+    """Single-token recurrent step.  x: (B,1,d); conv_states: 3x(B,W-1,C);
+    ssm_state: (B,H,hd,ds) f32.  Returns (out, conv_states, ssm_state)."""
+    b = x.shape[0]
+    h, hd, g, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    z, xin, B, C, dt_raw = _project(cfg, p, x)
+    xin, cs_x = _causal_conv(xin, p["conv_x"].astype(xin.dtype), conv_states[0])
+    B, cs_b = _causal_conv(B, p["conv_B"].astype(B.dtype), conv_states[1])
+    C, cs_c = _causal_conv(C, p["conv_C"].astype(C.dtype), conv_states[2])
+    xin, B, C = jax.nn.silu(xin), jax.nn.silu(B), jax.nn.silu(C)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))[:, 0]  # (B,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)  # (B,H)
+    xh = xin.astype(jnp.float32).reshape(b, h, hd)
+    Bh = jnp.repeat(B.astype(jnp.float32).reshape(b, g, ds), h // g, axis=1)  # (B,H,ds)
+    Ch = jnp.repeat(C.astype(jnp.float32).reshape(b, g, ds), h // g, axis=1)
+    ssm_state = ssm_state * da[:, :, None, None] + (dt[:, :, None] * xh)[..., None] * Bh[:, :, None, :]
+    ssm_state = pol.shard(ssm_state, "cache_batch", "act_heads", None, None)
+    y = jnp.einsum("bhps,bhs->bhp", ssm_state, Ch) + xh * p["D"].astype(jnp.float32)[None, :, None]
+    gated = y * jax.nn.silu(z.astype(jnp.float32)).reshape(b, h, hd)
+    var = jnp.mean(gated * gated, axis=-1, keepdims=True)
+    scale = p["norm"].astype(jnp.float32).reshape(h, hd)
+    y = (gated * jax.lax.rsqrt(var + cfg.norm_eps) * scale).astype(x.dtype)
+    out = y.reshape(b, 1, cfg.d_inner) @ p["wo"].astype(x.dtype)
+    return out, (cs_x, cs_b, cs_c), ssm_state
+
+
+def mamba_reference(cfg: ModelConfig, p, x):
+    """Sequential-recurrence oracle (no chunking) for tests."""
+    b, s, d = x.shape
+    h, hd, g, ds = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    conv = (None, None, None)
+    state = jnp.zeros((b, h, hd, ds), jnp.float32)
+    outs = []
+    conv = (
+        jnp.zeros((b, cfg.conv_width - 1, cfg.d_inner), x.dtype),
+        jnp.zeros((b, cfg.conv_width - 1, g * ds), x.dtype),
+        jnp.zeros((b, cfg.conv_width - 1, g * ds), x.dtype),
+    )
+    pol = ShardingPolicy(rules={}, mesh=None)
+    for t in range(s):
+        o, conv, state = mamba_decode(cfg, pol, p, x[:, t : t + 1], conv, state)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)

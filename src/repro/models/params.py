@@ -1,0 +1,159 @@
+"""Single-source-of-truth parameter system (no flax).
+
+A model declares its parameters once as a pytree of ``ParamSpec`` (shape +
+logical axis names + initializer).  From that one tree we derive:
+
+  * ``init_params``      — concrete arrays (smoke tests, real training)
+  * ``abstract_params``  — ShapeDtypeStructs (dry-run lowering, no allocation)
+  * ``make_shardings``   — NamedShardings via logical→mesh axis rules
+
+Logical axes (see runtime/sharding.py for the rules tables):
+  layers/stack   scan dims                    -> never sharded
+  vocab          embedding rows / lm head     -> tensor-parallel
+  embed          d_model dims of weights      -> FSDP
+  heads/kv_heads/ssm_heads                    -> tensor-parallel
+  mlp            dense FFN hidden             -> tensor-parallel
+  experts        MoE expert dim               -> expert-parallel
+  expert_in/expert_mlp                        -> FSDP / replicated
+  norm/head_dim/conv/state/dt                 -> replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"  # normal | zeros | ones | fan_in
+    scale: float = 0.02
+    fan_in_dims: tuple[int, ...] = ()  # dims whose product is fan-in (for "fan_in")
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+
+def _leaves(tree) -> list[tuple[str, ParamSpec]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def init_params(specs, key: jax.Array, dtype=jnp.float32):
+    """Materialize a ParamSpec tree into concrete arrays."""
+    items = _leaves(specs)
+    keys = jax.random.split(key, max(len(items), 1))
+    out = {}
+    for (name, spec), k in zip(items, keys):
+        if spec.init == "zeros":
+            v = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "ones":
+            v = jnp.ones(spec.shape, dtype)
+        else:
+            if spec.init == "fan_in":
+                fan = 1
+                for d in spec.fan_in_dims or range(len(spec.shape) - 1):
+                    fan *= spec.shape[d]
+                std = 1.0 / math.sqrt(max(fan, 1))
+            else:
+                std = spec.scale
+            v = (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dtype)
+        out[name] = v
+    return _unflatten_like(specs, [out[n] for n, _ in items])
+
+
+def abstract_params(specs, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _unflatten_like(specs, values):
+    treedef = jax.tree_util.tree_structure(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    return jax.tree_util.tree_unflatten(treedef, values)
+
+
+def spec_to_pspec(
+    spec: ParamSpec, rules: dict[str, Any], axis_sizes: dict[str, int] | None = None
+) -> PartitionSpec:
+    """Map logical axes -> mesh axes.  Guards: (a) never reuse a mesh axis
+    within one spec; (b) with ``axis_sizes``, drop mesh axes that do not
+    divide the dimension (NamedSharding requires exact divisibility —
+    e.g. smollm's 15 heads / 5 kv-heads stay replicated over model=16)."""
+    used: set[str] = set()
+    entries = []
+    for d, ax in enumerate(spec.axes):
+        mesh_ax = rules.get(ax) if ax is not None else None
+        if mesh_ax is None:
+            entries.append(None)
+            continue
+        axes = (mesh_ax,) if isinstance(mesh_ax, str) else tuple(mesh_ax)
+        free = []
+        fac = 1
+        for a in axes:
+            if a in used:
+                continue
+            if axis_sizes is not None:
+                sz = axis_sizes.get(a, 1)
+                if spec.shape[d] % (fac * sz) != 0:
+                    continue
+                fac *= sz
+            free.append(a)
+        if not free:
+            entries.append(None)
+            continue
+        used.update(free)
+        entries.append(tuple(free) if len(free) > 1 else free[0])
+    return PartitionSpec(*entries)
+
+
+def make_pspecs(specs, rules, axis_sizes=None):
+    return jax.tree.map(
+        lambda s: spec_to_pspec(s, rules, axis_sizes),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def make_shardings(specs, mesh, rules):
+    axis_sizes = dict(mesh.shape)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_to_pspec(s, rules, axis_sizes)),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def param_bytes(specs, dtype=jnp.float32) -> int:
+    total = 0
+    for _, s in _leaves(specs):
+        total += int(np.prod(s.shape)) * jnp.dtype(dtype).itemsize
+    return total
+
+
+def param_count(specs) -> int:
+    return sum(int(np.prod(s.shape)) for _, s in _leaves(specs))
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )

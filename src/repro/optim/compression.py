@@ -1,0 +1,55 @@
+"""Cross-pod gradient compression: int8 quantization + error feedback.
+
+The multi-pod mesh all-reduces gradients over the `pod` axis (the
+FedAvg-equivalent site boundary, slowest links).  Compressing that
+exchange 4x (bf16->int8 per-tensor-scale) with an error-feedback buffer
+(residual added back next step, so the quantization bias vanishes) is the
+standard trick for WAN/DCN federation — exactly the paper's deployment
+regime.  Used by runtime/train_loop when `compress_pod_grads=True`;
+correctness (EF convergence) covered in tests/test_optim.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.max(jnp.abs(x.astype(f32))) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x.astype(f32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(f32) * scale
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, f32), params)
+
+
+def compress_with_ef(grads, ef_state):
+    """Returns (quantized tree of (q, scale), new_ef placeholder-corrected)."""
+
+    def one(g, e):
+        target = g.astype(f32) + e
+        q, s = quantize_int8(target)
+        deq = dequantize_int8(q, s)
+        return (q, s), target - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(ef_state)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    comp = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_ef = jax.tree.unflatten(treedef, [o[1] for o in outs])
+    return comp, new_ef
+
+
+def decompress(comp):
+    return jax.tree.map(
+        lambda qs: dequantize_int8(*qs),
+        comp,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2,
+    )

@@ -1,0 +1,152 @@
+"""Optimizers (pure functions, no optax): AdamW, Adafactor, SGD-momentum.
+
+Adafactor's factored second moment is what lets the 104B/132B/398B archs
+fit the single-pod memory budget (EXPERIMENTS.md §Dry-run) — full-Adam
+state for jamba-398b alone would exceed v5e HBM at 256 chips.
+
+State trees mirror the param tree so the same sharding rules apply
+(optimizer state is ZeRO-sharded exactly like its parameter).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+f32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (new_params, new_state)
+    name: str = "opt"
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(f32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), grads), g
+
+
+def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1, clip_norm=1.0) -> Optimizer:
+    def init(params):
+        return {
+            "mu": jax.tree.map(lambda p: jnp.zeros_like(p, f32), params),
+            "nu": jax.tree.map(lambda p: jnp.zeros_like(p, f32), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        c = state["count"] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(f32), state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(f32)), state["nu"], grads)
+        bc1 = 1 - b1 ** c.astype(f32)
+        bc2 = 1 - b2 ** c.astype(f32)
+
+        def upd(p, m, v):
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            return (p.astype(f32) - lr * (step + weight_decay * p.astype(f32))).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, {"mu": mu, "nu": nu, "count": c}, gnorm
+
+    return Optimizer(init, update, "adamw")
+
+
+def adafactor(eps=1e-30, clip_norm=1.0, weight_decay=0.0, min_dim_factored=128) -> Optimizer:
+    """Factored second moment for >=2D params whose trailing dims are large;
+    no first moment (memory ~ O(rows+cols) per matrix)."""
+
+    def factored(p):
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_factored and p.shape[-2] >= min_dim_factored
+
+    def init(params):
+        def mk(p):
+            if factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], f32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], f32),
+                }
+            return {"v": jnp.zeros_like(p, f32)}
+
+        return {
+            "v": jax.tree.map(mk, params, is_leaf=lambda x: hasattr(x, "shape")),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        c = state["count"] + 1
+        decay = 1.0 - (c.astype(f32) + 1.0) ** -0.8
+
+        def upd(p, g, v):
+            g = g.astype(f32)
+            g2 = jnp.square(g) + eps
+            if "vr" in v:
+                vr = decay * v["vr"] + (1 - decay) * g2.mean(-1)
+                vc = decay * v["vc"] + (1 - decay) * g2.mean(-2)
+                denom = (
+                    vr[..., None]
+                    * vc[..., None, :]
+                    / jnp.maximum(vr.mean(-1)[..., None, None], eps)
+                )
+                step = g * jax.lax.rsqrt(denom + eps)
+                nv = {"vr": vr, "vc": vc}
+            else:
+                nv = {"v": decay * v["v"] + (1 - decay) * g2}
+                step = g * jax.lax.rsqrt(nv["v"] + eps)
+            # Adafactor update clipping (RMS<=1)
+            rms = jnp.sqrt(jnp.mean(jnp.square(step)) + eps)
+            step = step / jnp.maximum(1.0, rms)
+            newp = p.astype(f32) - lr * (step + weight_decay * p.astype(f32))
+            return newp.astype(p.dtype), nv
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_v = treedef.flatten_up_to(state["v"])
+        outs = [upd(p, g, v) for p, g, v in zip(flat_p, flat_g, flat_v)]
+        new_params = jax.tree.unflatten(treedef, [o[0] for o in outs])
+        new_v = jax.tree.unflatten(treedef, [o[1] for o in outs])
+        return new_params, {"v": new_v, "count": c}, gnorm
+
+    return Optimizer(init, update, "adafactor")
+
+
+def sgdm(momentum=0.9, clip_norm=1.0) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, f32), params)}
+
+    def update(grads, state, params, lr):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(f32), state["mu"], grads)
+        new_params = jax.tree.map(
+            lambda p, m: (p.astype(f32) - lr * m).astype(p.dtype), params, mu
+        )
+        return new_params, {"mu": mu}, gnorm
+
+    return Optimizer(init, update, "sgdm")
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor, "sgdm": sgdm}[name](**kw)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, f32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr

@@ -1,0 +1,134 @@
+"""Logical-axis -> mesh-axis rules (t5x/MaxText style) + activation helpers.
+
+Two weight-sharding regimes:
+  * single-pod (data=16, model=16):  2-D sharding — `embed`-type dims FSDP
+    over `data`, heads/mlp/vocab/experts TP over `model`.
+  * multi-pod (pod=2, data=16, model=16): the `pod` axis is pure DP
+    (weights replicated across pods; batch sharded over (pod, data)).
+    This matches the paper's federation topology: each pod is a "site",
+    only gradient aggregates cross the pod boundary (FedAvg-equivalent,
+    optionally secure-aggregated / compressed — optim/compression.py).
+
+Activation logical axes:
+  act_batch    batch dim of activations           -> (pod,)data
+  act_seq      sequence dim                       -> None (SP variants opt-in)
+  act_heads    per-head activation dim            -> model
+  act_vocab    logits vocab dim                   -> model
+  cache_batch / cache_kv / cache_seq              -> shape-dependent (below)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+def base_rules(multi_pod: bool) -> dict[str, Any]:
+    batch = ("pod", "data") if multi_pod else ("data",)
+    return {
+        # weights
+        "layers": None,
+        "stack": None,
+        "vocab": "model",
+        "embed": "data",
+        "heads": "model",
+        "kv_heads": "model",
+        "ssm_heads": "model",
+        "mlp": "model",
+        "experts": "model",
+        "expert_in": "data",
+        "expert_mlp": None,
+        "head_dim": None,
+        "norm": None,
+        "conv": None,
+        "state": None,
+        "dt": "model",
+        # activations
+        "act_batch": batch,
+        "act_seq": None,
+        "act_heads": "model",
+        "act_kv_heads": "model",
+        "act_embed": None,
+        "act_vocab": "model",
+        "act_ff": "model",
+        # kv / ssm cache (defaults; overridden per shape)
+        "cache_batch": batch,
+        "cache_kv": "model",
+        "cache_seq": None,
+    }
+
+
+@dataclasses.dataclass
+class ShardingPolicy:
+    """Resolved rules for one (arch, shape, mesh) cell."""
+
+    rules: dict[str, Any]
+    mesh: Mesh | None = None
+
+    def spec(self, *axes: str | None, shape: tuple | None = None) -> PartitionSpec:
+        sizes = dict(self.mesh.shape) if self.mesh is not None else {}
+        used: set[str] = set()
+        entries = []
+        for d, ax in enumerate(axes):
+            m = self.rules.get(ax) if ax is not None else None
+            if m is None:
+                entries.append(None)
+                continue
+            cand = (m,) if isinstance(m, str) else tuple(m)
+            free = []
+            fac = 1
+            for a in cand:
+                if a in used:
+                    continue
+                if shape is not None and sizes:
+                    sz = sizes.get(a, 1)
+                    if shape[d] % (fac * sz) != 0:
+                        continue
+                    fac *= sz
+                free.append(a)
+            if not free:
+                entries.append(None)
+                continue
+            used.update(free)
+            entries.append(tuple(free) if len(free) > 1 else free[0])
+        return PartitionSpec(*entries)
+
+    def shard(self, x, *axes: str | None):
+        """with_sharding_constraint if a mesh is active, else identity."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(*axes, shape=x.shape))
+        )
+
+
+def make_policy(
+    mesh: Mesh | None,
+    *,
+    multi_pod: bool = False,
+    shape_kind: str = "train",
+    global_batch: int = 0,
+    seq_len: int = 0,
+    long_context: bool = False,
+) -> ShardingPolicy:
+    rules = base_rules(multi_pod)
+    if mesh is not None:
+        dp = 1
+        for ax in ("pod", "data"):
+            if ax in mesh.shape:
+                dp *= mesh.shape[ax]
+        # batch too small to shard over the full DP extent -> keep replicated
+        if global_batch and global_batch < dp:
+            rules["act_batch"] = None
+            rules["cache_batch"] = None
+            if long_context or seq_len >= 1 << 17:
+                # long-context decode: shard the KV cache over `data` instead
+                rules["cache_seq"] = "data"
+                rules["act_seq"] = "data"
+    return ShardingPolicy(rules=rules, mesh=mesh)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, PartitionSpec())

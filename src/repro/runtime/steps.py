@@ -1,0 +1,90 @@
+"""Step builders: the jit-able (train | prefill | decode) callables per
+architecture family, with optimizer fused into train_step (so dry-run
+memory analysis includes optimizer state — the number that actually
+gates large-model feasibility)."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encoder as ENC
+from repro.models import lm as LM
+from repro.optim.optimizers import Optimizer
+from repro.runtime.sharding import ShardingPolicy
+
+
+def model_loss_fn(cfg: ModelConfig):
+    if cfg.family == "encoder":
+        return ENC.loss_fn
+    return LM.loss_fn
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    pol: ShardingPolicy,
+    opt: Optimizer,
+    lr_fn=None,
+    grad_pspecs=None,
+):
+    """grad_pspecs: optional tree of PartitionSpecs (same tree as params).
+    Constraining gradients to the parameter sharding makes GSPMD emit
+    reduce-scatter instead of a full-replica all-reduce (ZeRO-2 gradient
+    sharding) — a ~dp-fold cut of the gradient-sync bytes
+    (EXPERIMENTS.md §Perf, iteration B4)."""
+    loss_fn = model_loss_fn(cfg)
+    lr_fn = lr_fn or (lambda step: 3e-4)
+    bf16_grads = getattr(cfg, "bf16_grads", False)
+
+    def train_step(params, opt_state, batch, step):
+        if bf16_grads:
+            # mixed-precision sync: differentiate the bf16 shadow -> bf16
+            # gradients cross the network, f32 master update (§Perf B5)
+            from repro.models.params import cast_tree
+
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, pol, p, batch), has_aux=True
+            )(cast_tree(params, jnp.bfloat16))
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, pol, p, batch), has_aux=True
+            )(params)
+        if grad_pspecs is not None and pol.mesh is not None:
+            from jax.sharding import NamedSharding
+
+            grads = jax.tree.map(
+                lambda g, s: jax.lax.with_sharding_constraint(
+                    g, NamedSharding(pol.mesh, s)
+                ),
+                grads,
+                grad_pspecs,
+            )
+        new_params, new_state, gnorm = opt.update(grads, opt_state, params, lr_fn(step))
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr_fn(step))
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, pol: ShardingPolicy):
+    if cfg.family == "encoder":
+        def encode_step(params, batch):
+            return ENC.encode(cfg, pol, params, batch["frames"])
+
+        return encode_step
+
+    def prefill_step(params, batch):
+        logits, cache = LM.prefill(cfg, pol, params, batch)
+        return logits[:, -1:, :], cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, pol: ShardingPolicy):
+    def decode_step(params, cache, tokens, pos):
+        return LM.decode_step(cfg, pol, params, cache, tokens, pos)
+
+    return decode_step

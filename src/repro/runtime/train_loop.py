@@ -1,0 +1,103 @@
+"""Fault-tolerant training loop: checkpoint/restart, straggler accounting,
+simulated-failure injection for the restart tests.
+
+The loop is deliberately dumb-robust (the MaxText philosophy): every state
+that matters — params, optimizer, data-iterator, step — round-trips
+through CheckpointManager, and `run()` can be killed at any step and
+relaunched with resume="auto" to continue bit-exactly (tests/
+test_checkpoint.py asserts loss-trajectory equality)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.models.params import init_params, make_shardings
+from repro.optim.optimizers import Optimizer
+from repro.runtime.sharding import ShardingPolicy
+from repro.runtime.steps import make_train_step
+
+
+class SimulatedFailure(Exception):
+    """Injected node failure (tests / chaos drills)."""
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    straggler_warn_factor: float = 2.0  # warn if a step takes 2x the median
+    fail_at_step: int | None = None  # inject SimulatedFailure (tests)
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        pol: ShardingPolicy,
+        opt: Optimizer,
+        data_stream,
+        tcfg: TrainerConfig,
+        lr_fn: Callable | None = None,
+        param_specs_fn=None,
+    ):
+        from repro.models import lm as LM
+        from repro.models import encoder as ENC
+
+        self.cfg, self.pol, self.opt, self.tcfg = cfg, pol, opt, tcfg
+        self.stream = data_stream
+        specs_fn = param_specs_fn or (
+            ENC.param_specs if cfg.family == "encoder" else LM.param_specs
+        )
+        self.specs = specs_fn(cfg)
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir)
+        self.train_step = jax.jit(make_train_step(cfg, pol, opt, lr_fn), donate_argnums=(0, 1))
+        self.step_times: list[float] = []
+        self.metrics_log: list[dict] = []
+
+    def init_state(self, seed: int = 0):
+        params = init_params(self.specs, jax.random.PRNGKey(seed))
+        return params, self.opt.init(params)
+
+    def run(self, resume: str = "auto", seed: int = 0):
+        start_step = 0
+        if resume == "auto" and self.ckpt.latest_step() is not None:
+            params, opt_state = self.init_state(seed)
+            (params, opt_state), extra, start_step = self.ckpt.restore(
+                (params, opt_state)
+            )
+            self.stream.load_state_dict(extra["stream"])
+            start_step += 1
+        else:
+            params, opt_state = self.init_state(seed)
+
+        for step in range(start_step, self.tcfg.total_steps):
+            if self.tcfg.fail_at_step is not None and step == self.tcfg.fail_at_step:
+                # persist nothing beyond the last checkpoint: a real node loss
+                raise SimulatedFailure(f"node lost at step {step}")
+            t0 = time.monotonic()
+            batch = {k: jax.numpy.asarray(v) for k, v in self.stream.next().items()}
+            params, opt_state, metrics = self.train_step(
+                params, opt_state, batch, jax.numpy.asarray(step)
+            )
+            metrics = {k: float(np.asarray(v)) for k, v in metrics.items()}
+            dt = time.monotonic() - t0
+            self.step_times.append(dt)
+            med = float(np.median(self.step_times[-20:]))
+            if dt > self.tcfg.straggler_warn_factor * med and len(self.step_times) > 5:
+                metrics["straggler"] = dt / med  # logged; scheduler hook point
+            metrics["step"] = step
+            self.metrics_log.append(metrics)
+            if (step + 1) % self.tcfg.ckpt_every == 0 or step + 1 == self.tcfg.total_steps:
+                self.ckpt.save(
+                    step, (params, opt_state), extra={"stream": self.stream.state_dict()}
+                )
+        self.ckpt.wait()
+        return params, opt_state

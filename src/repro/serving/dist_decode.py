@@ -1,0 +1,58 @@
+"""Distributed flash-decode: single-token attention over a KV cache whose
+SEQUENCE dim is sharded across a mesh axis (§Perf cell A3 as runnable code).
+
+Each shard computes (o, m, l) softmax partials over its cache slice, then
+a 3-tensor combine (pmax + 2 psums of per-head scalars/rows) produces the
+exact global attention — the same math as
+kernels/decode_attention.combine_partials, validated in
+tests/test_kernels.py and tests/test_serving.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def _local_partials(q, k_loc, v_loc, lengths, *, axis_name):
+    """Per-shard partials + cross-shard flash-decode merge."""
+    axis = jax.lax.axis_index(axis_name)
+    shard_len = k_loc.shape[1]
+    local_valid = jnp.clip(lengths - axis * shard_len, 0, shard_len)
+    b, h, dh = q.shape
+    kv = k_loc.shape[2]
+    qr = q.astype(jnp.float32).reshape(b, kv, h // kv, dh)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qr, k_loc.astype(jnp.float32)) / np.sqrt(dh)
+    valid = jnp.arange(shard_len)[None, None, None, :] < local_valid[:, None, None, None]
+    logits = jnp.where(valid, logits, -1e30)
+    m = logits.max(-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    l = p.sum(-1, keepdims=True)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_loc.astype(jnp.float32))
+    m_g = jax.lax.pmax(m, axis_name)
+    scale = jnp.exp(m - m_g)
+    l_g = jax.lax.psum(l * scale, axis_name)
+    o_g = jax.lax.psum(o * scale, axis_name)
+    out = (o_g / jnp.maximum(l_g, 1e-30)).reshape(b, h, dh)
+    return out.astype(q.dtype)
+
+
+def dist_decode_attention(
+    q,  # (B, H, dh) replicated over the shard axis
+    k_cache,  # (B, S, KV, dh), dim 1 sharded over `axis_name`
+    v_cache,
+    lengths,  # (B,) global valid lengths
+    mesh,
+    axis_name: str = "data",
+):
+    fn = jax.shard_map(
+        partial(_local_partials, axis_name=axis_name),
+        mesh=mesh,
+        in_specs=(P(), P(None, axis_name, None, None), P(None, axis_name, None, None), P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(q, k_cache, v_cache, lengths)

@@ -1,0 +1,81 @@
+"""RAG serving engine: batched prefill + decode with the C-FedRAG pipeline.
+
+Request flow (paper Fig. 2/3 in serving form):
+  query -> federated retrieval (core.retrieval / orchestrator)
+        -> enclave re-rank -> prompt build -> batched prefill -> decode loop
+
+Batching: requests are grouped to `max_batch`, prompts right-aligned into a
+common cache; decode proceeds until EOS or `max_new_tokens`.  The engine is
+deliberately synchronous (single-host simulation); the scheduler hook
+points (queue, deadline, quorum) mirror a production continuous-batching
+server."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import EOS, PAD, HashTokenizer
+from repro.models import lm as LM
+from repro.runtime.sharding import ShardingPolicy
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_batch: int = 8
+    max_prompt_len: int = 512
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, pol: ShardingPolicy, params, scfg: ServeConfig):
+        self.cfg, self.pol, self.params, self.scfg = cfg, pol, params, scfg
+        self._prefill = jax.jit(
+            lambda p, b: LM.prefill(cfg, pol, p, b, cache_len=scfg.max_prompt_len + scfg.max_new_tokens)
+        )
+        self._decode = jax.jit(
+            lambda p, c, t, pos: LM.decode_step(cfg, pol, p, c, t, pos)
+        )
+        self.queue: list[np.ndarray] = []
+
+    def submit(self, prompt_tokens: np.ndarray):
+        self.queue.append(prompt_tokens.ravel())
+
+    def _pack(self, prompts: list[np.ndarray]) -> np.ndarray:
+        width = self.scfg.max_prompt_len
+        out = np.zeros((len(prompts), width), np.int32)
+        for i, p in enumerate(prompts):
+            p = p[-width:]
+            out[i, : len(p)] = p  # left-aligned; PAD tail
+        return out
+
+    def step_batch(self) -> list[np.ndarray]:
+        """Serve up to max_batch queued requests; returns answer token rows."""
+        if not self.queue:
+            return []
+        batch, self.queue = self.queue[: self.scfg.max_batch], self.queue[self.scfg.max_batch :]
+        lengths = np.array([min(len(p), self.scfg.max_prompt_len) for p in batch])
+        tokens = self._pack(batch)
+        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(tokens)})
+        # logits at each row's true last position
+        last = np.asarray(logits)[np.arange(len(batch)), :, :][:, -1, :] if logits.shape[1] == 1 else (
+            np.asarray(logits)[np.arange(len(batch)), lengths - 1, :]
+        )
+        tok = last.argmax(-1).astype(np.int32)
+        outs = [tok.copy()]
+        pos = int(lengths.max())  # uniform write position (packed batch)
+        cur = jnp.asarray(tok)[:, None]
+        for t in range(1, self.scfg.max_new_tokens):
+            logits, cache = self._decode(self.params, cache, cur, pos)
+            cur = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
+            outs.append(np.asarray(cur)[:, 0])
+            pos += 1
+            if all((np.stack(outs, 1) == EOS).any(1)):
+                break
+        ans = np.stack(outs, 1)
+        return [row for row in ans]

@@ -1,0 +1,82 @@
+"""Paper §2.2/§4.4 advanced variations: provider selection, query rewriting,
+multi-LLM answer fusion."""
+import numpy as np
+import pytest
+
+from repro.core.advanced import (
+    AnswerFusion,
+    GeneratorEndpoint,
+    ProviderSelector,
+    QueryRewriter,
+    build_expansion_maps,
+)
+from repro.core.pipeline import CFedRAGConfig, CFedRAGSystem
+from repro.data.corpus import make_federated_corpus
+from repro.data.tokenizer import HashTokenizer
+
+
+@pytest.fixture(scope="module")
+def system():
+    corpus = make_federated_corpus(n_facts=96, n_distractors=96, n_queries=24, seed=5)
+    return CFedRAGSystem(
+        corpus, CFedRAGConfig(aggregation="embedding_rank", split_by="corpus")
+    )
+
+
+def test_selector_routes_to_gold_provider(system):
+    sel = ProviderSelector(system.providers, system.embed_fn)
+    hits = 0
+    queries = system.corpus.queries[:16]
+    for q in queries:
+        gold_site = system.corpus.chunks[q.gold_chunk_id]
+        chosen = sel.select(system.tok.encode(q.text, max_len=24), system.providers, top_p=2)
+        names = set()
+        for p in chosen:
+            names.update(c.corpus for c in p.chunks[:1])
+        hits += any(gold_site.corpus == c.corpus for p in chosen for c in p.chunks[:1])
+    # corpus centroids should route most queries toward the right silo
+    assert hits >= len(queries) * 0.4, f"selector routed only {hits}/{len(queries)}"
+
+
+def test_selector_reduces_dispatch_fanout(system):
+    sel = ProviderSelector(system.providers, system.embed_fn)
+    q = system.corpus.queries[0]
+    chosen = sel.select(system.tok.encode(q.text, max_len=24), system.providers, top_p=2)
+    assert len(chosen) == 2 < len(system.providers)
+
+
+def test_query_rewriter_expands_with_provider_vocab(system):
+    maps = build_expansion_maps(system.providers, system.tok)
+    rw = QueryRewriter(maps)
+    q = system.tok.encode(system.corpus.queries[0].text, max_len=12)
+    pid = system.providers[0].provider_id
+    out = rw.rewrite(q, pid)
+    assert len(out) >= len(q)
+    assert (out[: len(q)] == q).all(), "original query preserved"
+
+
+def test_answer_fusion_votes_and_routes():
+    def mk_gen(tok):
+        return lambda prompt: np.asarray([[tok, 2]])
+
+    eps = [
+        GeneratorEndpoint("pubmed-expert", mk_gen(101), domains=(0,)),
+        GeneratorEndpoint("generalist", mk_gen(202), domains=()),
+        GeneratorEndpoint("texbook-expert", mk_gen(303), domains=(3,)),
+    ]
+    fusion = AnswerFusion(eps, top_m=2)
+    ctx = {"providers": np.asarray([0, 0, 0, 3])}
+    chosen = fusion.route(ctx)
+    assert chosen[0].name == "pubmed-expert"  # most context affinity
+    out = fusion.answer(np.zeros((1, 4), np.int32), ctx)
+    assert out["answer_token"] == 101  # top-ranked expert wins the vote
+    assert set(out["models"]) <= {"pubmed-expert", "generalist", "texbook-expert"}
+
+
+def test_quorum_sweep_graceful():
+    from benchmarks.quorum_sweep import run
+
+    rows = run(n_queries=16)
+    recalls = [r["recall_at_8"] for r in rows]
+    assert recalls[0] >= recalls[-1]
+    assert all(r >= 0 for r in recalls)  # every config answered (no crash)

@@ -1,0 +1,81 @@
+"""Data substrate: tokenizer determinism, corpus provenance, stream resume."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data.corpus import CORPORA, SITE_OF, make_federated_corpus
+from repro.data.embeddings import bag_embed
+from repro.data.pipeline import LMBatchStream
+from repro.data.tokenizer import N_SPECIAL, HashTokenizer
+
+
+@given(st.text(alphabet=st.characters(min_codepoint=33, max_codepoint=126), min_size=1, max_size=30))
+@settings(max_examples=30, deadline=None)
+def test_tokenizer_deterministic_and_in_range(word):
+    tok = HashTokenizer(4096)
+    t1, t2 = tok.token(word), tok.token(word)
+    assert t1 == t2
+    assert N_SPECIAL <= t1 < 4096
+
+
+def test_tokenizer_case_insensitive():
+    tok = HashTokenizer()
+    assert tok.token("Aspirin") == tok.token("aspirin")
+
+
+def test_encode_fixed_len():
+    tok = HashTokenizer()
+    out = tok.encode("a b c", max_len=10)
+    assert out.shape == (10,) and out.dtype == np.int32
+
+
+def test_corpus_provenance_consistent():
+    c = make_federated_corpus(n_facts=32, n_distractors=16, n_queries=20)
+    for q in c.queries:
+        gold = c.chunks[q.gold_chunk_id]
+        assert gold.chunk_id == q.gold_chunk_id
+        assert q.answer in gold.text, "gold chunk must contain the answer"
+        assert gold.corpus == q.corpus
+    for ch in c.chunks:
+        assert ch.site == SITE_OF[ch.corpus]
+    assert {ch.corpus for ch in c.chunks} == set(CORPORA)
+
+
+def test_corpus_query_mix_is_skewed():
+    c = make_federated_corpus(n_facts=300, n_queries=200, seed=3)
+    frac_pubmed = sum(q.corpus == "pubmed" for q in c.queries) / len(c.queries)
+    assert frac_pubmed > 0.35, "pubmed must dominate (Table 1 topology)"
+
+
+def test_stream_resume_exact():
+    s1 = LMBatchStream(2, 16, 1024, seed=7)
+    b1 = [s1.next() for _ in range(5)]
+    state = s1.state_dict()
+    b_next = s1.next()
+    s2 = LMBatchStream(2, 16, 1024, seed=0)
+    s2.load_state_dict(state)
+    b2 = s2.next()
+    assert (b_next["tokens"] == b2["tokens"]).all(), "resumed stream must continue exactly"
+
+
+def test_copy_task_structure():
+    from repro.data.tokenizer import ANS, QRY, SEP
+
+    s = LMBatchStream(4, 64, 512, seed=1, copy_task_frac=1.0)
+    b = s.next()
+    tokens, targets = b["tokens"][0], b["targets"][0]
+    assert (tokens == QRY).any() and (tokens == ANS).any() and (tokens == SEP).any()
+    pos_ans = int(np.argmax(tokens == ANS))
+    pos_sep = int(np.argmax(tokens == SEP))
+    # the supervised answer (target at ANS) is the token after the SEP marker
+    assert targets[pos_ans] == tokens[pos_sep + 1], "answer must be the marked value"
+    # only the answer position is supervised on copy rows
+    assert (targets[:pos_ans] == -1).all() and (targets[pos_ans + 1 :] == -1).all()
+
+
+def test_bag_embed_similarity_orders():
+    tok = HashTokenizer()
+    a = tok.encode("heart attack symptoms treatment", max_len=16)[None]
+    b = tok.encode("heart attack symptoms diagnosis", max_len=16)[None]
+    c = tok.encode("jupiter orbital mechanics telescope", max_len=16)[None]
+    ea, eb, ec = (np.asarray(bag_embed(x)) for x in (a, b, c))
+    assert (ea @ eb.T) > (ea @ ec.T), "lexical overlap must dominate similarity"

@@ -1,0 +1,115 @@
+"""Per-kernel allclose sweeps (interpret=True) against the pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.kernels.decode_attention.kernel import combine_partials, decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.retrieval_topk.kernel import retrieval_topk_pallas
+from repro.kernels.retrieval_topk.ref import retrieval_topk_ref
+from repro.kernels.ssd_scan.kernel import ssd_chunk_pallas
+from repro.kernels.ssd_scan.ref import ssd_chunk_ref
+
+
+# ---------------- retrieval_topk ----------------
+@pytest.mark.parametrize("q,n,d,k", [(5, 100, 32, 4), (16, 257, 64, 8), (33, 1024, 128, 16), (1, 50, 16, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_retrieval_topk_sweep(q, n, d, k, dtype):
+    kk = jax.random.PRNGKey(q * n)
+    qs = jax.random.normal(kk, (q, d), dtype)
+    cs = jax.random.normal(jax.random.fold_in(kk, 1), (n, d), dtype)
+    s_p, i_p = retrieval_topk_pallas(qs, cs, k, bq=8, bn=64)
+    s_r, i_r = retrieval_topk_ref(qs, cs, k)
+    assert_allclose(np.asarray(s_p), np.asarray(s_r), rtol=2e-2, atol=2e-2)
+    # indices may swap under score ties in bf16; check score-equivalence
+    gathered = np.take_along_axis(
+        np.asarray(qs, np.float32) @ np.asarray(cs, np.float32).T, np.asarray(i_p), axis=1
+    )
+    assert_allclose(gathered, np.asarray(s_r), rtol=2e-2, atol=2e-2)
+
+
+@given(
+    q=st.integers(1, 12),
+    n=st.integers(10, 300),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=15, deadline=None)
+def test_retrieval_topk_property(q, n, k, seed):
+    kk = jax.random.PRNGKey(seed)
+    qs = jax.random.normal(kk, (q, 16))
+    cs = jax.random.normal(jax.random.fold_in(kk, 1), (n, 16))
+    s, i = retrieval_topk_pallas(qs, cs, k, bq=8, bn=32)
+    s, i = np.asarray(s), np.asarray(i)
+    assert (np.diff(s, axis=1) <= 1e-6).all(), "scores sorted desc"
+    assert ((i >= 0) & (i < n)).all(), "indices valid (padding never leaks)"
+    full = np.asarray(qs) @ np.asarray(cs).T
+    assert_allclose(np.sort(s, 1), np.sort(np.sort(full, 1)[:, -k:], 1), rtol=1e-5, atol=1e-5)
+
+
+# ---------------- flash attention ----------------
+@pytest.mark.parametrize("sq,sk,h,kv,dh", [(32, 32, 4, 4, 16), (64, 64, 8, 2, 32), (128, 128, 4, 1, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(sq, sk, h, kv, dh, causal, dtype):
+    kk = jax.random.PRNGKey(sq + h)
+    q = jax.random.normal(kk, (2, sq, h, dh), dtype)
+    k = jax.random.normal(jax.random.fold_in(kk, 1), (2, sk, kv, dh), dtype)
+    v = jax.random.normal(jax.random.fold_in(kk, 2), (2, sk, kv, dh), dtype)
+    o_p = flash_attention_pallas(q, k, v, causal=causal, bq=16, bk=16)
+    o_r = flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert_allclose(np.asarray(o_p, np.float32), np.asarray(o_r, np.float32), rtol=tol, atol=tol)
+
+
+# ---------------- decode attention ----------------
+@pytest.mark.parametrize("b,s,h,kv,dh,bs", [(2, 64, 8, 4, 32, 16), (4, 128, 4, 4, 16, 32), (1, 256, 16, 2, 64, 64)])
+def test_decode_attention_sweep(b, s, h, kv, dh, bs):
+    kk = jax.random.PRNGKey(b * s)
+    q = jax.random.normal(kk, (b, h, dh))
+    kc = jax.random.normal(jax.random.fold_in(kk, 1), (b, s, kv, dh))
+    vc = jax.random.normal(jax.random.fold_in(kk, 2), (b, s, kv, dh))
+    lens = jnp.asarray(np.random.default_rng(0).integers(1, s + 1, size=b))
+    o_p = decode_attention_pallas(q, kc, vc, lens, bs=bs)
+    o_r = decode_attention_ref(q, kc, vc, lens)
+    assert_allclose(np.asarray(o_p), np.asarray(o_r), rtol=2e-5, atol=2e-5)
+
+
+def test_decode_partials_combine_equals_monolithic():
+    """flash-decode: combining per-shard partials == attention over full cache."""
+    kk = jax.random.PRNGKey(7)
+    b, s, h, kv, dh, shards = 2, 128, 8, 4, 32, 4
+    q = jax.random.normal(kk, (b, h, dh))
+    kc = jax.random.normal(jax.random.fold_in(kk, 1), (b, s, kv, dh))
+    vc = jax.random.normal(jax.random.fold_in(kk, 2), (b, s, kv, dh))
+    lens = jnp.full((b,), s)
+    full = decode_attention_ref(q, kc, vc, lens)
+    os_, ms_, ls_ = [], [], []
+    for i in range(shards):
+        sl = slice(i * s // shards, (i + 1) * s // shards)
+        o, m, l = decode_attention_pallas(
+            q, kc[:, sl], vc[:, sl], jnp.full((b,), s // shards), bs=16, return_partials=True
+        )
+        os_.append(o), ms_.append(m), ls_.append(l)
+    combined = combine_partials(os_, ms_, ls_).reshape(b, h, dh)
+    assert_allclose(np.asarray(combined), np.asarray(full, np.float32), rtol=2e-5, atol=2e-5)
+
+
+# ---------------- ssd scan ----------------
+@pytest.mark.parametrize("b,l,h,hd,ds", [(1, 16, 2, 8, 8), (2, 32, 4, 16, 8), (2, 64, 2, 32, 16)])
+def test_ssd_chunk_sweep(b, l, h, hd, ds):
+    kk = jax.random.PRNGKey(l)
+    x = jax.random.normal(kk, (b, l, h, hd))
+    bb = jax.random.normal(jax.random.fold_in(kk, 1), (b, l, h, ds))
+    cc = jax.random.normal(jax.random.fold_in(kk, 2), (b, l, h, ds))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(kk, 3), (b, l, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(kk, 4), (h,)))
+    outs_p = ssd_chunk_pallas(x, bb, cc, dt, a)
+    outs_r = ssd_chunk_ref(x, bb, cc, dt, a)
+    for o_p, o_r in zip(outs_p, outs_r):
+        assert_allclose(np.asarray(o_p), np.asarray(o_r), rtol=1e-4, atol=1e-4)

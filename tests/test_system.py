@@ -1,0 +1,102 @@
+"""End-to-end C-FedRAG behaviour (the paper's Table-1 mechanism + Alg. 1
+robustness semantics)."""
+import numpy as np
+import pytest
+
+from repro.core.pipeline import (
+    CFedRAGConfig,
+    CFedRAGSystem,
+    centralized_system,
+    single_silo_system,
+)
+from repro.data.corpus import CORPORA, make_federated_corpus
+from repro.data.tokenizer import HashTokenizer
+from repro.launch.serve import overlap_reranker
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_federated_corpus(n_facts=96, n_distractors=96, n_queries=48, seed=1)
+
+
+@pytest.fixture(scope="module")
+def fed(corpus):
+    return CFedRAGSystem(corpus, CFedRAGConfig(aggregation="embedding_rank"))
+
+
+def test_federated_matches_centralized_recall(corpus, fed):
+    """Key claim: federated retrieval recovers the centralized context."""
+    r_fed = fed.eval_retrieval(32)
+    r_cent = centralized_system(corpus).eval_retrieval(32)
+    assert r_fed["recall_at_n"] >= r_cent["recall_at_n"] - 0.05
+
+
+def test_single_silo_much_worse(corpus, fed):
+    r_fed = fed.eval_retrieval(32)
+    worst = min(
+        single_silo_system(corpus, c).eval_retrieval(32)["recall_at_n"] for c in CORPORA
+    )
+    assert r_fed["recall_at_n"] > worst + 0.2, "federation must beat the weakest silo clearly"
+
+
+def test_rerank_not_worse_than_embedding_rank(corpus):
+    tok = HashTokenizer()
+    emb = CFedRAGSystem(corpus, CFedRAGConfig(aggregation="embedding_rank"), tokenizer=tok)
+    rr = CFedRAGSystem(
+        corpus, CFedRAGConfig(aggregation="rerank"), tokenizer=tok, reranker=overlap_reranker(tok)
+    )
+    assert rr.eval_retrieval(32)["recall_at_n"] >= emb.eval_retrieval(32)["recall_at_n"] - 0.05
+
+
+def test_quorum_tolerates_provider_failure(corpus):
+    sys_ = CFedRAGSystem(corpus, CFedRAGConfig(aggregation="embedding_rank", quorum=1))
+    sys_.providers[0].fail = True
+    res = sys_.orchestrator.answer(corpus.queries[0].text)
+    assert res["n_providers"] == len(sys_.providers) - 1  # k_n < k, still answers
+
+
+def test_quorum_violation_raises(corpus):
+    sys_ = CFedRAGSystem(corpus, CFedRAGConfig(quorum=2))
+    for p in sys_.providers:
+        p.fail = True
+    with pytest.raises(RuntimeError, match="quorum"):
+        sys_.orchestrator.answer(corpus.queries[0].text)
+
+
+def test_context_never_exceeds_window(corpus, fed):
+    res = fed.orchestrator.answer(corpus.queries[0].text)
+    assert len(res["context"]["chunk_ids"]) <= fed.cfg.n_global
+    assert res["context"]["n_candidates"] <= fed.cfg.m_local * len(fed.providers)
+
+
+def test_provider_payload_is_filtered(corpus, fed):
+    """ProvenanceStripFilter: only whitelisted keys leave the provider."""
+    p = fed.providers[0]
+    out = p.retrieve(fed.tok.encode(corpus.queries[0].text, max_len=24), 4)
+    assert set(out) <= {"chunk_tokens", "scores", "chunk_ids", "provider"}
+
+
+def test_transport_is_sealed(corpus, fed):
+    """The orchestrator<->provider payload is AEAD-sealed: flipping one byte
+    must break integrity."""
+    from repro.core.confidential import IntegrityError
+    from repro.core.provider import pack
+
+    p = fed.providers[0]
+    ch = getattr(p, "_orch_channel")
+    nonce, sealed = ch.seal(pack({"query_tokens": np.zeros(4, np.int32), "m": np.int64(2)}))
+    corrupted = bytearray(sealed)
+    corrupted[len(corrupted) // 2] ^= 0xFF
+    with pytest.raises(IntegrityError):
+        p.channel.open(nonce, bytes(corrupted))
+
+
+def test_prompt_contains_retrieved_context(corpus, fed):
+    q = corpus.queries[0]
+    res = fed.orchestrator.answer(q.text)
+    prompt = fed.orchestrator.build_prompt(q.text, res["context"])
+    # the gold chunk's distinctive value token should appear in the prompt
+    gold_tokens = set(fed.tok.encode(corpus.chunks[q.gold_chunk_id].text).tolist())
+    if q.gold_chunk_id in list(res["context"]["chunk_ids"]):
+        overlap = gold_tokens & set(prompt[0].tolist())
+        assert len(overlap) > 5
