@@ -1,8 +1,20 @@
-"""End-to-end C-FedRAG pipeline latency decomposition (paper Fig. 2/3 flow):
-dispatch+seal / local retrieval / aggregate (rerank) / prompt build,
-per stage, per query — the serving-cost picture of the architecture."""
+"""End-to-end C-FedRAG pipeline benchmarks (paper Fig. 2/3 flow).
+
+Two views of the serving cost picture:
+  * stage latency — dispatch+seal / local retrieval / aggregate (rerank) /
+    prompt build, per stage, per query
+  * throughput — queries/sec through ``answer`` (B=1) vs ``answer_batch``
+    at B in {1, 8, 32}: one sealed request per provider per batch, so
+    seal/serialize/embed overheads amortize across the batch
+
+``main(["--json"])`` (or benchmarks/run.py --json) writes BENCH_e2e.json
+rows with the stable ``{name, us, derived}`` schema so the perf
+trajectory is tracked across PRs.
+"""
 from __future__ import annotations
 
+import functools
+import json
 import time
 
 import numpy as np
@@ -12,15 +24,32 @@ from repro.data.corpus import make_federated_corpus
 from repro.data.tokenizer import HashTokenizer
 from repro.launch.serve import overlap_reranker
 
+BATCH_SIZES = (1, 8, 32)
 
-def run(n_queries=40):
-    corpus = make_federated_corpus(n_facts=192, n_distractors=192, n_queries=n_queries)
+
+N_QUERIES = 64
+
+
+@functools.lru_cache(maxsize=1)
+def _build_system():
+    """Corpus + system shared by the stage-latency and throughput passes
+    (corpus generation + index embedding is the dominant setup cost)."""
+    corpus = make_federated_corpus(n_facts=192, n_distractors=192, n_queries=N_QUERIES)
     tok = HashTokenizer()
     sys_ = CFedRAGSystem(
         corpus, CFedRAGConfig(aggregation="rerank"), tokenizer=tok, reranker=overlap_reranker(tok)
     )
+    return corpus, sys_
+
+
+def run(n_queries=40):
+    """Per-stage latency decomposition (sequential path)."""
+    corpus, sys_ = _build_system()
+    queries = corpus.queries[:n_queries]
+    n_queries = len(queries)
+    sys_.orchestrator.answer(corpus.queries[0].text)  # warm jit caches
     stages = {"collect": 0.0, "aggregate": 0.0, "prompt": 0.0}
-    for q in corpus.queries[:n_queries]:
+    for q in queries:
         t0 = time.monotonic()
         responses = sys_.orchestrator.collect_contexts(q.text)
         t1 = time.monotonic()
@@ -31,14 +60,56 @@ def run(n_queries=40):
         stages["collect"] += t1 - t0
         stages["aggregate"] += t2 - t1
         stages["prompt"] += t3 - t2
-    return [(k, v / n_queries * 1e6) for k, v in stages.items()]
+    return [(f"e2e_{k}", v / n_queries * 1e6, "per-query") for k, v in stages.items()]
+
+
+def run_throughput(n_queries=N_QUERIES, batch_sizes=BATCH_SIZES):
+    """Queries/sec through the full answer path at each batch size."""
+    corpus, sys_ = _build_system()
+    texts = [q.text for q in corpus.queries[:n_queries]]
+    # warm the jit caches for every batch shape before timing
+    sys_.orchestrator.answer(texts[0])
+    for b in batch_sizes:
+        if b > 1:
+            sys_.orchestrator.answer_batch(texts[:b])
+    rows = []
+    base_qps = None
+    for b in batch_sizes:
+        t0 = time.monotonic()
+        if b == 1:
+            for t in texts:
+                sys_.orchestrator.answer(t)
+        else:
+            for i in range(0, len(texts), b):
+                sys_.orchestrator.answer_batch(texts[i : i + b])
+        dt = time.monotonic() - t0
+        qps = len(texts) / dt
+        if base_qps is None:
+            base_qps = qps
+        rows.append(
+            (f"e2e_throughput_b{b}", dt / len(texts) * 1e6, f"{qps:.1f} qps ({qps / base_qps:.2f}x vs b1)")
+        )
+    return rows
+
+
+def write_json(rows, path="BENCH_e2e.json"):
+    payload = [{"name": n, "us": round(us, 1), "derived": d} for n, us, d in rows]
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
 
 
 def main(argv=None):
-    for name, us in run():
-        print(f"e2e_{name},{us:.1f},per-query")
+    argv = list(argv or [])
+    rows = run() + run_throughput()
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if "--json" in argv:
+        print(f"wrote {write_json(rows)}")
     return 0
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    main(sys.argv[1:])

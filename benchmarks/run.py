@@ -1,12 +1,21 @@
 """Benchmark harness: one entry per paper table/figure + substrate perf.
 Prints ``name,us_per_call,derived`` CSV rows (and richer per-table output).
+
+``--json`` additionally writes BENCH_kernels.json and BENCH_e2e.json with
+the stable ``[{name, us, derived}, ...]`` schema, so CI can diff perf
+across PRs without parsing stdout.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", action="store_true", help="emit BENCH_*.json artifacts")
+    args = ap.parse_args(argv)
+
     from benchmarks import e2e_pipeline, kernel_perf, table1_federated_rag, table2_llm_ablation
 
     print("== Table 1: federated RAG vs silo vs centralized (recall@8 on provenance corpus) ==")
@@ -20,10 +29,18 @@ def main() -> None:
     print(f"table2,{(time.monotonic()-t0)*1e6:.0f},total")
 
     print("\n== kernel perf (CPU wall; TPU roofline in EXPERIMENTS.md) ==")
-    kernel_perf.main()
+    kernel_rows = kernel_perf.run()
+    for name, us, derived in kernel_rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        print(f"wrote {e2e_pipeline.write_json(kernel_rows, 'BENCH_kernels.json')}")
 
-    print("\n== e2e pipeline stage latency ==")
-    e2e_pipeline.main()
+    print("\n== e2e pipeline stage latency + batched throughput ==")
+    e2e_rows = e2e_pipeline.run() + e2e_pipeline.run_throughput()
+    for name, us, derived in e2e_rows:
+        print(f"{name},{us:.1f},{derived}")
+    if args.json:
+        print(f"wrote {e2e_pipeline.write_json(e2e_rows)}")
 
     print("\n== fault tolerance: recall vs providers down (Alg. 1 k_n <= k) ==")
     from benchmarks import quorum_sweep

@@ -1,0 +1,47 @@
+"""Tier-1-adjacent smoke: run the quickstart example under a 60s budget.
+
+    python benchmarks/smoke.py
+
+Exercises the full import surface + Algorithm 1 end to end (providers,
+attested channels, batched eval) in a subprocess, so CI surfaces both
+perf regressions (budget blown) and import breakage without waiting for
+the full benchmark suite.  Exit code 0 iff the example succeeds in time.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+BUDGET_S = 60
+
+
+def main() -> int:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, JAX_PLATFORMS=os.environ.get("JAX_PLATFORMS", "cpu"))
+    t0 = time.monotonic()
+    try:
+        r = subprocess.run(
+            [sys.executable, os.path.join(repo, "examples", "quickstart.py")],
+            cwd=repo,
+            env=env,
+            timeout=BUDGET_S,
+            capture_output=True,
+            text=True,
+        )
+    except subprocess.TimeoutExpired:
+        print(f"smoke_quickstart,FAIL,budget {BUDGET_S}s exceeded")
+        return 1
+    dt = time.monotonic() - t0
+    if r.returncode != 0:
+        print(r.stdout[-2000:])
+        print(r.stderr[-2000:], file=sys.stderr)
+        print(f"smoke_quickstart,FAIL,exit {r.returncode}")
+        return 1
+    print(f"smoke_quickstart,{dt*1e6:.0f},budget {BUDGET_S}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

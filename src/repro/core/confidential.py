@@ -24,6 +24,8 @@ import hashlib
 import hmac
 import secrets
 
+import numpy as np
+
 # RFC 3526 MODP group 14 (2048-bit)
 _P_HEX = (
     "FFFFFFFFFFFFFFFFC90FDAA22168C234C4C6628B80DC1CD129024E088A67CC74"
@@ -59,19 +61,28 @@ def hkdf(key_material: bytes, info: bytes, length: int = 32, salt: bytes = b"") 
 
 
 def _keystream(key: bytes, nonce: bytes, n: int) -> bytes:
-    out = b""
-    ctr = 0
-    while len(out) < n:
-        out += hmac.new(key, nonce + ctr.to_bytes(8, "little"), hashlib.sha256).digest()
-        ctr += 1
-    return out[:n]
+    # hmac.digest is the C one-shot path — same bytes as
+    # hmac.new(...).digest(), ~5x faster on the many-block payloads the
+    # batched retrieval path seals
+    blocks = [
+        hmac.digest(key, nonce + ctr.to_bytes(8, "little"), "sha256")
+        for ctr in range((n + 31) // 32)
+    ]
+    return b"".join(blocks)[:n]
+
+
+def _xor(data: bytes, ks: bytes) -> bytes:
+    """Vectorized XOR — the seal/open hot path for batched (B, m, S)
+    retrieval payloads, where a per-byte python loop would dominate."""
+    return np.bitwise_xor(
+        np.frombuffer(data, np.uint8), np.frombuffer(ks, np.uint8)
+    ).tobytes()
 
 
 def aead_seal(key: bytes, nonce: bytes, plaintext: bytes, aad: bytes = b"") -> bytes:
     enc_key = hkdf(key, b"enc")
     mac_key = hkdf(key, b"mac")
-    ks = _keystream(enc_key, nonce, len(plaintext))
-    ct = bytes(a ^ b for a, b in zip(plaintext, ks))
+    ct = _xor(plaintext, _keystream(enc_key, nonce, len(plaintext)))
     tag = hmac.new(mac_key, aad + nonce + ct, hashlib.sha256).digest()
     return ct + tag
 
@@ -83,8 +94,7 @@ def aead_open(key: bytes, nonce: bytes, sealed: bytes, aad: bytes = b"") -> byte
     if not hmac.compare_digest(tag, expect):
         raise IntegrityError("AEAD tag mismatch")
     enc_key = hkdf(key, b"enc")
-    ks = _keystream(enc_key, nonce, len(ct))
-    return bytes(a ^ b for a, b in zip(ct, ks))
+    return _xor(ct, _keystream(enc_key, nonce, len(ct)))
 
 
 class IntegrityError(Exception):

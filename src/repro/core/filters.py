@@ -32,9 +32,13 @@ class MaxChunksFilter(Filter):
     def __call__(self, payload: Payload) -> Payload:
         if "chunk_tokens" in payload:
             payload = dict(payload)
-            for k in ("chunk_tokens", "scores", "chunk_ids"):
+            # truncate the candidate axis: last-but-one for (.., m, S)
+            # chunk tokens, last for (.., m) scores/ids — works for both
+            # single-query and (B, ...) batched payloads
+            payload["chunk_tokens"] = payload["chunk_tokens"][..., : self.max_chunks, :]
+            for k in ("scores", "chunk_ids"):
                 if k in payload:
-                    payload[k] = payload[k][: self.max_chunks]
+                    payload[k] = payload[k][..., : self.max_chunks]
         return payload
 
 

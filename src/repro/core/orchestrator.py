@@ -10,6 +10,12 @@ Flow per query:
        rerank          cross-encoder F_aggr over all candidates (paper's
                        bge-reranker-base role), keep global top-n
   5. build the augmented prompt and run F_inf (generation LLM) in-enclave
+
+Every step also runs batched (``answer_batch``): one sealed request per
+provider carries the whole (B, S) query block, aggregation re-ranks the
+(B, C, S) candidate block in one pass, and generation goes through the
+generator's ``generate_batch`` hook when present — identical results to
+B sequential ``answer`` calls at a fraction of the per-query overhead.
 """
 from __future__ import annotations
 
@@ -72,20 +78,20 @@ class Orchestrator:
         return self.providers  # broadcast policy (paper's basic setup)
 
     # ------------------------------------------------------------------ #
-    def collect_contexts(self, query_text: str) -> list[dict]:
-        """Steps 1-3: dispatch + quorum collection."""
-        base_tokens = self.tok.encode(query_text, max_len=24)
+    def _collect(self, providers, tokens_for) -> list[dict]:
+        """Shared steps 2-3 dispatch loop: sealed round-trip per provider
+        under the deadline, straggler tolerance, quorum check.
+        ``tokens_for(provider)`` builds the query token payload."""
         responses = []
         t0 = time.monotonic()
-        for p in self.select_providers(query_text):
+        for p in providers:
             if self.deadline_s is not None and time.monotonic() - t0 > self.deadline_s:
                 break  # deadline: proceed with what we have (k_n <= k)
-            q_tokens = base_tokens
-            if self.rewriter is not None:  # personalized expansion (§2.2)
-                q_tokens = self.rewriter.rewrite(base_tokens, p.provider_id)
             try:
                 ch = getattr(p, "_orch_channel")
-                nonce, sealed = ch.seal(pack({"query_tokens": q_tokens, "m": np.int64(self.m_local)}))
+                nonce, sealed = ch.seal(
+                    pack({"query_tokens": tokens_for(p), "m": np.int64(self.m_local)})
+                )
                 r_nonce, r_sealed = p.handle_request(nonce, sealed)
                 responses.append(unpack(ch.open(r_nonce, r_sealed)))
             except (ConnectionError, TimeoutError):
@@ -95,6 +101,43 @@ class Orchestrator:
                 f"quorum not met: {len(responses)}/{self.quorum} providers answered"
             )
         return responses
+
+    def collect_contexts(self, query_text: str) -> list[dict]:
+        """Steps 1-3: dispatch + quorum collection."""
+        base_tokens = self.tok.encode(query_text, max_len=24)
+
+        def tokens_for(p):
+            if self.rewriter is not None:  # personalized expansion (§2.2)
+                return self.rewriter.rewrite(base_tokens, p.provider_id)
+            return base_tokens
+
+        return self._collect(self.select_providers(query_text), tokens_for)
+
+    def collect_contexts_batch(self, queries: Sequence[str]) -> list[dict]:
+        """Steps 1-3 for a query batch: ONE sealed request per provider
+        carries all (B, S) query tokens; each response holds (B, m)
+        scores/ids and (B, m, S_c) chunk tokens.  Sealing/serialization
+        round-trips drop from B*P to P and every provider embeds the whole
+        batch in one kernel call.  Broadcast-only: selector routing is
+        per-query, so routed setups must use the sequential path (as
+        ``answer_batch`` does automatically)."""
+        if self.selector is not None and self.selector_top_p:
+            raise ValueError(
+                "collect_contexts_batch broadcasts to all providers; "
+                "selector routing requires the per-query collect_contexts path"
+            )
+        base = [self.tok.encode(q, max_len=24) for q in queries]
+
+        def tokens_for(p):
+            rows = base
+            if self.rewriter is not None:  # personalized expansion (§2.2)
+                rows = [self.rewriter.rewrite(r, p.provider_id) for r in base]
+            width = max(len(r) for r in rows)
+            return np.stack(
+                [np.pad(r, (0, width - len(r))) for r in rows]
+            ).astype(np.int32)  # PAD tail; the embedder masks PAD
+
+        return self._collect(self.providers, tokens_for)
 
     def aggregate(self, query_text: str, responses: list[dict]) -> dict:
         """Step 4: in-enclave context aggregation (global re-rank)."""
@@ -118,6 +161,45 @@ class Orchestrator:
             "providers": providers[order],
             "n_candidates": len(all_ids),
         }
+
+    def aggregate_batch(self, queries: Sequence[str], responses: list[dict]) -> list[dict]:
+        """Step 4 over a batch: one re-rank pass over the (B, C, S)
+        candidate block when the reranker supports batching, else per-row.
+        Produces per-query context dicts identical to ``aggregate``."""
+        all_tokens = np.concatenate([r["chunk_tokens"] for r in responses], 1)  # (B, C, S)
+        all_ids = np.concatenate([r["chunk_ids"] for r in responses], 1)  # (B, C)
+        all_scores = np.concatenate([r["scores"] for r in responses], 1)
+        providers = np.concatenate(
+            [
+                np.full(r["chunk_ids"].shape, int(r["provider"]))
+                for r in responses
+            ],
+            1,
+        )
+        if self.aggregation == "rerank" and self.reranker is not None:
+            q_tok = np.stack([self.tok.encode(q, max_len=24) for q in queries])
+            if getattr(self.reranker, "supports_batch", False):
+                rank_scores = np.asarray(self.reranker(q_tok, all_tokens))
+            else:
+                rank_scores = np.stack(
+                    [np.asarray(self.reranker(q_tok[b], all_tokens[b])) for b in range(len(queries))]
+                )
+        else:
+            rank_scores = all_scores
+        n = min(self.n_global, all_ids.shape[1])
+        outs = []
+        for b in range(len(queries)):
+            order = np.argsort(-rank_scores[b])[:n]
+            outs.append(
+                {
+                    "chunk_tokens": all_tokens[b][order],
+                    "chunk_ids": all_ids[b][order],
+                    "scores": rank_scores[b][order],
+                    "providers": providers[b][order],
+                    "n_candidates": all_ids.shape[1],
+                }
+            )
+        return outs
 
     def build_prompt(self, query_text: str, context: dict, max_len: int = 512) -> np.ndarray:
         """[BOS] CTX chunk1 SEP chunk2 ... QRY query ANS"""
@@ -143,3 +225,32 @@ class Orchestrator:
             out["answer_tokens"] = np.asarray(self.generator(prompt))[0]
             out["prompt"] = prompt
         return out
+
+    def answer_batch(self, queries: Sequence[str]) -> list[dict]:
+        """Algorithm 1 over a query batch: one sealed round-trip per
+        provider for the whole batch, batched aggregation, and (when the
+        generator exposes ``generate_batch``) batched decoding.  Returns
+        per-query result dicts identical to ``answer``."""
+        queries = list(queries)
+        if not queries:
+            return []
+        if self.selector is not None and self.selector_top_p:
+            # per-query routing can hit different provider subsets; keep
+            # Algorithm 1 semantics by falling back to the sequential path
+            return [self.answer(q) for q in queries]
+        responses = self.collect_contexts_batch(queries)
+        contexts = self.aggregate_batch(queries, responses)
+        outs = [
+            {"context": ctx, "n_providers": len(responses)} for ctx in contexts
+        ]
+        if self.generator is not None:
+            prompts = [self.build_prompt(q, ctx) for q, ctx in zip(queries, contexts)]
+            gen_batch = getattr(self.generator, "generate_batch", None)
+            if gen_batch is not None:
+                answers = gen_batch(prompts)
+            else:
+                answers = [np.asarray(self.generator(p))[0] for p in prompts]
+            for out, prompt, ans in zip(outs, prompts, answers):
+                out["answer_tokens"] = np.asarray(ans).ravel()
+                out["prompt"] = prompt
+        return outs

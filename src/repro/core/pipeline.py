@@ -79,23 +79,33 @@ class CFedRAGSystem:
             quorum=self.cfg.quorum,
         )
 
+    # ---- serving entry points ----
+    def answer_batch(self, query_texts: list[str]) -> list[dict]:
+        """Batched Algorithm 1: one sealed request per provider per batch."""
+        return self.orchestrator.answer_batch(query_texts)
+
     # ---- evaluation (Table 1 protocol on synthetic provenance) ----
-    def eval_retrieval(self, n_queries: int | None = None) -> dict:
-        """recall@n of the gold chunk in the final context window."""
+    def eval_retrieval(self, n_queries: int | None = None, batch_size: int = 32) -> dict:
+        """recall@n of the gold chunk in the final context window.
+
+        Queries run through the batched pipeline (``batch_size`` per sealed
+        round-trip); results are identical to the sequential path."""
         queries = self.corpus.queries[:n_queries] if n_queries else self.corpus.queries
         hits = 0
         per_corpus: dict = {}
         mrr = 0.0
-        for q in queries:
-            res = self.orchestrator.answer(q.text)
-            ids = list(res["context"]["chunk_ids"])
-            hit = q.gold_chunk_id in ids
-            hits += hit
-            if hit:
-                mrr += 1.0 / (ids.index(q.gold_chunk_id) + 1)
-            stats = per_corpus.setdefault(q.corpus, [0, 0])
-            stats[0] += hit
-            stats[1] += 1
+        for i in range(0, len(queries), batch_size):
+            chunk = queries[i : i + batch_size]
+            results = self.orchestrator.answer_batch([q.text for q in chunk])
+            for q, res in zip(chunk, results):
+                ids = list(res["context"]["chunk_ids"])
+                hit = q.gold_chunk_id in ids
+                hits += hit
+                if hit:
+                    mrr += 1.0 / (ids.index(q.gold_chunk_id) + 1)
+                stats = per_corpus.setdefault(q.corpus, [0, 0])
+                stats[0] += hit
+                stats[1] += 1
         n = len(queries)
         return {
             "recall_at_n": hits / n,

@@ -60,8 +60,10 @@ class DataProvider:
         self.chunk_tokens = np.stack(
             [tokenizer.encode(c.text, max_len=chunk_max_len) for c in self.chunks]
         )
+        self._chunk_id_arr = np.asarray([c.chunk_id for c in self.chunks], np.int64)
         self.embeddings: np.ndarray | None = None
         self.channel: SecureChannel | None = None
+        self.n_requests = 0  # sealed requests handled (observability/tests)
 
     # ---- lifecycle ----
     def build_index(self, batch: int = 512):
@@ -80,7 +82,11 @@ class DataProvider:
 
     # ---- retrieval API (sealed request/response) ----
     def handle_request(self, nonce: bytes, sealed: bytes) -> tuple[bytes, bytes]:
-        """Sealed {query_tokens, m} -> sealed {scores, chunk_ids, chunk_tokens}."""
+        """Sealed {query_tokens, m} -> sealed {scores, chunk_ids, chunk_tokens}.
+
+        ``query_tokens`` may be a single (S,) query or a (B, S) batch; the
+        response arrays carry the matching leading shape."""
+        self.n_requests += 1
         if self.fail:
             raise ConnectionError(f"provider {self.provider_id} down")
         if self.delay_s:
@@ -91,17 +97,26 @@ class DataProvider:
         return self.channel.seal(pack(out))
 
     def retrieve(self, query_tokens: np.ndarray, m: int) -> dict:
+        """Local top-m.  query_tokens: (S,) -> {scores (m,), chunk_ids (m,),
+        chunk_tokens (m, S_c)}; or batched (B, S) -> (B, m, ...) — the whole
+        batch is embedded and scored in one kernel call."""
         assert self.embeddings is not None, "index not built"
-        q_emb = np.asarray(self.embed_fn(query_tokens[None, :]))
+        q = np.asarray(query_tokens)
+        single = q.ndim == 1
+        if single:
+            q = q[None, :]
+        q_emb = np.asarray(self.embed_fn(q))  # (B, D)
         m_eff = min(m, len(self.chunks))
         scores, idx = retrieval_topk(
             q_emb, self.embeddings, m_eff, use_pallas=self.use_pallas
         )
-        idx = np.asarray(idx[0])
+        scores, idx = np.asarray(scores), np.asarray(idx)  # (B, m)
+        if single:
+            scores, idx = scores[0], idx[0]
         payload = {
             "provider": np.int32(self.provider_id),
-            "scores": np.asarray(scores[0]),
-            "chunk_ids": np.asarray([self.chunks[i].chunk_id for i in idx], np.int64),
+            "scores": scores,
+            "chunk_ids": self._chunk_id_arr[idx],
             "chunk_tokens": self.chunk_tokens[idx],
         }
         return apply_filters(self.filters, payload)

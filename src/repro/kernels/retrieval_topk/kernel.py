@@ -10,11 +10,23 @@ Tiling: grid (Q/BQ, N/BN); for a fixed query block the N-axis is the
 innermost (arbitrary) dimension and the (BQ, K) running top-k lives in the
 revisited output block (VMEM-resident across the whole N sweep).
 BQ/BN default to 128/512 — MXU-aligned (128 lanes) and a working set of
-BQ*D + BN*D + BQ*BN well under VMEM at D<=1024.
+BQ*D + BN*D + BQ*BN well under VMEM at D<=1024.  Small query batches clamp
+BQ down, rounded up to a sublane multiple of 8 so the block stays
+VPU/MXU-tileable.
 
-Merge strategy: K selection passes over the concatenated (BQ, K+BN)
-candidates per block — K is small (paper uses m=8) so the merge is
-O(K * BN) VPU work against O(BN * D) MXU work per block.
+Merge strategy: a SINGLE descending sort of the concatenated (BQ, K+BN)
+candidate block, then keep the first K lanes — one fused pass replaces
+the former K sequential argmax-extraction sweeps, so merge cost no longer
+scales with K.  Two equivalent implementations, auto-selected:
+
+  xla      ``lax.sort_key_val`` (stable) — interpret mode / CPU, where the
+           sort primitive lowers natively
+  bitonic  an explicit compare-exchange network of roll/where ops (padded
+           to a power of two, index tie-break) — every op is VPU-native,
+           for compiled TPU where Mosaic has no sort lowering
+
+`interpret` auto-selects from the backend (compiled on TPU, interpreter
+everywhere else) unless overridden explicitly.
 """
 from __future__ import annotations
 
@@ -24,30 +36,56 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-
-def _topk_merge(scores, idx, k):
-    """k extraction passes.  scores: (BQ, C) f32; idx: (BQ, C) i32."""
-    out_s, out_i = [], []
-    for _ in range(k):
-        m = jnp.max(scores, axis=-1, keepdims=True)  # (BQ,1)
-        am = jnp.argmax(scores, axis=-1)  # (BQ,)
-        out_s.append(m[:, 0])
-        out_i.append(jnp.take_along_axis(idx, am[:, None], axis=-1)[:, 0])
-        scores = jnp.where(
-            jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1) == am[:, None],
-            -jnp.inf,
-            scores,
-        )
-    return jnp.stack(out_s, -1), jnp.stack(out_i, -1)
+_I32_MAX = jnp.iinfo(jnp.int32).max
 
 
-def _kernel(q_ref, c_ref, s_ref, i_ref, *, k: int, bn: int, n_valid: int):
+def _bitonic_topk_merge(scores, idx, k):
+    """Descending bitonic sort of (scores, idx) pairs along the last axis,
+    returning the first k columns.  scores: (R, C) f32; idx: (R, C) i32.
+    Ties prefer the smaller index (matches lax.top_k).  Pure roll/where
+    compare-exchange network — every op is VPU-native on TPU."""
+    r, c = scores.shape
+    p = 1 << max(c - 1, 1).bit_length()  # next power of two >= c (min 2)
+    if p != c:
+        scores = jnp.pad(scores, ((0, 0), (0, p - c)), constant_values=-jnp.inf)
+        idx = jnp.pad(idx, ((0, 0), (0, p - c)), constant_values=_I32_MAX)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (r, p), 1)
+    stage = 2
+    while stage <= p:
+        step = stage // 2
+        while step >= 1:
+            upper = (lane & step) != 0  # this lane holds the pair's upper element
+            ps = jnp.where(upper, jnp.roll(scores, step, 1), jnp.roll(scores, -step, 1))
+            pi = jnp.where(upper, jnp.roll(idx, step, 1), jnp.roll(idx, -step, 1))
+            desc = (lane & stage) == 0  # block direction (final stage: all desc)
+            self_greater = (scores > ps) | ((scores == ps) & (idx < pi))
+            want_max = desc != upper  # desc block: lower lane takes the max
+            take_self = self_greater == want_max
+            scores = jnp.where(take_self, scores, ps)
+            idx = jnp.where(take_self, idx, pi)
+            step //= 2
+        stage *= 2
+    return scores[:, :k], idx[:, :k]
+
+
+def _sort_topk_merge(scores, idx, k):
+    """Stable descending sort via the XLA sort primitive.  Stability +
+    concat order (running list before the new block) preserves the
+    smaller-index tie preference of lax.top_k."""
+    neg_s, si = jax.lax.sort_key_val(-scores, idx, dimension=-1)
+    return -neg_s[:, :k], si[:, :k]
+
+
+_MERGES = {"xla": _sort_topk_merge, "bitonic": _bitonic_topk_merge}
+
+
+def _kernel(q_ref, c_ref, s_ref, i_ref, *, k: int, bn: int, n_valid: int, merge: str):
     nj = pl.program_id(1)
 
     @pl.when(nj == 0)
     def _init():
         s_ref[...] = jnp.full_like(s_ref, -jnp.inf)
-        i_ref[...] = jnp.full_like(i_ref, -1)
+        i_ref[...] = jnp.full_like(i_ref, _I32_MAX)
 
     q = q_ref[...].astype(jnp.float32)  # (BQ, D)
     c = c_ref[...].astype(jnp.float32)  # (BN, D)
@@ -59,7 +97,7 @@ def _kernel(q_ref, c_ref, s_ref, i_ref, *, k: int, bn: int, n_valid: int):
 
     cand_s = jnp.concatenate([s_ref[...], blk], axis=-1)
     cand_i = jnp.concatenate([i_ref[...], gidx], axis=-1)
-    new_s, new_i = _topk_merge(cand_s, cand_i, k)
+    new_s, new_i = _MERGES[merge](cand_s, cand_i, k)
     s_ref[...] = new_s
     i_ref[...] = new_i
 
@@ -71,16 +109,27 @@ def retrieval_topk_pallas(
     *,
     bq: int = 128,
     bn: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
+    merge: str | None = None,
 ):
     """queries: (Q, D); corpus: (N, D).  Returns (scores (Q,k) f32, idx (Q,k) i32).
 
     Q and N are padded up to block multiples internally; padded corpus rows
-    are masked with -inf, padded query rows are sliced off.
+    are masked with -inf, padded query rows are sliced off.  ``interpret``
+    defaults to compiled on TPU and interpreter mode elsewhere; ``merge``
+    defaults to the XLA sort primitive under the interpreter and the
+    bitonic network when compiled.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if merge is None:
+        merge = "xla" if interpret else "bitonic"
     q, d = queries.shape
     n = corpus.shape[0]
+    # clamp the query block to the batch, rounded up to a sublane multiple
+    # of 8 so tiny Q never produces a non-MXU-aligned block shape
     bq = min(bq, max(8, q))
+    bq = -(-bq // 8) * 8
     qp = (q + bq - 1) // bq * bq
     np_ = (n + bn - 1) // bn * bn
     if qp != q:
@@ -90,7 +139,7 @@ def retrieval_topk_pallas(
 
     grid = (qp // bq, np_ // bn)
     scores, idx = pl.pallas_call(
-        functools.partial(_kernel, k=k, bn=bn, n_valid=n),
+        functools.partial(_kernel, k=k, bn=bn, n_valid=n, merge=merge),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bq, d), lambda i, j: (i, 0)),

@@ -1,5 +1,6 @@
 """Jitted public wrapper: picks the Pallas kernel on TPU, the jnp oracle
-elsewhere (CPU dry-runs / tests use interpret mode explicitly)."""
+elsewhere (the kernel auto-selects interpret mode from the backend, so
+CPU dry-runs / tests run the same code through the interpreter)."""
 import functools
 
 import jax
@@ -10,8 +11,11 @@ from repro.kernels.retrieval_topk.ref import retrieval_topk_ref
 
 @functools.partial(jax.jit, static_argnames=("k", "use_pallas"))
 def retrieval_topk(queries, corpus, k: int, use_pallas: bool = False):
+    """queries: (Q, D); corpus: (N, D) -> (scores (Q, k), idx (Q, k)).
+
+    Batched natively over the query dimension: Q may be a single query or
+    a whole request batch (B*Q rows) — one call, one kernel launch.
+    """
     if use_pallas:
-        return retrieval_topk_pallas(
-            queries, corpus, k, interpret=jax.default_backend() != "tpu"
-        )
+        return retrieval_topk_pallas(queries, corpus, k)
     return retrieval_topk_ref(queries, corpus, k)

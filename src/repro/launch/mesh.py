@@ -8,7 +8,9 @@ from __future__ import annotations
 
 import jax
 import numpy as np
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+from repro.runtime.compat import make_mesh, make_topology_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -23,13 +25,12 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
             "device_count=512 before any jax import"
         )
     if len(devices) == need:
-        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+        return make_topology_mesh(shape, axes)  # topology-aware ordering
     # device superset (e.g. single-pod mesh inside the 512-device dry-run
     # process): take the first pod's worth.
-    arr = np.array(devices[:need]).reshape(shape)
-    return Mesh(arr, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(np.array(devices[:need]).reshape(shape), axes)
 
 
 def make_smoke_mesh(shape=(1, 1), axes=("data", "model")) -> Mesh:
     arr = np.array(jax.devices()[: int(np.prod(shape))]).reshape(shape)
-    return Mesh(arr, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(arr, axes)

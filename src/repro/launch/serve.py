@@ -20,16 +20,26 @@ from repro.data.tokenizer import HashTokenizer
 
 def overlap_reranker(tok: HashTokenizer):
     """Lexical-overlap cross-scorer (training-free F_aggr stand-in; the
-    trained cross-encoder variant lives in benchmarks/table1)."""
+    trained cross-encoder variant lives in benchmarks/table1).
+
+    Accepts (query (S,), candidates (C, S)) -> (C,) scores, or a whole
+    batch (queries (B, S), candidates (B, C, S)) -> (B, C) — the batched
+    form the orchestrator's ``aggregate_batch`` uses (``supports_batch``)."""
+
+    def _score_row(q: set, row: np.ndarray) -> float:
+        c = set(int(t) for t in row if t > 7)
+        return len(q & c) / (len(q) ** 0.5 * max(len(c), 1) ** 0.5)
 
     def rerank(query_tokens: np.ndarray, cand_tokens: np.ndarray) -> np.ndarray:
+        cand_tokens = np.asarray(cand_tokens)
+        if cand_tokens.ndim == 3:  # (B, C, S) batch
+            return np.stack(
+                [rerank(qt, ct) for qt, ct in zip(np.asarray(query_tokens), cand_tokens)]
+            )
         q = set(int(t) for t in query_tokens if t > 7)
-        scores = []
-        for row in cand_tokens:
-            c = set(int(t) for t in row if t > 7)
-            scores.append(len(q & c) / (len(q) ** 0.5 * max(len(c), 1) ** 0.5))
-        return np.asarray(scores, np.float32)
+        return np.asarray([_score_row(q, row) for row in cand_tokens], np.float32)
 
+    rerank.supports_batch = True
     return rerank
 
 

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
@@ -53,6 +54,46 @@ def score_pairs(cfg: ModelConfig, pol: ShardingPolicy, params, tokens, type_ids)
     h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
     cls = h[:, 0, :].astype(f32)  # first-token pooling
     return (cls @ params["score"]["w"].astype(f32))[:, 0]
+
+
+def make_reranker(cfg: ModelConfig, pol: ShardingPolicy, params, *, max_len: int = 64):
+    """Adapt the cross encoder to the orchestrator's reranker contract:
+
+      (query_tokens (S,), cand_tokens (C, S)) -> (C,) scores, or the
+      batched form (queries (B, S), cands (B, C, S)) -> (B, C)
+
+    The batched form flattens all B*C (query, chunk) pairs into ONE
+    ``score_pairs`` call, so a whole query batch re-ranks in a single
+    forward pass (``supports_batch``, used by ``aggregate_batch``)."""
+    from repro.data.tokenizer import EOS, PAD, SEP
+
+    score = jax.jit(lambda p, t, ty: score_pairs(cfg, pol, p, t, ty))
+
+    def _pack_pairs(q_tokens: np.ndarray, cand: np.ndarray):
+        q = [int(t) for t in q_tokens if t != PAD and t != EOS]
+        toks = np.full((len(cand), max_len), PAD, np.int32)
+        types = np.zeros((len(cand), max_len), np.int32)
+        for i, row in enumerate(cand):
+            d = [int(t) for t in row if t != PAD]
+            ids = (q + [SEP] + d + [EOS])[:max_len]
+            toks[i, : len(ids)] = ids
+            types[i, min(len(q) + 1, max_len) : len(ids)] = 1
+        return toks, types
+
+    def rerank(query_tokens: np.ndarray, cand_tokens: np.ndarray) -> np.ndarray:
+        cand = np.asarray(cand_tokens)
+        if cand.ndim == 3:  # (B, C, S) batch -> one flattened forward pass
+            b, c, _ = cand.shape
+            packed = [_pack_pairs(q, cv) for q, cv in zip(np.asarray(query_tokens), cand)]
+            toks = np.concatenate([t for t, _ in packed], 0)
+            types = np.concatenate([ty for _, ty in packed], 0)
+            out = score(params, jnp.asarray(toks), jnp.asarray(types))
+            return np.asarray(out, np.float32).reshape(b, c)
+        toks, types = _pack_pairs(np.asarray(query_tokens), cand)
+        return np.asarray(score(params, jnp.asarray(toks), jnp.asarray(types)), np.float32)
+
+    rerank.supports_batch = True
+    return rerank
 
 
 def rank_loss(cfg, pol, params, batch):

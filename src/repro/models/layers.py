@@ -184,17 +184,28 @@ def attn_apply(cfg: ModelConfig, pol: ShardingPolicy, p, x, positions, *, causal
 
 
 def attn_decode(cfg: ModelConfig, pol: ShardingPolicy, p, x, k_cache, v_cache, pos):
-    """Single-token decode.  x: (B,1,d); caches: (B,S,KV,hd); pos: scalar."""
-    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    """Single-token decode.  x: (B,1,d); caches: (B,S,KV,hd); pos: scalar
+    write position, or (B,) per-row positions for ragged batches (each row
+    writes its own cache slot and attends to its own prefix)."""
+    b, s = x.shape[0], k_cache.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim == 1
+    positions = pos[:, None] if per_row else jnp.full((b, 1), pos, jnp.int32)
     q, k_new, v_new = attn_qkv(cfg, pol, p, x, positions)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+    if per_row:
+        slot = jax.lax.broadcasted_iota(jnp.int32, (b, s), 1) == pos[:, None]
+        k_cache = jnp.where(slot[..., None, None], k_new.astype(k_cache.dtype), k_cache)
+        v_cache = jnp.where(slot[..., None, None], v_new.astype(v_cache.dtype), v_cache)
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
     k_cache = pol.shard(k_cache, "cache_batch", "cache_seq", "cache_kv", None)
     v_cache = pol.shard(v_cache, "cache_batch", "cache_seq", "cache_kv", None)
     scale = 1.0 / np.sqrt(q.shape[-1])
     logits = _gqa_logits(q, k_cache.astype(q.dtype)) * scale  # (B,KV,G,1,S)
-    kpos = jnp.arange(k_cache.shape[1])
-    logits = jnp.where(kpos <= pos, logits, -1e30)
+    kpos = jnp.arange(s)
+    valid = (kpos[None, :] <= pos[:, None]).reshape(b, 1, 1, 1, s) if per_row else (kpos <= pos)
+    logits = jnp.where(valid, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     out = _gqa_out(probs, v_cache.astype(q.dtype), q.dtype)  # (B,1,H,hd)
     out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))

@@ -260,10 +260,12 @@ def prefill(cfg: ModelConfig, pol: ShardingPolicy, params, batch, cache_len: int
 
 
 def decode_step(cfg: ModelConfig, pol: ShardingPolicy, params, cache, tokens, pos):
-    """One decode step.  tokens: (B,1) int32; pos: scalar int32 (current write
-    position; attention sees [0..pos]).  Returns (logits (B,1,V), cache)."""
+    """One decode step.  tokens: (B,1) int32; pos: scalar int32 write
+    position (attention sees [0..pos]) or (B,) per-row positions for
+    ragged batches.  Returns (logits (B,1,V), cache)."""
     h = L.embed_apply(cfg, pol, params["embed"], tokens)
-    positions = jnp.full(tokens.shape, pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.broadcast_to(pos[:, None] if pos.ndim == 1 else pos, tokens.shape)
     h, cache, _ = _run_blocks(cfg, pol, params, h, positions, mode="decode", cache=cache, pos=pos)
     h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
     return L.head_apply(cfg, pol, params, h), cache

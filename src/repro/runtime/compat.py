@@ -1,0 +1,63 @@
+"""JAX version-compatibility shims.
+
+The codebase targets the current jax API (``jax.shard_map``,
+``Mesh(..., axis_types=...)``); deployment containers may pin an older
+release where those live under different names.  All mesh/shard_map
+construction goes through here so version drift is absorbed in one place.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def shard_map(fn, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` when present, else the experimental spelling
+    (where ``check_vma`` was called ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+    )
+
+
+def axis_size(name: str):
+    """``jax.lax.axis_size`` (new jax) or a psum-of-ones fallback, usable
+    inside shard_map/pmap bodies."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def make_mesh(devices, axes) -> Mesh:
+    """Mesh over an explicit device array, with AxisType.Auto where the
+    installed jax understands ``axis_types``."""
+    arr = np.asarray(devices)
+    try:
+        from jax.sharding import AxisType
+
+        return Mesh(arr, axes, axis_types=(AxisType.Auto,) * len(axes))
+    except (ImportError, TypeError):
+        return Mesh(arr, axes)
+
+
+def make_topology_mesh(shape, axes) -> Mesh:
+    """``jax.make_mesh`` (topology-aware device ordering on real TPU
+    slices) with the axis_types kwarg when supported, falling back to an
+    explicit enumeration-order Mesh on older jax."""
+    try:
+        from jax.sharding import AxisType
+
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    except (ImportError, TypeError, AttributeError):
+        pass
+    try:
+        return jax.make_mesh(shape, axes)
+    except (AttributeError, TypeError):
+        need = int(np.prod(np.asarray(shape)))
+        return make_mesh(np.array(jax.devices()[:need]).reshape(shape), axes)

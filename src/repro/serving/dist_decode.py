@@ -16,6 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.runtime.compat import shard_map
+
 
 def _local_partials(q, k_loc, v_loc, lengths, *, axis_name):
     """Per-shard partials + cross-shard flash-decode merge."""
@@ -48,7 +50,7 @@ def dist_decode_attention(
     mesh,
     axis_name: str = "data",
 ):
-    fn = jax.shard_map(
+    fn = shard_map(
         partial(_local_partials, axis_name=axis_name),
         mesh=mesh,
         in_specs=(P(), P(None, axis_name, None, None), P(None, axis_name, None, None), P()),

@@ -4,8 +4,11 @@ Request flow (paper Fig. 2/3 in serving form):
   query -> federated retrieval (core.retrieval / orchestrator)
         -> enclave re-rank -> prompt build -> batched prefill -> decode loop
 
-Batching: requests are grouped to `max_batch`, prompts right-aligned into a
-common cache; decode proceeds until EOS or `max_new_tokens`.  The engine is
+Batching: requests are grouped to `max_batch`; prompts are packed
+left-aligned (PAD tail) into a common cache and each row decodes from its
+OWN write position (per-row `lengths`), so ragged batches never attend to
+PAD key/values.  The decode loop is a single jitted ``lax.while_loop``
+with on-device EOS tracking — no per-token host sync.  The engine is
 deliberately synchronous (single-host simulation); the scheduler hook
 points (queue, deadline, quorum) mirror a production continuous-batching
 server."""
@@ -35,23 +38,53 @@ class ServeConfig:
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, pol: ShardingPolicy, params, scfg: ServeConfig):
         self.cfg, self.pol, self.params, self.scfg = cfg, pol, params, scfg
-        self._prefill = jax.jit(
-            lambda p, b: LM.prefill(cfg, pol, p, b, cache_len=scfg.max_prompt_len + scfg.max_new_tokens)
-        )
-        self._decode = jax.jit(
-            lambda p, c, t, pos: LM.decode_step(cfg, pol, p, c, t, pos)
-        )
+        cache_len = scfg.max_prompt_len + scfg.max_new_tokens
+
+        def prefill_fn(params, tokens, lengths):
+            logits, cache = LM.prefill(cfg, pol, params, {"tokens": tokens}, cache_len=cache_len)
+            # logits at each row's true last prompt position -> first token
+            last = jnp.take_along_axis(logits, (lengths - 1)[:, None, None], axis=1)[:, 0, :]
+            return jnp.argmax(last, -1).astype(jnp.int32), cache
+
+        def decode_loop(params, cache, first_tok, lengths):
+            """Device-resident greedy decode: runs until every row has
+            emitted EOS or max_new_tokens, with no host round-trips."""
+            b = first_tok.shape[0]
+            t_max = scfg.max_new_tokens
+            out = jnp.zeros((b, t_max), jnp.int32).at[:, 0].set(first_tok)
+            state = (jnp.int32(1), cache, first_tok, first_tok == EOS, out)
+
+            def cond(st):
+                t, _, _, done, _ = st
+                return (t < t_max) & ~jnp.all(done)
+
+            def body(st):
+                t, cache, cur, done, out = st
+                logits, cache = LM.decode_step(
+                    cfg, pol, params, cache, cur[:, None], lengths + t - 1
+                )
+                nxt = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)
+                out = out.at[:, t].set(nxt)
+                return (t + 1, cache, nxt, done | (nxt == EOS), out)
+
+            t, _, _, _, out = jax.lax.while_loop(cond, body, state)
+            return out, t
+
+        self._prefill = jax.jit(prefill_fn)
+        self._decode_loop = jax.jit(decode_loop)
         self.queue: list[np.ndarray] = []
 
     def submit(self, prompt_tokens: np.ndarray):
         self.queue.append(prompt_tokens.ravel())
 
     def _pack(self, prompts: list[np.ndarray]) -> np.ndarray:
+        """Left-aligned PAD-tail packing; each row's decode slot is its own
+        length (per-row positions), so ragged rows stay correct."""
         width = self.scfg.max_prompt_len
         out = np.zeros((len(prompts), width), np.int32)
         for i, p in enumerate(prompts):
             p = p[-width:]
-            out[i, : len(p)] = p  # left-aligned; PAD tail
+            out[i, : len(p)] = p
         return out
 
     def step_batch(self) -> list[np.ndarray]:
@@ -59,23 +92,37 @@ class ServeEngine:
         if not self.queue:
             return []
         batch, self.queue = self.queue[: self.scfg.max_batch], self.queue[self.scfg.max_batch :]
-        lengths = np.array([min(len(p), self.scfg.max_prompt_len) for p in batch])
-        tokens = self._pack(batch)
-        logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(tokens)})
-        # logits at each row's true last position
-        last = np.asarray(logits)[np.arange(len(batch)), :, :][:, -1, :] if logits.shape[1] == 1 else (
-            np.asarray(logits)[np.arange(len(batch)), lengths - 1, :]
+        lengths = np.array(
+            [min(len(p), self.scfg.max_prompt_len) for p in batch], np.int32
         )
-        tok = last.argmax(-1).astype(np.int32)
-        outs = [tok.copy()]
-        pos = int(lengths.max())  # uniform write position (packed batch)
-        cur = jnp.asarray(tok)[:, None]
-        for t in range(1, self.scfg.max_new_tokens):
-            logits, cache = self._decode(self.params, cache, cur, pos)
-            cur = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)[:, None]
-            outs.append(np.asarray(cur)[:, 0])
-            pos += 1
-            if all((np.stack(outs, 1) == EOS).any(1)):
-                break
-        ans = np.stack(outs, 1)
+        tokens = self._pack(batch)
+        first, cache = self._prefill(self.params, jnp.asarray(tokens), jnp.asarray(lengths))
+        out, n_steps = self._decode_loop(self.params, cache, first, jnp.asarray(lengths))
+        ans = np.asarray(out)[:, : int(n_steps)]
         return [row for row in ans]
+
+
+def engine_generator(engine: ServeEngine) -> Callable:
+    """Adapt a ServeEngine to the orchestrator's generator contract:
+    callable (1, S) -> (1, T) for single prompts, plus ``generate_batch``
+    (list of prompts -> list of answer rows) so ``answer_batch`` decodes
+    the whole query batch through one packed prefill + decode loop."""
+
+    def generate(prompt_tokens: np.ndarray) -> np.ndarray:
+        if engine.queue:
+            raise RuntimeError("engine_generator requires exclusive use of the engine queue")
+        engine.submit(np.asarray(prompt_tokens))
+        return engine.step_batch()[0][None, :]
+
+    def generate_batch(prompts: list[np.ndarray]) -> list[np.ndarray]:
+        if engine.queue:
+            raise RuntimeError("engine_generator requires exclusive use of the engine queue")
+        for p in prompts:
+            engine.submit(np.asarray(p))
+        outs: list[np.ndarray] = []
+        while engine.queue:
+            outs.extend(engine.step_batch())
+        return outs
+
+    generate.generate_batch = generate_batch
+    return generate

@@ -1,0 +1,103 @@
+"""Minimal stand-in for `hypothesis` used when the real package is absent.
+
+conftest.py registers this module as ``hypothesis`` (and its ``strategies``
+submodule) only on ImportError, so environments with the real library are
+unaffected.  Each strategy is a deterministic sampler; ``@given`` runs the
+test body ``max_examples`` times with seeded pseudo-random draws.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+
+
+class _Strategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def example(self, rng: random.Random):
+        return self._sample(rng)
+
+
+def integers(min_value=0, max_value=1 << 30):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def binary(min_size=0, max_size=64):
+    return _Strategy(
+        lambda rng: bytes(rng.randrange(256) for _ in range(rng.randint(min_size, max_size)))
+    )
+
+
+def characters(min_codepoint=32, max_codepoint=126, **_kw):
+    return _Strategy(lambda rng: chr(rng.randint(min_codepoint, max_codepoint)))
+
+
+def text(alphabet=None, min_size=0, max_size=20):
+    alpha = alphabet or characters()
+    return _Strategy(
+        lambda rng: "".join(alpha.example(rng) for _ in range(rng.randint(min_size, max_size)))
+    )
+
+
+def settings(max_examples=20, deadline=None, **_kw):
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*gargs, **gkwargs):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        # real hypothesis binds positional strategies to the RIGHTMOST
+        # params (leftmost stay free for pytest fixtures)
+        pos_names = [p.name for p in params[len(params) - len(gargs) :]]
+        strat_by_name = dict(zip(pos_names, gargs), **gkwargs)
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_hyp_max_examples", None) or getattr(
+                fn, "_hyp_max_examples", 20
+            )
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                drawn = {name: s.example(rng) for name, s in strat_by_name.items()}
+                fn(*args, **{**drawn, **kwargs})
+
+        # hide strategy-bound params so pytest doesn't treat them as fixtures
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for p in params if p.name not in strat_by_name]
+        )
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+def install():
+    """Register this module as `hypothesis` + `hypothesis.strategies`."""
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "binary", "characters", "text"):
+        setattr(st, name, globals()[name])
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

@@ -1,0 +1,180 @@
+"""Batched federated query pipeline: answer_batch must be bit-identical to
+B sequential answer() calls while issuing exactly ONE sealed request per
+provider per batch; retrieval_topk handles (B*Q, D) query blocks natively."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from repro.core.pipeline import CFedRAGConfig, CFedRAGSystem
+from repro.data.corpus import make_federated_corpus
+from repro.data.tokenizer import HashTokenizer
+from repro.kernels.retrieval_topk.kernel import retrieval_topk_pallas
+from repro.kernels.retrieval_topk.ref import retrieval_topk_ref
+from repro.launch.serve import overlap_reranker
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_federated_corpus(n_facts=64, n_distractors=64, n_queries=16, seed=3)
+
+
+def _make_system(corpus, aggregation="rerank", quorum=1):
+    tok = HashTokenizer()
+    return CFedRAGSystem(
+        corpus,
+        CFedRAGConfig(aggregation=aggregation, quorum=quorum),
+        tokenizer=tok,
+        reranker=overlap_reranker(tok) if aggregation == "rerank" else None,
+    )
+
+
+def _assert_context_equal(a: dict, b: dict):
+    for k in ("chunk_tokens", "chunk_ids", "scores", "providers"):
+        assert np.array_equal(a[k], b[k]), f"context[{k}] diverged"
+    assert a["n_candidates"] == b["n_candidates"]
+
+
+@pytest.mark.parametrize("aggregation", ["embedding_rank", "rerank"])
+def test_answer_batch_matches_sequential(corpus, aggregation):
+    sys_ = _make_system(corpus, aggregation)
+    texts = [q.text for q in corpus.queries[:8]]
+    seq = [sys_.orchestrator.answer(t) for t in texts]
+    bat = sys_.orchestrator.answer_batch(texts)
+    assert len(bat) == len(seq)
+    for s, b in zip(seq, bat):
+        _assert_context_equal(s["context"], b["context"])
+        assert s["n_providers"] == b["n_providers"]
+
+
+def test_answer_batch_single_request_per_provider(corpus):
+    sys_ = _make_system(corpus)
+    texts = [q.text for q in corpus.queries[:8]]
+    for p in sys_.providers:
+        p.n_requests = 0
+    sys_.orchestrator.answer_batch(texts)
+    assert all(p.n_requests == 1 for p in sys_.providers), (
+        "batched path must issue exactly one sealed request per provider"
+    )
+    for p in sys_.providers:
+        p.n_requests = 0
+    for t in texts:
+        sys_.orchestrator.answer(t)
+    assert all(p.n_requests == len(texts) for p in sys_.providers)
+
+
+def test_answer_batch_with_failed_provider(corpus):
+    sys_ = _make_system(corpus)
+    sys_.providers[0].fail = True
+    texts = [q.text for q in corpus.queries[:4]]
+    seq = [sys_.orchestrator.answer(t) for t in texts]
+    bat = sys_.orchestrator.answer_batch(texts)
+    for s, b in zip(seq, bat):
+        _assert_context_equal(s["context"], b["context"])
+        assert b["n_providers"] == len(sys_.providers) - 1  # k_n < k, still answers
+
+
+def test_answer_batch_quorum_violation_raises(corpus):
+    sys_ = _make_system(corpus, quorum=2)
+    for p in sys_.providers:
+        p.fail = True
+    with pytest.raises(RuntimeError, match="quorum"):
+        sys_.orchestrator.answer_batch([corpus.queries[0].text])
+
+
+def test_batched_retrieve_matches_per_query(corpus):
+    sys_ = _make_system(corpus)
+    p = sys_.providers[0]
+    tok = sys_.tok
+    q_rows = np.stack([tok.encode(q.text, max_len=24) for q in corpus.queries[:6]])
+    batched = p.retrieve(q_rows, 4)
+    for b in range(len(q_rows)):
+        single = p.retrieve(q_rows[b], 4)
+        assert np.array_equal(single["scores"], batched["scores"][b])
+        assert np.array_equal(single["chunk_ids"], batched["chunk_ids"][b])
+        assert np.array_equal(single["chunk_tokens"], batched["chunk_tokens"][b])
+
+
+def test_eval_retrieval_batched_matches_sequential(corpus):
+    sys_ = _make_system(corpus)
+    r_b = sys_.eval_retrieval(12, batch_size=8)
+    r_s = sys_.eval_retrieval(12, batch_size=1)
+    assert r_b["recall_at_n"] == r_s["recall_at_n"]
+    assert r_b["mrr"] == pytest.approx(r_s["mrr"])
+
+
+def test_cross_encoder_reranker_batched_matches_per_query(corpus):
+    """make_reranker: one flattened (B*C, S) forward pass must score the
+    same as per-query calls, and drive answer_batch == answer parity."""
+    from repro.configs import get_config, smoke_config
+    from repro.models.cross_encoder import make_reranker, param_specs
+    from repro.models.params import init_params
+    from repro.runtime.sharding import ShardingPolicy, base_rules
+
+    cfg = smoke_config(get_config("bge-reranker-base")).with_overrides(dtype="float32")
+    pol = ShardingPolicy(rules=base_rules(False), mesh=None)
+    params = init_params(param_specs(cfg), jax.random.PRNGKey(0))
+    rerank = make_reranker(cfg, pol, params, max_len=48)
+    assert rerank.supports_batch
+
+    tok = HashTokenizer()
+    sys_ = CFedRAGSystem(
+        corpus, CFedRAGConfig(aggregation="rerank"), tokenizer=tok, reranker=rerank
+    )
+    texts = [q.text for q in corpus.queries[:3]]
+    seq = [sys_.orchestrator.answer(t) for t in texts]
+    bat = sys_.orchestrator.answer_batch(texts)
+    for s, b in zip(seq, bat):
+        assert np.array_equal(s["context"]["chunk_ids"], b["context"]["chunk_ids"])
+        assert_allclose(s["context"]["scores"], b["context"]["scores"], rtol=1e-5, atol=1e-6)
+
+
+# ---------------- batched kernel path ----------------
+@given(
+    q=st.integers(1, 40),
+    n=st.integers(10, 300),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=12, deadline=None)
+def test_retrieval_topk_batched_property(q, n, k, seed):
+    """Default block sizes (the production path) over random (B*Q, D)
+    shapes: kernel == oracle."""
+    kk = jax.random.PRNGKey(seed)
+    qs = jax.random.normal(kk, (q, 16))
+    cs = jax.random.normal(jax.random.fold_in(kk, 1), (n, 16))
+    s_p, i_p = retrieval_topk_pallas(qs, cs, k)
+    s_r, i_r = retrieval_topk_ref(qs, cs, k)
+    assert_allclose(np.asarray(s_p), np.asarray(s_r), rtol=1e-5, atol=1e-5)
+    gathered = np.take_along_axis(
+        np.asarray(qs) @ np.asarray(cs).T, np.asarray(i_p), axis=1
+    )
+    assert_allclose(gathered, np.asarray(s_r), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("q", [1, 3, 5, 7, 9, 12, 17])
+def test_retrieval_topk_small_q_block_alignment(q):
+    """Regression: bq clamped to tiny/odd Q must round up to a multiple of
+    8 (sublane alignment), never producing a ragged block shape."""
+    kk = jax.random.PRNGKey(q)
+    qs = jax.random.normal(kk, (q, 32))
+    cs = jax.random.normal(jax.random.fold_in(kk, 1), (100, 32))
+    s_p, i_p = retrieval_topk_pallas(qs, cs, 4, bn=64)
+    s_r, i_r = retrieval_topk_ref(qs, cs, 4)
+    assert s_p.shape == (q, 4) and i_p.shape == (q, 4)
+    assert_allclose(np.asarray(s_p), np.asarray(s_r), rtol=1e-5, atol=1e-5)
+    assert (np.asarray(i_p) == np.asarray(i_r)).all()
+
+
+@pytest.mark.parametrize("q,n,k", [(5, 70, 4), (9, 130, 8)])
+def test_retrieval_topk_bitonic_merge_matches_ref(q, n, k):
+    """The TPU-side compare-exchange network must agree with the XLA sort
+    merge and the oracle (indices included — tie-break parity)."""
+    kk = jax.random.PRNGKey(q * n)
+    qs = jax.random.normal(kk, (q, 16))
+    cs = jax.random.normal(jax.random.fold_in(kk, 1), (n, 16))
+    s_b, i_b = retrieval_topk_pallas(qs, cs, k, bq=8, bn=32, merge="bitonic")
+    s_r, i_r = retrieval_topk_ref(qs, cs, k)
+    assert_allclose(np.asarray(s_b), np.asarray(s_r), rtol=1e-5, atol=1e-5)
+    assert (np.asarray(i_b) == np.asarray(i_r)).all()

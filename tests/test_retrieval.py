@@ -55,11 +55,10 @@ def _spawn_multidevice_check():
         import os
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import jax, jax.numpy as jnp, numpy as np
-        from jax.sharding import Mesh
         from repro.core.retrieval import federated_topk
         from repro.kernels.retrieval_topk.ref import retrieval_topk_ref
-        mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"),
-                    axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.runtime.compat import make_mesh
+        mesh = make_mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
         k = jax.random.PRNGKey(0)
         q = jax.random.normal(k, (4, 32))
         c = jax.random.normal(jax.random.fold_in(k, 1), (128, 32))
