@@ -1,11 +1,19 @@
 """End-to-end C-FedRAG pipeline benchmarks (paper Fig. 2/3 flow).
 
-Two views of the serving cost picture:
+Four views of the serving cost picture:
   * stage latency — dispatch+seal / local retrieval / aggregate (rerank) /
     prompt build, per stage, per query
   * throughput — queries/sec through ``answer`` (B=1) vs ``answer_batch``
     at B in {1, 8, 32}: one sealed request per provider per batch, so
     seal/serialize/embed overheads amortize across the batch
+  * latency distribution — collect under straggler delays (one slow
+    provider): sequential dispatch pays the SUM of provider round-trips,
+    concurrent fan-out pays the MAX; per-query p50/p95 through the
+    concurrent path
+  * ragged goodput — continuous-batching scheduler vs lock-step
+    ``step_batch`` on a mixed short/long generation workload: retiring
+    rows free their cache slot for queued work instead of idling until
+    the longest row finishes
 
 ``main(["--json"])`` (or benchmarks/run.py --json) writes BENCH_e2e.json
 rows with the stable ``{name, us, derived}`` schema so the perf
@@ -28,6 +36,10 @@ BATCH_SIZES = (1, 8, 32)
 
 
 N_QUERIES = 64
+
+# straggler profile for the latency-distribution mode: 4 providers
+# (corpus split), one slow — sum = 0.5s/round, max = 0.2s/round
+STRAGGLER_DELAYS = (0.1, 0.2, 0.1, 0.1)
 
 
 @functools.lru_cache(maxsize=1)
@@ -92,6 +104,135 @@ def run_throughput(n_queries=N_QUERIES, batch_sizes=BATCH_SIZES):
     return rows
 
 
+def _pctl(lats, p):
+    return float(np.percentile(np.asarray(lats), p))
+
+
+def run_latency_distribution(n_rounds=3, batch=4):
+    """Collect latency under stragglers: sequential (sum of round-trips)
+    vs concurrent fan-out (max), plus per-query answer() p50/p95 through
+    the concurrent path.  Fresh systems per mode — delays are mutated."""
+    corpus = make_federated_corpus(n_facts=96, n_distractors=96, n_queries=16)
+    tok = HashTokenizer()
+
+    def build(concurrent):
+        sys_ = CFedRAGSystem(
+            corpus,
+            CFedRAGConfig(aggregation="rerank", split_by="corpus", concurrent_collect=concurrent),
+            tokenizer=tok,
+            reranker=overlap_reranker(tok),
+        )
+        for p, d in zip(sys_.providers, STRAGGLER_DELAYS):
+            p.delay_s = d
+        return sys_
+
+    texts = [q.text for q in corpus.queries]
+    rows = []
+    lat_by_mode = {}
+    for name, conc in (("sequential", False), ("concurrent", True)):
+        sys_ = build(conc)
+        sys_.orchestrator.collect_contexts_batch(texts[:batch])  # warm jit caches
+        lats = []
+        for r in range(n_rounds):
+            t0 = time.monotonic()
+            sys_.orchestrator.collect_contexts_batch(texts[r * batch : (r + 1) * batch])
+            lats.append(time.monotonic() - t0)
+        lat_by_mode[name] = lats
+        rows.append(
+            (
+                f"e2e_collect_{name}",
+                float(np.mean(lats)) * 1e6,
+                f"straggler batch collect (sum={sum(STRAGGLER_DELAYS):.1f}s max={max(STRAGGLER_DELAYS):.1f}s)",
+            )
+        )
+    speedup = np.mean(lat_by_mode["sequential"]) / np.mean(lat_by_mode["concurrent"])
+    # per-query latency distribution through the concurrent path
+    sys_ = build(True)
+    q_lats = []
+    for t in texts[:8]:
+        t0 = time.monotonic()
+        sys_.orchestrator.answer(t)
+        q_lats.append(time.monotonic() - t0)
+    rows.append(
+        (
+            "e2e_collect_per_query",
+            float(np.mean(q_lats)) * 1e6,
+            f"p50={_pctl(q_lats, 50) * 1e3:.0f}ms p95={_pctl(q_lats, 95) * 1e3:.0f}ms "
+            f"(concurrent {speedup:.2f}x vs sequential)",
+        )
+    )
+    return rows
+
+
+def run_scheduler_goodput(n_requests=32):
+    """Ragged-generation goodput: lock-step ``step_batch`` decodes every
+    chunk to its slowest row, the continuous scheduler retires short rows
+    and admits queued work into the freed slot.  Budgets alternate
+    short/long so every lock-step chunk contains a long row (the
+    adversarial-but-typical mixed workload).  The model is sized so one
+    decode step costs more than one dispatch — the regime any real
+    serving deployment lives in (on a toy model, scheduler dispatch
+    overhead and decode compute are the same order and the two paths
+    roughly tie)."""
+    import jax
+
+    from repro.configs import get_config, smoke_config
+    from repro.models import lm as LM
+    from repro.models.params import init_params
+    from repro.runtime.sharding import ShardingPolicy, base_rules
+    from repro.serving.engine import ServeConfig, ServeEngine
+    from repro.serving.scheduler import Scheduler
+
+    cfg = smoke_config(get_config("qwen3-0.6b")).with_overrides(
+        dtype="float32", d_model=192, n_layers=4, d_ff=384, n_heads=4, head_dim=32
+    )
+    params = init_params(LM.param_specs(cfg), jax.random.PRNGKey(0))
+    pol = ShardingPolicy(rules=base_rules(False), mesh=None)
+    short, long_ = 2, 64
+    scfg = ServeConfig(max_batch=4, max_prompt_len=32, max_new_tokens=long_, sched_chunk=8)
+    eng = ServeEngine(cfg, pol, params, scfg)
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(8, cfg.vocab_size, size=int(rng.integers(8, 32))).astype(np.int32)
+        for _ in range(n_requests)
+    ]
+    budgets = [short if i % 2 else long_ for i in range(n_requests)]
+
+    def lockstep():
+        for p in prompts:
+            eng.submit(p)
+        outs = []
+        while eng.queue:
+            outs.extend(eng.step_batch())
+        # lock-step cannot honor per-request budgets in flight; truncate after
+        return [o[:b] for o, b in zip(outs, budgets)]
+
+    def continuous():
+        sched = Scheduler()
+        for p, b in zip(prompts, budgets):
+            sched.submit(p, max_new_tokens=b)
+        eng.serve(sched)
+        return sched
+
+    lockstep(), continuous()  # warm both jit paths
+    rows = []
+    qps = {}
+    for name, fn in (("lockstep", lockstep), ("continuous", continuous)):
+        t0 = time.monotonic()
+        sched = fn()
+        dt = time.monotonic() - t0
+        qps[name] = n_requests / dt
+        derived = f"{qps[name]:.1f} qps ragged {short}/{long_}-token workload"
+        if name == "continuous":
+            st = sched.latency_stats()
+            derived += (
+                f" p50={st['p50_s'] * 1e3:.0f}ms p95={st['p95_s'] * 1e3:.0f}ms"
+                f" ({qps['continuous'] / qps['lockstep']:.2f}x vs lockstep)"
+            )
+        rows.append((f"e2e_sched_{name}", dt / n_requests * 1e6, derived))
+    return rows
+
+
 def write_json(rows, path="BENCH_e2e.json"):
     payload = [{"name": n, "us": round(us, 1), "derived": d} for n, us, d in rows]
     with open(path, "w") as f:
@@ -101,7 +242,7 @@ def write_json(rows, path="BENCH_e2e.json"):
 
 def main(argv=None):
     argv = list(argv or [])
-    rows = run() + run_throughput()
+    rows = run() + run_throughput() + run_latency_distribution() + run_scheduler_goodput()
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     if "--json" in argv:

@@ -39,6 +39,12 @@ def main(argv=None) -> None:
     e2e_rows = e2e_pipeline.run() + e2e_pipeline.run_throughput()
     for name, us, derived in e2e_rows:
         print(f"{name},{us:.1f},{derived}")
+
+    print("\n== straggler fan-out latency + continuous-batching goodput ==")
+    sched_rows = e2e_pipeline.run_latency_distribution() + e2e_pipeline.run_scheduler_goodput()
+    for name, us, derived in sched_rows:
+        print(f"{name},{us:.1f},{derived}")
+    e2e_rows += sched_rows
     if args.json:
         print(f"wrote {e2e_pipeline.write_json(e2e_rows)}")
 

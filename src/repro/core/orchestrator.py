@@ -16,10 +16,25 @@ provider carries the whole (B, S) query block, aggregation re-ranks the
 (B, C, S) candidate block in one pass, and generation goes through the
 generator's ``generate_batch`` hook when present — identical results to
 B sequential ``answer`` calls at a fraction of the per-query overhead.
+
+Dispatch is **transport-aware**: when providers have real round-trip
+latency (``delay_s``, standing in for remote RTT) or a ``deadline_s``
+SLO is set, step 2-3 fans the sealed request out to all selected
+providers at once (one thread-pool future per provider), so collect
+wall-clock is the *max* of provider round-trips instead of the sum,
+``deadline_s`` is a true wall-clock cutoff (whatever arrived by then is
+aggregated, stragglers are abandoned), and the quorum check runs against
+the arrivals at the deadline.  For colocated in-process providers with
+sub-millisecond round-trips the sequential loop is kept — thread handoff
+would cost more than the overlap buys.  Responses are re-ordered by
+provider position before aggregation, so results are bit-identical
+between the two dispatchers whenever every provider responds in time;
+``concurrent_collect=True/False`` forces either path (False is the
+determinism baseline).
 """
 from __future__ import annotations
 
-import secrets
+import threading
 import time
 from typing import Callable, Sequence
 
@@ -46,6 +61,7 @@ class Orchestrator:
         selector=None,  # core.advanced.ProviderSelector (paper §2.2 routing)
         selector_top_p: int = 0,  # 0 -> broadcast to all (paper's basic setup)
         rewriter=None,  # core.advanced.QueryRewriter (per-provider expansion)
+        concurrent_collect: bool | None = None,  # None -> auto (transport-aware)
     ):
         self.providers = list(providers)
         self.tok = tokenizer
@@ -58,6 +74,7 @@ class Orchestrator:
         self.selector = selector
         self.selector_top_p = selector_top_p
         self.rewriter = rewriter
+        self.concurrent_collect = concurrent_collect
         self.enclave = Enclave("cfedrag-orchestrator-v1")
         self._establish_channels()
 
@@ -78,29 +95,107 @@ class Orchestrator:
         return self.providers  # broadcast policy (paper's basic setup)
 
     # ------------------------------------------------------------------ #
+    def _roundtrip(self, p, tokens_for) -> dict:
+        """One sealed request/response exchange with provider ``p``.  The
+        per-provider lock serializes overlapping rounds (an abandoned
+        straggler from a previous collect must not interleave its channel
+        sequence numbers with the current round)."""
+        with p.rpc_lock:
+            ch = getattr(p, "_orch_channel")
+            nonce, sealed = ch.seal(
+                pack({"query_tokens": tokens_for(p), "m": np.int64(self.m_local)})
+            )
+            r_nonce, r_sealed = p.handle_request(nonce, sealed)
+            return unpack(ch.open(r_nonce, r_sealed))
+
+    def _quorum_check(self, responses: list[dict]) -> list[dict]:
+        if len(responses) < self.quorum:
+            raise RuntimeError(
+                f"quorum not met: {len(responses)}/{self.quorum} providers answered"
+            )
+        return responses
+
+    def _use_concurrent(self, providers) -> bool:
+        """Transport-aware dispatch policy: fan out when overlap can pay
+        (providers with real round-trip latency) or when wall-clock
+        deadline semantics are requested; else the sequential loop wins
+        (in-process round-trips are GIL-bound, so threads only add
+        handoff cost).  ``concurrent_collect`` forces either path."""
+        if len(providers) <= 1:
+            return False
+        if self.concurrent_collect is not None:
+            return self.concurrent_collect
+        return self.deadline_s is not None or any(
+            getattr(p, "delay_s", 0.0) for p in providers
+        )
+
     def _collect(self, providers, tokens_for) -> list[dict]:
-        """Shared steps 2-3 dispatch loop: sealed round-trip per provider
-        under the deadline, straggler tolerance, quorum check.
+        """Shared steps 2-3 dispatch: sealed round-trip per provider under
+        the deadline, straggler tolerance, quorum check.
         ``tokens_for(provider)`` builds the query token payload."""
+        if self._use_concurrent(providers):
+            return self._collect_concurrent(providers, tokens_for)
+        return self._collect_sequential(providers, tokens_for)
+
+    def _collect_sequential(self, providers, tokens_for) -> list[dict]:
+        """Sequential loop — the in-process fast path and the determinism
+        baseline (``concurrent_collect=False``): latency is the SUM of
+        provider round-trips and the deadline only fires between calls."""
         responses = []
         t0 = time.monotonic()
         for p in providers:
             if self.deadline_s is not None and time.monotonic() - t0 > self.deadline_s:
                 break  # deadline: proceed with what we have (k_n <= k)
             try:
-                ch = getattr(p, "_orch_channel")
-                nonce, sealed = ch.seal(
-                    pack({"query_tokens": tokens_for(p), "m": np.int64(self.m_local)})
-                )
-                r_nonce, r_sealed = p.handle_request(nonce, sealed)
-                responses.append(unpack(ch.open(r_nonce, r_sealed)))
+                responses.append(self._roundtrip(p, tokens_for))
             except (ConnectionError, TimeoutError):
                 continue  # straggler/failed provider: tolerated by quorum
-        if len(responses) < self.quorum:
-            raise RuntimeError(
-                f"quorum not met: {len(responses)}/{self.quorum} providers answered"
-            )
-        return responses
+        return self._quorum_check(responses)
+
+    def _collect_concurrent(self, providers, tokens_for) -> list[dict]:
+        """Concurrent fan-out: every provider round-trip runs in its own
+        future, so collect wall-clock tracks the slowest *responding*
+        provider (max, not sum).  ``deadline_s`` is a hard wall-clock
+        cutoff: whatever completed by then is returned (quorum permitting)
+        and stragglers are abandoned mid-flight — Algorithm 1's k_n <= k
+        straggler tolerance with real overlap.  Completed responses are
+        re-ordered by provider position so aggregation stays bit-identical
+        to the sequential path when everyone answers in time.
+
+        Workers are daemon threads on purpose: an abandoned straggler
+        (a hung provider past the deadline) must never block interpreter
+        exit — the deadline SLO bounds process lifetime too."""
+        results: dict[int, dict] = {}
+        unexpected: list[BaseException] = []
+        n_finished = [0]
+        cond = threading.Condition()
+
+        def worker(i, p):
+            resp = None
+            try:
+                resp = self._roundtrip(p, tokens_for)
+            except (ConnectionError, TimeoutError):
+                pass  # failed provider: tolerated by quorum
+            except BaseException as e:  # real bugs must surface, not vanish
+                with cond:
+                    unexpected.append(e)
+                    n_finished[0] += 1
+                    cond.notify_all()
+                return
+            with cond:
+                if resp is not None:
+                    results[i] = resp
+                n_finished[0] += 1
+                cond.notify_all()
+
+        for i, p in enumerate(providers):
+            threading.Thread(target=worker, args=(i, p), daemon=True).start()
+        with cond:
+            cond.wait_for(lambda: n_finished[0] >= len(providers), timeout=self.deadline_s)
+            if unexpected:
+                raise unexpected[0]
+            responses = [results[i] for i in sorted(results)]
+        return self._quorum_check(responses)
 
     def collect_contexts(self, query_text: str) -> list[dict]:
         """Steps 1-3: dispatch + quorum collection."""

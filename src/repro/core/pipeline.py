@@ -31,6 +31,8 @@ class CFedRAGConfig:
     embed_dim: int = 256
     chunk_max_len: int = 40
     quorum: int = 1
+    deadline_s: float | None = None  # wall-clock collect cutoff (Alg. 1 k_n <= k)
+    concurrent_collect: bool | None = None  # None -> auto (transport-aware)
     use_pallas: bool = False
 
 
@@ -77,12 +79,62 @@ class CFedRAGSystem:
             m_local=self.cfg.m_local,
             n_global=self.cfg.n_global,
             quorum=self.cfg.quorum,
+            deadline_s=self.cfg.deadline_s,
+            concurrent_collect=self.cfg.concurrent_collect,
         )
 
     # ---- serving entry points ----
     def answer_batch(self, query_texts: list[str]) -> list[dict]:
         """Batched Algorithm 1: one sealed request per provider per batch."""
         return self.orchestrator.answer_batch(query_texts)
+
+    def serve(
+        self,
+        query_texts: list[str],
+        *,
+        max_new_tokens: int | list[int] | None = None,
+        gen_deadline_s: float | list[float | None] | None = None,
+    ) -> list[dict]:
+        """Scheduler-driven Algorithm 1: concurrent provider fan-out for
+        collect, one batched aggregation pass, then generation through the
+        engine's continuous-batching slot pool (when the generator is an
+        ``engine_generator``) so ragged generations retire early and free
+        their slot.  Per-request generation budgets/deadlines flow through
+        to the scheduler; each result carries its ``latency_s``
+        (submit -> finish) so callers can report p50/p95.  Falls back to
+        ``answer_batch`` semantics when no engine-backed generator is
+        wired."""
+        queries = list(query_texts)
+        if not queries:
+            return []
+        orch = self.orchestrator
+        engine = getattr(orch.generator, "engine", None)
+        continuous = getattr(orch.generator, "mode", "continuous") == "continuous"
+        if orch.generator is None or engine is None or not continuous:
+            # no engine-backed generator (or a lockstep determinism
+            # baseline was wired in): keep answer_batch semantics
+            return self.answer_batch(queries)
+        from repro.serving.scheduler import Scheduler
+
+        responses = orch.collect_contexts_batch(queries)
+        contexts = orch.aggregate_batch(queries, responses)
+        outs = [{"context": c, "n_providers": len(responses)} for c in contexts]
+        prompts = [orch.build_prompt(q, c) for q, c in zip(queries, contexts)]
+        sched = Scheduler()
+        rids = sched.submit_many(
+            prompts,
+            max_new_tokens,
+            gen_deadline_s if isinstance(gen_deadline_s, (list, tuple)) else [gen_deadline_s] * len(queries),
+        )
+        answers = engine.serve(sched)
+        for out, prompt, rid in zip(outs, prompts, rids):
+            req = sched.results[rid]
+            out["prompt"] = prompt
+            out["status"] = req.status
+            out["latency_s"] = req.latency_s
+            if req.status == "done":
+                out["answer_tokens"] = answers[rid]
+        return outs
 
     # ---- evaluation (Table 1 protocol on synthetic provenance) ----
     def eval_retrieval(self, n_queries: int | None = None, batch_size: int = 32) -> dict:
@@ -125,10 +177,10 @@ def single_silo_system(corpus: FederatedCorpus, corpus_name: str, cfg: CFedRAGCo
 
 
 def centralized_system(corpus: FederatedCorpus, cfg: CFedRAGConfig | None = None, **kw):
-    """Centralized MedRag(MedCorp) baseline: all corpora in one index."""
-    c = dataclasses.replace(cfg or CFedRAGConfig(), split_by="none_all")
-    # split_by key constant -> single provider holding everything
-    c = dataclasses.replace(c, split_by="site")
+    """Centralized MedRag(MedCorp) baseline: all corpora in one index —
+    every chunk is remapped to one site, so the site split yields a single
+    provider holding everything."""
+    c = dataclasses.replace(cfg or CFedRAGConfig(), split_by="site")
     merged = FederatedCorpus(
         chunks=[dataclasses.replace(ch, site=0) for ch in corpus.chunks],
         queries=corpus.queries,

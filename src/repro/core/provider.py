@@ -12,6 +12,7 @@ receive inbound connections except via the orchestrator channel (paper
 from __future__ import annotations
 
 import io
+import threading
 import time
 from typing import Callable, Sequence
 
@@ -64,6 +65,11 @@ class DataProvider:
         self.embeddings: np.ndarray | None = None
         self.channel: SecureChannel | None = None
         self.n_requests = 0  # sealed requests handled (observability/tests)
+        # serializes sealed round-trips: the orchestrator's concurrent
+        # fan-out must never interleave two rounds' channel sequence
+        # numbers on the same provider (e.g. an abandoned straggler
+        # finishing while the next collect is already in flight)
+        self.rpc_lock = threading.Lock()
 
     # ---- lifecycle ----
     def build_index(self, batch: int = 512):

@@ -2,10 +2,13 @@
 providers + enclave orchestrator, and answer queries.
 
   python -m repro.launch.serve --queries 5 --aggregation rerank
+  python -m repro.launch.serve --queries 5 --generate --deadline-s 0.5
 
 Uses the bag embedder + lexical-overlap reranker by default (training-free
-CPU path); pass --generator-ckpt to decode answers with a trained reduced
-LM (see examples/federated_medqa.py for the full train->serve loop)."""
+CPU path).  ``--generate`` stands up a reduced-LM ``ServeEngine`` and
+routes the whole query set through ``CFedRAGSystem.serve`` — concurrent
+provider fan-out, continuous-batching generation, per-request p50/p95
+latency (see examples/federated_medqa.py for the trained-LM loop)."""
 from __future__ import annotations
 
 import argparse
@@ -43,6 +46,27 @@ def overlap_reranker(tok: HashTokenizer):
     return rerank
 
 
+def make_demo_engine(max_new_tokens: int = 16):
+    """Reduced-LM ServeEngine (random-init, CPU-sized) + generator adapter
+    for the scheduler-driven serving demo."""
+    import jax
+
+    from repro.configs import get_config, smoke_config
+    from repro.models import lm as LM
+    from repro.models.params import init_params
+    from repro.runtime.sharding import ShardingPolicy, base_rules
+    from repro.serving.engine import ServeConfig, ServeEngine, engine_generator
+
+    cfg = smoke_config(get_config("qwen3-0.6b")).with_overrides(dtype="float32")
+    params = init_params(LM.param_specs(cfg), jax.random.PRNGKey(0))
+    pol = ShardingPolicy(rules=base_rules(False), mesh=None)
+    engine = ServeEngine(
+        cfg, pol, params,
+        ServeConfig(max_batch=4, max_prompt_len=256, max_new_tokens=max_new_tokens),
+    )
+    return engine_generator(engine)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--queries", type=int, default=5)
@@ -51,29 +75,75 @@ def main(argv=None):
     ap.add_argument("--m-local", type=int, default=8)
     ap.add_argument("--n-global", type=int, default=8)
     ap.add_argument("--kill-provider", type=int, default=None)
+    ap.add_argument("--deadline-s", type=float, default=None, help="collect wall-clock cutoff")
+    ap.add_argument(
+        "--sequential-collect", action="store_true",
+        help="disable concurrent provider fan-out (determinism baseline)",
+    )
+    ap.add_argument(
+        "--generate", action="store_true",
+        help="decode answers through the continuous-batching ServeEngine",
+    )
+    ap.add_argument("--max-new-tokens", type=int, default=16)
     args = ap.parse_args(argv)
 
     corpus = make_federated_corpus(n_facts=args.n_facts, n_distractors=args.n_facts, n_queries=args.queries)
     tok = HashTokenizer()
     sys_ = CFedRAGSystem(
         corpus,
-        CFedRAGConfig(aggregation=args.aggregation, m_local=args.m_local, n_global=args.n_global),
+        CFedRAGConfig(
+            aggregation=args.aggregation,
+            m_local=args.m_local,
+            n_global=args.n_global,
+            deadline_s=args.deadline_s,
+            concurrent_collect=False if args.sequential_collect else None,
+        ),
         tokenizer=tok,
         reranker=overlap_reranker(tok) if args.aggregation == "rerank" else None,
+        generator=make_demo_engine(args.max_new_tokens) if args.generate else None,
     )
     if args.kill_provider is not None:
         sys_.providers[args.kill_provider].fail = True
         print(f"!! provider {args.kill_provider} marked down (quorum keeps serving)")
 
-    for q in corpus.queries[: args.queries]:
-        res = sys_.orchestrator.answer(q.text)
+    texts = [q.text for q in corpus.queries[: args.queries]]
+    if args.generate:
+        # warm the engine's jit paths (admit/decode-chunk) so the printed
+        # per-request p50/p95 reflect serving latency, not compilation
+        sys_.orchestrator.generator.engine.serve_prompts(
+            [np.full((4,), 9, np.int32)], max_new_tokens=2
+        )
+    if args.deadline_s is not None:
+        # readiness warm-up: the first collect jit-compiles the provider
+        # embed path (seconds) — a deadline SLO applies to serving, not
+        # to cold-start compilation
+        orch = sys_.orchestrator
+        orch.deadline_s = None
+        orch.collect_contexts_batch(texts)
+        orch.collect_contexts(texts[0])
+        orch.deadline_s = args.deadline_s
+    if args.generate:
+        results = sys_.serve(texts, max_new_tokens=args.max_new_tokens)
+    else:
+        results = [sys_.orchestrator.answer(t) for t in texts]
+    for q, res in zip(corpus.queries, results):
         ids = list(res["context"]["chunk_ids"])
         hit = q.gold_chunk_id in ids
+        extra = ""
+        if "answer_tokens" in res:
+            extra = f" answer_toks={len(res['answer_tokens'])} lat={res['latency_s'] * 1e3:.1f}ms"
         print(
             f"Q: {q.text!r:45s} gold_chunk={q.gold_chunk_id:4d} "
             f"hit@{args.n_global}={'Y' if hit else 'n'} "
             f"providers={res['n_providers']} candidates={res['context']['n_candidates']}"
+            + extra
         )
+    if args.generate:
+        lats = sorted(r["latency_s"] for r in results if r.get("latency_s") is not None)
+        if lats:
+            p50 = lats[len(lats) // 2]
+            p95 = lats[min(len(lats) - 1, int(len(lats) * 0.95))]
+            print(f"\ngeneration latency: p50={p50 * 1e3:.1f}ms p95={p95 * 1e3:.1f}ms")
     stats = sys_.eval_retrieval(args.queries)
     print(f"\nrecall@{args.n_global}: {stats['recall_at_n']:.3f}  mrr: {stats['mrr']:.3f}")
 

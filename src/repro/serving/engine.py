@@ -1,21 +1,34 @@
-"""RAG serving engine: batched prefill + decode with the C-FedRAG pipeline.
+"""RAG serving engine: continuous batching over a fixed pool of cache slots.
 
 Request flow (paper Fig. 2/3 in serving form):
   query -> federated retrieval (core.retrieval / orchestrator)
-        -> enclave re-rank -> prompt build -> batched prefill -> decode loop
+        -> enclave re-rank -> prompt build -> slot prefill -> decode chunks
 
-Batching: requests are grouped to `max_batch`; prompts are packed
-left-aligned (PAD tail) into a common cache and each row decodes from its
-OWN write position (per-row `lengths`), so ragged batches never attend to
-PAD key/values.  The decode loop is a single jitted ``lax.while_loop``
-with on-device EOS tracking — no per-token host sync.  The engine is
-deliberately synchronous (single-host simulation); the scheduler hook
-points (queue, deadline, quorum) mirror a production continuous-batching
-server."""
+Two serving modes share one cache layout:
+
+  * **Lock-step** (``step_batch``): drain the queue in fixed ``max_batch``
+    chunks, one packed prefill + one fused decode ``while_loop`` per
+    chunk.  Kept as the deterministic baseline the continuous path is
+    parity-tested (and benchmarked) against.
+  * **Continuous** (``serve`` / ``serve_prompts``): a fixed pool of
+    ``max_batch`` cache slots.  Finished rows (EOS or per-request budget)
+    retire and free their slot; the ``Scheduler`` admits queued requests
+    into free slots by prefilling just that row and scattering its cache
+    in, while the other slots keep decoding.  Decode runs in fused
+    chunks of at most ``sched_chunk`` steps (never past the smallest
+    remaining per-slot budget) between scheduler interventions, so one
+    long generation no longer stalls the batch and host sync stays off
+    the per-token path.
+
+Both paths pack prompts left-aligned (PAD tail) and decode each row from
+its OWN cache position (per-row ``lengths``), so ragged batches never
+attend to PAD key/values; rows that hit EOS are masked to PAD for the
+rest of their stay in the batch (post-EOS logits are never emitted).
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -25,20 +38,24 @@ from repro.configs.base import ModelConfig
 from repro.data.tokenizer import EOS, PAD, HashTokenizer
 from repro.models import lm as LM
 from repro.runtime.sharding import ShardingPolicy
+from repro.serving.scheduler import Request, Scheduler
 
 
 @dataclasses.dataclass
 class ServeConfig:
-    max_batch: int = 8
+    max_batch: int = 8  # cache slots (continuous) / chunk size (lock-step)
     max_prompt_len: int = 512
-    max_new_tokens: int = 16
+    max_new_tokens: int = 16  # hard cap; per-request budgets clamp to this
     temperature: float = 0.0
+    sched_chunk: int = 8  # max fused decode steps between scheduler runs
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, pol: ShardingPolicy, params, scfg: ServeConfig):
         self.cfg, self.pol, self.params, self.scfg = cfg, pol, params, scfg
         cache_len = scfg.max_prompt_len + scfg.max_new_tokens
+        self._cache_len = cache_len
+        t_cap = scfg.max_new_tokens
 
         def prefill_fn(params, tokens, lengths):
             logits, cache = LM.prefill(cfg, pol, params, {"tokens": tokens}, cache_len=cache_len)
@@ -48,7 +65,8 @@ class ServeEngine:
 
         def decode_loop(params, cache, first_tok, lengths):
             """Device-resident greedy decode: runs until every row has
-            emitted EOS or max_new_tokens, with no host round-trips."""
+            emitted EOS or max_new_tokens, with no host round-trips.
+            Rows that are already done emit PAD (never fresh argmax)."""
             b = first_tok.shape[0]
             t_max = scfg.max_new_tokens
             out = jnp.zeros((b, t_max), jnp.int32).at[:, 0].set(first_tok)
@@ -64,14 +82,75 @@ class ServeEngine:
                     cfg, pol, params, cache, cur[:, None], lengths + t - 1
                 )
                 nxt = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)
+                nxt = jnp.where(done, PAD, nxt)  # finished rows stay PAD
                 out = out.at[:, t].set(nxt)
                 return (t + 1, cache, nxt, done | (nxt == EOS), out)
 
             t, _, _, _, out = jax.lax.while_loop(cond, body, state)
             return out, t
 
+        def admit_row(params, cache, cur, lengths, emitted, done, budget, out,
+                      row_tokens, slot, length, b_new):
+            """Prefill ONE request and scatter it into cache slot ``slot``
+            in a single fused call (every cache leaf is (n_blocks, B, ...)
+            so the slot axis is 1).  Fusing prefill + scatter keeps
+            admission at one dispatch per request."""
+            first, row_cache = prefill_fn(params, row_tokens, length[None])
+            first = first[0]
+            cache = jax.tree.map(lambda c, rc: c.at[:, slot].set(rc[:, 0]), cache, row_cache)
+            cur = cur.at[slot].set(first)
+            lengths = lengths.at[slot].set(length)
+            emitted = emitted.at[slot].set(1)
+            budget = budget.at[slot].set(b_new)
+            out = out.at[slot].set(jnp.zeros((t_cap + 1,), jnp.int32).at[0].set(first))
+            done = done.at[slot].set((first == EOS) | (b_new <= 1))
+            return cache, cur, lengths, emitted, done, budget, out
+
+        def decode_chunk(params, cache, cur, lengths, emitted, done, budget, out, n_steps):
+            """Fused decode of up to ``n_steps`` tokens across all slots.
+            Per-slot write offsets (``emitted``) make retire/admit cheap: a
+            slot's output row is always its own [0, emitted) prefix.  The
+            inner loop writes a dense (B, chunk) buffer by step index —
+            exactly the lock-step hot loop — and the ragged merge into the
+            per-slot offsets happens ONCE per chunk, so continuous
+            batching adds no per-token bookkeeping to the decode path."""
+            b = scfg.max_batch
+            rows = jnp.arange(b)
+            chunk = jnp.zeros((b, scfg.sched_chunk), jnp.int32)
+            emitted0 = emitted
+
+            def cond(st):
+                t = st[0]
+                return (t < n_steps) & ~jnp.all(st[4])
+
+            def body(st):
+                t, cache, cur, emitted, done, chunk = st
+                logits, cache = LM.decode_step(
+                    cfg, pol, params, cache, cur[:, None], lengths + emitted - 1
+                )
+                nxt = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)
+                nxt = jnp.where(done, PAD, nxt)
+                chunk = chunk.at[:, t].set(nxt)
+                emitted = emitted + (~done)
+                done = done | (nxt == EOS) | (emitted >= budget)
+                return (t + 1, cache, nxt, emitted, done, chunk)
+
+            st = (jnp.int32(0), cache, cur, emitted, done, chunk)
+            _, cache, cur, emitted, done, chunk = jax.lax.while_loop(cond, body, st)
+            # ragged merge: row i's fresh tokens are chunk[i, :emitted-emitted0]
+            # landing at out[i, emitted0:emitted]; invalid lanes are clipped
+            # into the spare (t_cap) column, which holds no answer tokens
+            j = jnp.arange(scfg.sched_chunk)
+            idx = jnp.minimum(emitted0[:, None] + j[None, :], t_cap)
+            valid = j[None, :] < (emitted - emitted0)[:, None]
+            keep = out[rows[:, None], idx]
+            out = out.at[rows[:, None], idx].set(jnp.where(valid, chunk, keep))
+            return cache, cur, emitted, done, out
+
         self._prefill = jax.jit(prefill_fn)
         self._decode_loop = jax.jit(decode_loop)
+        self._admit_row = jax.jit(admit_row)
+        self._decode_chunk = jax.jit(decode_chunk)
         self.queue: list[np.ndarray] = []
 
     def submit(self, prompt_tokens: np.ndarray):
@@ -87,6 +166,9 @@ class ServeEngine:
             out[i, : len(p)] = p
         return out
 
+    # ------------------------------------------------------------------ #
+    # lock-step path (deterministic baseline)
+    # ------------------------------------------------------------------ #
     def step_batch(self) -> list[np.ndarray]:
         """Serve up to max_batch queued requests; returns answer token rows."""
         if not self.queue:
@@ -101,22 +183,121 @@ class ServeEngine:
         ans = np.asarray(out)[:, : int(n_steps)]
         return [row for row in ans]
 
+    # ------------------------------------------------------------------ #
+    # continuous-batching path (slot pool + scheduler)
+    # ------------------------------------------------------------------ #
+    def serve(self, scheduler: Scheduler) -> dict[int, np.ndarray]:
+        """Drive the slot pool until the scheduler's queue drains and every
+        slot has retired.  Returns {rid: answer tokens}; per-request
+        timestamps land in ``scheduler.results`` for latency stats."""
+        scfg = self.scfg
+        B, t_cap, width = scfg.max_batch, scfg.max_new_tokens, scfg.max_prompt_len
+        cache = LM.init_cache(self.cfg, B, self._cache_len, dtype=jnp.dtype(self.cfg.dtype))
+        cur = jnp.zeros((B,), jnp.int32)
+        lengths = jnp.ones((B,), jnp.int32)
+        emitted = jnp.ones((B,), jnp.int32)
+        done = jnp.ones((B,), bool)  # free slots read as done
+        budget = jnp.ones((B,), jnp.int32)
+        out = jnp.zeros((B, t_cap + 1), jnp.int32)
+        slots: list[Request | None] = [None] * B
+        results: dict[int, np.ndarray] = {}
+        # host mirrors of emitted/done/budget keep the loop at ONE device
+        # sync per chunk; a just-admitted row's done flag is only known
+        # on-device (first token may be EOS), so mirror it as live — the
+        # worst case is one no-op chunk dispatch before the readback
+        em_h = np.ones((B,), np.int64)
+        dn_h = np.ones((B,), bool)
+        bu_h = np.ones((B,), np.int64)
 
-def engine_generator(engine: ServeEngine) -> Callable:
+        while True:
+            # admit queued requests into free slots (one fused prefill each)
+            for slot in range(B):
+                if slots[slot] is not None:
+                    continue
+                req = scheduler.pop_ready()
+                if req is None:
+                    break
+                p = req.tokens[-width:]
+                row = np.zeros((1, width), np.int32)
+                row[0, : len(p)] = p
+                length = np.int32(len(p))
+                # prefill always emits one token, so the effective budget
+                # floor is 1; None means "engine cap" (0 does not)
+                b_new = t_cap if req.max_new_tokens is None else req.max_new_tokens
+                b_new = max(1, min(int(b_new), t_cap))
+                cache, cur, lengths, emitted, done, budget, out = self._admit_row(
+                    self.params, cache, cur, lengths, emitted, done, budget, out,
+                    jnp.asarray(row), jnp.int32(slot), jnp.asarray(length), jnp.int32(b_new),
+                )
+                slots[slot] = req
+                em_h[slot], dn_h[slot], bu_h[slot] = 1, b_new <= 1, b_new
+            active = [i for i in range(B) if slots[i] is not None]
+            if not active:
+                break  # queue drained and every slot retired
+
+            remaining = [int(bu_h[i] - em_h[i]) for i in active if not dn_h[i]]
+            if remaining:
+                # per-request budgets and EOS are enforced on-device, so the
+                # chunk length is purely a scheduling granularity: run up to
+                # the largest live budget but at most sched_chunk steps, so
+                # freed slots wait at most sched_chunk for the next admit
+                n = max(1, min(max(remaining), scfg.sched_chunk))
+                cache, cur, emitted, done, out = self._decode_chunk(
+                    self.params, cache, cur, lengths, emitted, done, budget, out,
+                    jnp.int32(n),
+                )
+            # np.array (not asarray): device views are read-only and the
+            # mirrors are written at the next admit
+            em_h, dn_h = np.array(emitted), np.array(done)
+
+            retired = [i for i in active if dn_h[i]]
+            if retired:
+                out_h = np.asarray(out)
+                for i in retired:
+                    req = slots[i]
+                    ans = out_h[i, : int(em_h[i])].copy()
+                    scheduler.finish(req, ans)
+                    results[req.rid] = ans
+                    slots[i] = None  # retire: slot free for the next admit
+        return results
+
+    def serve_prompts(
+        self,
+        prompts: Sequence[np.ndarray],
+        max_new_tokens: int | Sequence[int] | None = None,
+        deadlines: Sequence[float | None] | None = None,
+    ) -> list[np.ndarray]:
+        """Convenience wrapper: schedule ``prompts`` and serve to completion,
+        returning answers in prompt order (expired requests -> empty row)."""
+        sched = Scheduler()
+        rids = sched.submit_many(prompts, max_new_tokens, deadlines)
+        res = self.serve(sched)
+        empty = np.zeros((0,), np.int32)
+        return [res.get(rid, empty) for rid in rids]
+
+
+def engine_generator(engine: ServeEngine, mode: str = "continuous") -> Callable:
     """Adapt a ServeEngine to the orchestrator's generator contract:
     callable (1, S) -> (1, T) for single prompts, plus ``generate_batch``
-    (list of prompts -> list of answer rows) so ``answer_batch`` decodes
-    the whole query batch through one packed prefill + decode loop."""
+    (list of prompts -> list of answer rows).  ``mode="continuous"``
+    (default) routes batches through the slot scheduler so ragged
+    generations retire early; ``mode="lockstep"`` keeps the fixed-chunk
+    baseline for determinism comparisons."""
+    assert mode in ("continuous", "lockstep")
 
     def generate(prompt_tokens: np.ndarray) -> np.ndarray:
         if engine.queue:
             raise RuntimeError("engine_generator requires exclusive use of the engine queue")
+        if mode == "continuous":
+            return generate_batch([np.asarray(prompt_tokens)])[0][None, :]
         engine.submit(np.asarray(prompt_tokens))
         return engine.step_batch()[0][None, :]
 
     def generate_batch(prompts: list[np.ndarray]) -> list[np.ndarray]:
         if engine.queue:
             raise RuntimeError("engine_generator requires exclusive use of the engine queue")
+        if mode == "continuous":
+            return engine.serve_prompts([np.asarray(p) for p in prompts])
         for p in prompts:
             engine.submit(np.asarray(p))
         outs: list[np.ndarray] = []
@@ -125,4 +306,6 @@ def engine_generator(engine: ServeEngine) -> Callable:
         return outs
 
     generate.generate_batch = generate_batch
+    generate.engine = engine
+    generate.mode = mode
     return generate

@@ -1,0 +1,138 @@
+"""Request scheduler for continuous-batching serving.
+
+The scheduler owns the *admission* side of the serving stack: requests
+enter a FIFO queue with an optional per-request generation budget and an
+optional admission deadline; ``ServeEngine.serve`` pulls from it whenever
+a cache slot frees up, so short generations retire and hand their slot to
+queued work while long generations keep decoding.
+
+Contracts:
+  * ``submit`` is cheap and returns a request id immediately.
+  * ``pop_ready`` is FIFO over live requests; a request whose admission
+    deadline has already passed is marked ``expired`` (recorded in
+    ``results``) and never admitted — the continuous-batching analogue of
+    the orchestrator dropping stragglers at the collect deadline.
+  * Completion timestamps are recorded on ``finish`` so per-request
+    latency distributions (p50/p95) fall out for free.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request tracked through the admission queue."""
+
+    rid: int
+    tokens: np.ndarray  # (S,) prompt token ids
+    max_new_tokens: int | None = None  # None -> engine's configured cap
+    deadline_s: float | None = None  # admission budget from submit time
+    submitted_at: float = 0.0
+    started_at: float | None = None  # slot admission time
+    finished_at: float | None = None
+    answer: np.ndarray | None = None
+    status: str = "queued"  # queued | active | done | expired
+
+    @property
+    def latency_s(self) -> float | None:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+
+class Scheduler:
+    """FIFO admission queue feeding the slot pool of a ``ServeEngine``."""
+
+    def __init__(self):
+        self._queue: collections.deque[Request] = collections.deque()
+        self._next_rid = 0
+        self.results: dict[int, Request] = {}
+
+    def submit(
+        self,
+        prompt_tokens: np.ndarray,
+        *,
+        max_new_tokens: int | None = None,
+        deadline_s: float | None = None,
+    ) -> int:
+        req = Request(
+            rid=self._next_rid,
+            tokens=np.asarray(prompt_tokens).ravel(),
+            max_new_tokens=max_new_tokens,
+            deadline_s=deadline_s,
+            submitted_at=time.monotonic(),
+        )
+        self._next_rid += 1
+        self._queue.append(req)
+        return req.rid
+
+    def submit_many(
+        self,
+        prompts,
+        max_new_tokens=None,
+        deadlines=None,
+    ) -> list[int]:
+        """Submit a batch of prompts; scalar-or-per-request budget and
+        deadline broadcast shared by every serve entry point."""
+        n = len(prompts)
+        budgets = (
+            list(max_new_tokens)
+            if isinstance(max_new_tokens, (list, tuple, np.ndarray))
+            else [max_new_tokens] * n
+        )
+        deadlines = list(deadlines) if deadlines is not None else [None] * n
+        return [
+            self.submit(np.asarray(p).ravel(), max_new_tokens=b, deadline_s=d)
+            for p, b, d in zip(prompts, budgets, deadlines)
+        ]
+
+    @property
+    def n_queued(self) -> int:
+        return len(self._queue)
+
+    @property
+    def has_pending(self) -> bool:
+        return bool(self._queue)
+
+    def pop_ready(self) -> Request | None:
+        """Next admissible request (FIFO); expires overdue ones in passing."""
+        while self._queue:
+            req = self._queue.popleft()
+            now = time.monotonic()
+            if req.deadline_s is not None and now - req.submitted_at > req.deadline_s:
+                req.status = "expired"
+                req.finished_at = now
+                self.results[req.rid] = req
+                continue
+            req.status = "active"
+            req.started_at = now
+            return req
+        return None
+
+    def finish(self, req: Request, answer: np.ndarray):
+        req.status = "done"
+        req.finished_at = time.monotonic()
+        req.answer = np.asarray(answer)
+        self.results[req.rid] = req
+
+    # ---- observability ----
+    def latency_stats(self) -> dict:
+        """p50/p95/mean submit->finish latency over completed requests."""
+        lats = sorted(
+            r.latency_s for r in self.results.values() if r.status == "done"
+        )
+        if not lats:
+            return {"n_done": 0}
+        arr = np.asarray(lats)
+        return {
+            "n_done": len(lats),
+            "n_expired": sum(1 for r in self.results.values() if r.status == "expired"),
+            "p50_s": float(np.percentile(arr, 50)),
+            "p95_s": float(np.percentile(arr, 95)),
+            "mean_s": float(arr.mean()),
+        }

@@ -1,0 +1,137 @@
+"""Deadline/quorum timing semantics of the concurrent provider fan-out.
+
+Algorithm 1 tolerates k_n <= k providers; the concurrent ``_collect``
+must make that real under wall-clock pressure: a provider slower than
+``deadline_s`` is cut off (not awaited), quorum is satisfied by whoever
+arrived by the deadline, quorum failure raises promptly, and — when every
+provider answers in time — results are bit-identical to the sequential
+dispatch loop.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import CFedRAGConfig, CFedRAGSystem
+from repro.data.corpus import make_federated_corpus
+from repro.data.tokenizer import HashTokenizer
+from repro.launch.serve import overlap_reranker
+
+SLOW = 5.0  # straggler delay; every test must finish far below this
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_federated_corpus(n_facts=48, n_distractors=48, n_queries=8, seed=5)
+
+
+def _system(corpus, *, concurrent=True, deadline=None, quorum=1, delays=None, warm=0):
+    """Build a 4-provider system; ``warm`` collects that many queries per
+    shape BEFORE delays are applied, so jit compilation of the embed path
+    never eats into a wall-clock deadline assertion."""
+    tok = HashTokenizer()
+    sys_ = CFedRAGSystem(
+        corpus,
+        CFedRAGConfig(
+            aggregation="rerank",
+            split_by="corpus",  # 4 providers
+            quorum=quorum,
+            deadline_s=deadline,
+            concurrent_collect=concurrent,
+        ),
+        tokenizer=tok,
+        reranker=overlap_reranker(tok),
+    )
+    if warm:
+        saved = sys_.orchestrator.deadline_s
+        sys_.orchestrator.deadline_s = None
+        sys_.orchestrator.collect_contexts_batch([q.text for q in corpus.queries[:warm]])
+        sys_.orchestrator.collect_contexts(corpus.queries[0].text)
+        sys_.orchestrator.deadline_s = saved
+    for p, d in zip(sys_.providers, delays or ()):
+        p.delay_s = d
+    return sys_
+
+
+def _assert_context_equal(a: dict, b: dict):
+    for k in ("chunk_tokens", "chunk_ids", "scores", "providers"):
+        assert np.array_equal(a[k], b[k]), f"context[{k}] diverged"
+
+
+def test_concurrent_matches_sequential_bitwise(corpus):
+    """When every provider responds in time, concurrent fan-out must be
+    bit-identical to the sequential loop (responses re-ordered by
+    provider id before aggregation)."""
+    con = _system(corpus, concurrent=True)
+    seq = _system(corpus, concurrent=False)
+    assert con.orchestrator.concurrent_collect and not seq.orchestrator.concurrent_collect
+    texts = [q.text for q in corpus.queries[:4]]
+    for a, b in zip(con.orchestrator.answer_batch(texts), seq.orchestrator.answer_batch(texts)):
+        _assert_context_equal(a["context"], b["context"])
+        assert a["n_providers"] == b["n_providers"]
+    for t in texts:
+        _assert_context_equal(
+            con.orchestrator.answer(t)["context"], seq.orchestrator.answer(t)["context"]
+        )
+
+
+def test_collect_wallclock_is_max_not_sum(corpus):
+    """Acceptance: 4 providers, one with delay 0.2s — batched collect
+    wall-clock must track the slowest provider (max), not the sum."""
+    delays = (0.1, 0.2, 0.1, 0.1)
+    sys_ = _system(corpus, delays=delays, warm=4)
+    texts = [q.text for q in corpus.queries[:4]]
+    sys_.orchestrator.collect_contexts_batch(texts)  # warm jit caches
+    t0 = time.monotonic()
+    responses = sys_.orchestrator.collect_contexts_batch(texts)
+    dt = time.monotonic() - t0
+    assert len(responses) == 4  # no deadline: everyone included
+    assert dt < 2 * max(delays), f"collect took {dt:.3f}s (sum={sum(delays)}s)"
+
+
+def test_straggler_cut_off_at_deadline(corpus):
+    """A provider slower than deadline_s must be abandoned mid-flight,
+    not awaited: collect returns around the deadline with the fast
+    providers' responses."""
+    sys_ = _system(corpus, deadline=0.5, delays=(0.0, SLOW, 0.0, 0.0), warm=2)
+    t0 = time.monotonic()
+    responses = sys_.orchestrator.collect_contexts_batch(
+        [q.text for q in corpus.queries[:2]]
+    )
+    dt = time.monotonic() - t0
+    assert dt < 2.0, f"deadline did not cut the straggler off ({dt:.3f}s)"
+    assert sorted(int(r["provider"]) for r in responses) == [0, 2, 3]
+
+
+def test_quorum_early_return_does_not_wait_for_stragglers(corpus):
+    """With quorum met at the deadline, collect must return immediately —
+    the slow provider's response is simply dropped (k_n < k)."""
+    sys_ = _system(corpus, quorum=3, deadline=0.5, delays=(0.0, SLOW, 0.0, 0.0), warm=1)
+    t0 = time.monotonic()
+    res = sys_.orchestrator.answer(corpus.queries[0].text)
+    dt = time.monotonic() - t0
+    assert dt < 2.0, f"quorum return waited for the straggler ({dt:.3f}s)"
+    assert res["n_providers"] == 3
+
+
+def test_quorum_failure_raises_promptly(corpus):
+    """Too few providers inside the deadline -> RuntimeError at the
+    deadline, without waiting the stragglers out."""
+    sys_ = _system(corpus, quorum=3, deadline=0.3, delays=(SLOW, SLOW, SLOW, 0.0), warm=1)
+    t0 = time.monotonic()
+    with pytest.raises(RuntimeError, match="quorum"):
+        sys_.orchestrator.collect_contexts_batch([corpus.queries[0].text])
+    assert time.monotonic() - t0 < 2.0
+
+
+def test_failed_provider_tolerated_concurrently(corpus):
+    """ConnectionError from one provider is straggler-tolerated by the
+    concurrent path exactly as by the sequential one."""
+    con = _system(corpus, concurrent=True)
+    seq = _system(corpus, concurrent=False)
+    con.providers[1].fail = True
+    seq.providers[1].fail = True
+    t = corpus.queries[0].text
+    a, b = con.orchestrator.answer(t), seq.orchestrator.answer(t)
+    assert a["n_providers"] == b["n_providers"] == 3
+    _assert_context_equal(a["context"], b["context"])

@@ -1,0 +1,237 @@
+"""Continuous-batching scheduler + slot pool semantics.
+
+Two layers of coverage:
+
+  * **FakeLM tests** — a deterministic stand-in model whose next token is
+    always ``(cur + 1) % vocab``, so the exact answer of every request
+    (including where EOS lands) is computable in closed form.  These
+    exercise slot retire/admit, per-request budgets, post-EOS PAD
+    masking, and continuous-vs-lockstep parity with exact expectations.
+  * **Real-LM tests** — the qwen3 smoke model, checking that the slot
+    scatter path (cache tree insert + per-slot positions) reproduces the
+    lock-step decode bit-for-bit on ragged batches.
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.serving.engine as engine_mod
+from repro.data.tokenizer import EOS, PAD
+from repro.runtime.sharding import ShardingPolicy, base_rules
+from repro.serving.engine import ServeConfig, ServeEngine, engine_generator
+from repro.serving.scheduler import Scheduler
+
+POL = ShardingPolicy(rules=base_rules(False), mesh=None)
+VOCAB = 256
+
+
+class _FakeLM:
+    """Deterministic LM: next token is (cur + 1) % vocab.  A prompt whose
+    last token is e generates e+1, e+2, ... so EOS (=2) arrives exactly
+    (2 - e - 1) % vocab + 1 tokens after prefill."""
+
+    @staticmethod
+    def _logits(tokens):
+        nxt = (tokens + 1) % VOCAB
+        return jnp.eye(VOCAB, dtype=jnp.float32)[nxt]
+
+    @staticmethod
+    def prefill(cfg, pol, params, batch, cache_len=None):
+        tokens = batch["tokens"]
+        return _FakeLM._logits(tokens), _FakeLM.init_cache(cfg, tokens.shape[0], cache_len)
+
+    @staticmethod
+    def decode_step(cfg, pol, params, cache, tokens, pos):
+        return _FakeLM._logits(tokens), cache
+
+    @staticmethod
+    def init_cache(cfg, batch, cache_len, dtype=jnp.float32, abstract=False):
+        # same (n_blocks, B, ...) leaf layout contract as the real cache
+        return {"dummy": jnp.zeros((1, batch, 1), jnp.float32)}
+
+
+def _expected(end_token: int, budget: int) -> list[int]:
+    """Closed-form answer of the FakeLM for a prompt ending in end_token."""
+    toks, x = [], end_token
+    while len(toks) < budget:
+        x = (x + 1) % VOCAB
+        toks.append(x)
+        if x == EOS:
+            break
+    return toks
+
+
+def _prompt(end_token: int, length: int = 5) -> np.ndarray:
+    p = np.full((length,), 7, np.int32)
+    p[-1] = end_token
+    return p
+
+
+@pytest.fixture()
+def fake_engine(monkeypatch):
+    def make(max_batch=2, max_new_tokens=6, sched_chunk=3):
+        monkeypatch.setattr(engine_mod, "LM", _FakeLM)
+        from repro.configs import get_config, smoke_config
+
+        cfg = smoke_config(get_config("qwen3-0.6b")).with_overrides(dtype="float32")
+        assert cfg.vocab_size == VOCAB
+        return ServeEngine(
+            cfg, POL, {},
+            ServeConfig(
+                max_batch=max_batch, max_prompt_len=8,
+                max_new_tokens=max_new_tokens, sched_chunk=sched_chunk,
+            ),
+        )
+
+    return make
+
+
+# ------------------------------------------------------------------ #
+# scheduler unit behavior
+# ------------------------------------------------------------------ #
+def test_scheduler_fifo_and_expiry():
+    s = Scheduler()
+    r1 = s.submit(np.arange(3))
+    r2 = s.submit(np.arange(3), deadline_s=0.0)  # expired by pop time
+    r3 = s.submit(np.arange(3), max_new_tokens=4)
+    time.sleep(0.01)
+    assert s.pop_ready().rid == r1
+    nxt = s.pop_ready()  # r2 expires in passing
+    assert nxt.rid == r3 and nxt.max_new_tokens == 4
+    assert s.pop_ready() is None and not s.has_pending
+    assert s.results[r2].status == "expired"
+
+
+# ------------------------------------------------------------------ #
+# FakeLM: exact end-to-end semantics
+# ------------------------------------------------------------------ #
+def test_post_eos_rows_emit_pad_lockstep(fake_engine):
+    """Satellite fix: rows already done must emit PAD, not fresh argmax.
+    Row 1 hits EOS after 2 tokens while row 2 never does; the lock-step
+    batch keeps decoding to 6 steps and row 1's tail must be PAD."""
+    eng = fake_engine(max_batch=3, max_new_tokens=6)
+    ends = [253, 0, 10]  # EOS after 5 / 2 / never (within 6)
+    for e in ends:
+        eng.submit(_prompt(e))
+    rows = eng.step_batch()
+    assert len(rows) == 3
+    for e, row in zip(ends, rows):
+        want = _expected(e, 6)
+        assert list(row[: len(want)]) == want
+        assert all(t == PAD for t in row[len(want):]), (
+            f"post-EOS tokens of row ending {e} must be PAD, got {list(row)}"
+        )
+
+
+def test_continuous_matches_lockstep_exactly(fake_engine):
+    eng = fake_engine(max_batch=2, max_new_tokens=6, sched_chunk=3)
+    ends = [253, 0, 10, 254, 5]
+    for e in ends:
+        eng.submit(_prompt(e))
+    lock = []
+    while eng.queue:
+        lock.extend(eng.step_batch())
+    cont = eng.serve_prompts([_prompt(e) for e in ends])
+    for e, l, c in zip(ends, lock, cont):
+        want = _expected(e, 6)
+        assert list(c) == want, "continuous answer diverged from closed form"
+        assert list(l[: len(want)]) == want and all(t == PAD for t in l[len(want):])
+
+
+def test_slot_retire_admit_exact(fake_engine):
+    """7 requests through 2 slots with mixed budgets/EOS distances: every
+    retire must free its slot for the next queued request and every
+    answer must match the closed form (no cross-slot contamination)."""
+    eng = fake_engine(max_batch=2, max_new_tokens=8, sched_chunk=3)
+    ends = [250, 0, 10, 253, 99, 1, 200]
+    budgets = [8, 3, 2, 8, 5, 8, 1]
+    outs = eng.serve_prompts([_prompt(e) for e in ends], max_new_tokens=budgets)
+    for e, b, got in zip(ends, budgets, outs):
+        assert list(got) == _expected(e, b), f"end={e} budget={b}: {list(got)}"
+
+
+def test_request_deadline_expires_unserved(fake_engine):
+    eng = fake_engine(max_batch=1, max_new_tokens=4)
+    sched = Scheduler()
+    r1 = sched.submit(_prompt(10), max_new_tokens=4)
+    r2 = sched.submit(_prompt(20), deadline_s=0.0)  # expires before admit
+    time.sleep(0.01)
+    results = eng.serve(sched)
+    assert list(results[r1]) == _expected(10, 4)
+    assert r2 not in results
+    assert sched.results[r2].status == "expired"
+    stats = sched.latency_stats()
+    assert stats["n_done"] == 1 and stats["n_expired"] == 1
+    assert stats["p50_s"] <= stats["p95_s"]
+
+
+def test_engine_generator_continuous_mode(fake_engine):
+    eng = fake_engine(max_batch=2, max_new_tokens=6)
+    gen = engine_generator(eng)
+    assert gen.engine is eng and gen.mode == "continuous"
+    single = gen(_prompt(0)[None, :])
+    assert single.shape[0] == 1 and list(single[0]) == _expected(0, 6)
+    batch = gen.generate_batch([_prompt(e) for e in (253, 10, 0)])
+    for e, row in zip((253, 10, 0), batch):
+        assert list(row) == _expected(e, 6)
+
+
+# ------------------------------------------------------------------ #
+# real LM: slot scatter parity with lock-step decode
+# ------------------------------------------------------------------ #
+@pytest.fixture(scope="module")
+def small_lm():
+    import jax
+
+    from repro.configs import get_config, smoke_config
+    from repro.models import lm as LM
+    from repro.models.params import init_params
+
+    cfg = smoke_config(get_config("qwen3-0.6b")).with_overrides(dtype="float32")
+    params = init_params(LM.param_specs(cfg), jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_continuous_matches_lockstep_real_lm(small_lm):
+    """Acceptance parity: the slot pool (cache scatter + per-slot decode
+    positions) must produce the same tokens as lock-step step_batch for
+    the same ragged inputs."""
+    cfg, params = small_lm
+    eng = ServeEngine(
+        cfg, POL, params,
+        ServeConfig(max_batch=2, max_prompt_len=16, max_new_tokens=5, sched_chunk=2),
+    )
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(8, cfg.vocab_size, size=n).astype(np.int32) for n in (9, 16, 12, 5, 14)]
+    for p in prompts:
+        eng.submit(p)
+    lock = []
+    while eng.queue:
+        lock.extend(eng.step_batch())
+    cont = eng.serve_prompts(prompts)
+    for l, c in zip(lock, cont):
+        n = len(c)
+        assert n >= 1
+        assert (l[:n] == np.asarray(c)).all(), "continuous diverged from lock-step"
+        assert all(t == PAD for t in l[n:])
+
+
+def test_per_request_budgets_real_lm(small_lm):
+    cfg, params = small_lm
+    eng = ServeEngine(
+        cfg, POL, params,
+        ServeConfig(max_batch=2, max_prompt_len=16, max_new_tokens=6, sched_chunk=4),
+    )
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(8, cfg.vocab_size, size=12).astype(np.int32) for _ in range(4)]
+    budgets = [1, 3, 6, 2]
+    outs = eng.serve_prompts(prompts, max_new_tokens=budgets)
+    full = eng.serve_prompts(prompts)  # budget = cap
+    for got, ref, b in zip(outs, full, budgets):
+        assert len(got) <= b
+        n = len(got)
+        assert (np.asarray(got) == np.asarray(ref)[:n]).all(), (
+            "budgeted prefix diverged from uncapped generation"
+        )
