@@ -14,6 +14,9 @@ Four views of the serving cost picture:
     ``step_batch`` on a mixed short/long generation workload: retiring
     rows free their cache slot for queued work instead of idling until
     the longest row finishes
+  * pipeline overlap — pipelined ``serve_stream`` (collect for
+    micro-batch N+1 overlaps decode of N) vs the phase-barrier ``serve``
+    loop, with provider RTT calibrated to decode time
 
 ``main(["--json"])`` (or benchmarks/run.py --json) writes BENCH_e2e.json
 rows with the stable ``{name, us, derived}`` schema so the perf
@@ -164,16 +167,11 @@ def run_latency_distribution(n_rounds=3, batch=4):
     return rows
 
 
-def run_scheduler_goodput(n_requests=32):
-    """Ragged-generation goodput: lock-step ``step_batch`` decodes every
-    chunk to its slowest row, the continuous scheduler retires short rows
-    and admits queued work into the freed slot.  Budgets alternate
-    short/long so every lock-step chunk contains a long row (the
-    adversarial-but-typical mixed workload).  The model is sized so one
-    decode step costs more than one dispatch — the regime any real
-    serving deployment lives in (on a toy model, scheduler dispatch
-    overhead and decode compute are the same order and the two paths
-    roughly tie)."""
+def _smoke_engine(**serve_cfg_kw):
+    """Reduced-LM ServeEngine shared by the goodput and overlap
+    benchmarks: sized so one decode step costs more than one dispatch —
+    the regime any real serving deployment lives in (on a toy model,
+    scheduler dispatch overhead and decode compute are the same order)."""
     import jax
 
     from repro.configs import get_config, smoke_config
@@ -181,16 +179,27 @@ def run_scheduler_goodput(n_requests=32):
     from repro.models.params import init_params
     from repro.runtime.sharding import ShardingPolicy, base_rules
     from repro.serving.engine import ServeConfig, ServeEngine
-    from repro.serving.scheduler import Scheduler
 
     cfg = smoke_config(get_config("qwen3-0.6b")).with_overrides(
         dtype="float32", d_model=192, n_layers=4, d_ff=384, n_heads=4, head_dim=32
     )
     params = init_params(LM.param_specs(cfg), jax.random.PRNGKey(0))
     pol = ShardingPolicy(rules=base_rules(False), mesh=None)
+    return ServeEngine(cfg, pol, params, ServeConfig(**serve_cfg_kw)), cfg
+
+
+def run_scheduler_goodput(n_requests=32):
+    """Ragged-generation goodput: lock-step ``step_batch`` decodes every
+    chunk to its slowest row, the continuous scheduler retires short rows
+    and admits queued work into the freed slot.  Budgets alternate
+    short/long so every lock-step chunk contains a long row (the
+    adversarial-but-typical mixed workload)."""
+    from repro.serving.scheduler import Scheduler
+
     short, long_ = 2, 64
-    scfg = ServeConfig(max_batch=4, max_prompt_len=32, max_new_tokens=long_, sched_chunk=8)
-    eng = ServeEngine(cfg, pol, params, scfg)
+    eng, cfg = _smoke_engine(
+        max_batch=4, max_prompt_len=32, max_new_tokens=long_, sched_chunk=8
+    )
     rng = np.random.default_rng(0)
     prompts = [
         rng.integers(8, cfg.vocab_size, size=int(rng.integers(8, 32))).astype(np.int32)
@@ -233,6 +242,93 @@ def run_scheduler_goodput(n_requests=32):
     return rows
 
 
+def run_pipeline_overlap(n_queries=24, collect_batch=4, max_new_tokens=32):
+    """Overlap gain of the pipelined front door: serve_stream runs
+    collect/aggregate for micro-batch N+1 on a collector thread while the
+    engine decodes micro-batch N, so steady-state wall-clock per
+    micro-batch is max(collect, decode) instead of the phase-barrier's
+    collect + decode.  Provider RTT is calibrated to the measured decode
+    time of one micro-batch (the adversarial-but-typical regime: neither
+    stage dominates, so a barrier wastes half the wall-clock); with M
+    micro-batches the ideal gain is 2M/(M+1) -> ~1.6x at M=4."""
+    from repro.serving.engine import engine_generator
+
+    engine, _ = _smoke_engine(
+        max_batch=collect_batch, max_prompt_len=256,
+        max_new_tokens=max_new_tokens, sched_chunk=8,
+    )
+    corpus = make_federated_corpus(n_facts=96, n_distractors=96, n_queries=n_queries)
+    tok = HashTokenizer()
+    sys_ = CFedRAGSystem(
+        corpus,
+        CFedRAGConfig(aggregation="rerank", split_by="corpus", concurrent_collect=True),
+        tokenizer=tok,
+        reranker=overlap_reranker(tok),
+        generator=engine_generator(engine),
+    )
+    texts = [q.text for q in corpus.queries[:n_queries]]
+    # warm every jit path (embed, admit, decode) before any timing
+    sys_.serve(texts[:collect_batch], max_new_tokens=max_new_tokens)
+    # calibrate: decode wall-clock of one micro-batch, then give every
+    # provider that much RTT so collect(N+1) can fully hide under decode(N)
+    orch = sys_.orchestrator
+    contexts = orch.aggregate_batch(
+        texts[:collect_batch], orch.collect_contexts_batch(texts[:collect_batch])
+    )
+    prompts = [orch.build_prompt(q, c) for q, c in zip(texts[:collect_batch], contexts)]
+    t0 = time.monotonic()
+    engine.serve_prompts(prompts, max_new_tokens=max_new_tokens)
+    d_dec = time.monotonic() - t0
+
+    def phase_barrier():
+        outs = []
+        for i in range(0, n_queries, collect_batch):
+            outs.extend(
+                sys_.serve(texts[i : i + collect_batch], max_new_tokens=max_new_tokens)
+            )
+        return outs
+
+    def pipelined():
+        outs = [None] * n_queries
+        for qidx, out in sys_.serve_stream(
+            texts, max_new_tokens=max_new_tokens, collect_batch=collect_batch
+        ):
+            outs[qidx] = out
+        return outs
+
+    try:
+        for p in sys_.providers:
+            p.delay_s = d_dec
+        t0 = time.monotonic()
+        barrier_outs = phase_barrier()
+        dt_barrier = time.monotonic() - t0
+        t0 = time.monotonic()
+        stream_outs = pipelined()
+        dt_stream = time.monotonic() - t0
+    finally:
+        for p in sys_.providers:
+            p.delay_s = 0.0
+    for a, b in zip(barrier_outs, stream_outs):
+        assert np.array_equal(a["answer_tokens"], b["answer_tokens"]) and np.array_equal(
+            a["context"]["chunk_ids"], b["context"]["chunk_ids"]
+        ), "pipelined results diverged from the phase-barrier path"
+    speedup = dt_barrier / dt_stream
+    n_batches = -(-n_queries // collect_batch)
+    return [
+        (
+            "e2e_pipeline_barrier",
+            dt_barrier / n_queries * 1e6,
+            f"collect+decode per micro-batch, no overlap (RTT~decode {d_dec * 1e3:.0f}ms)",
+        ),
+        (
+            "e2e_pipeline_stream",
+            dt_stream / n_queries * 1e6,
+            f"{speedup:.2f}x vs phase-barrier (ideal {2 * n_batches / (n_batches + 1):.2f}x "
+            f"at {n_batches} micro-batches of {collect_batch}); results bit-identical",
+        ),
+    ]
+
+
 def write_json(rows, path="BENCH_e2e.json"):
     payload = [{"name": n, "us": round(us, 1), "derived": d} for n, us, d in rows]
     with open(path, "w") as f:
@@ -242,7 +338,13 @@ def write_json(rows, path="BENCH_e2e.json"):
 
 def main(argv=None):
     argv = list(argv or [])
-    rows = run() + run_throughput() + run_latency_distribution() + run_scheduler_goodput()
+    rows = (
+        run()
+        + run_throughput()
+        + run_latency_distribution()
+        + run_scheduler_goodput()
+        + run_pipeline_overlap()
+    )
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
     if "--json" in argv:

@@ -132,17 +132,21 @@ class Orchestrator:
     def _collect(self, providers, tokens_for) -> list[dict]:
         """Shared steps 2-3 dispatch: sealed round-trip per provider under
         the deadline, straggler tolerance, quorum check.
-        ``tokens_for(provider)`` builds the query token payload."""
-        if self._use_concurrent(providers):
-            return self._collect_concurrent(providers, tokens_for)
-        return self._collect_sequential(providers, tokens_for)
+        ``tokens_for(provider)`` builds the query token payload.
 
-    def _collect_sequential(self, providers, tokens_for) -> list[dict]:
+        The ``deadline_s`` clock is anchored HERE, before any dispatch
+        work (payload building, thread spawning), so the SLO bounds the
+        whole collect step — not just the wait after setup."""
+        t0 = time.monotonic()
+        if self._use_concurrent(providers):
+            return self._collect_concurrent(providers, tokens_for, t0)
+        return self._collect_sequential(providers, tokens_for, t0)
+
+    def _collect_sequential(self, providers, tokens_for, t0: float) -> list[dict]:
         """Sequential loop — the in-process fast path and the determinism
         baseline (``concurrent_collect=False``): latency is the SUM of
         provider round-trips and the deadline only fires between calls."""
         responses = []
-        t0 = time.monotonic()
         for p in providers:
             if self.deadline_s is not None and time.monotonic() - t0 > self.deadline_s:
                 break  # deadline: proceed with what we have (k_n <= k)
@@ -152,7 +156,7 @@ class Orchestrator:
                 continue  # straggler/failed provider: tolerated by quorum
         return self._quorum_check(responses)
 
-    def _collect_concurrent(self, providers, tokens_for) -> list[dict]:
+    def _collect_concurrent(self, providers, tokens_for, t0: float) -> list[dict]:
         """Concurrent fan-out: every provider round-trip runs in its own
         future, so collect wall-clock tracks the slowest *responding*
         provider (max, not sum).  ``deadline_s`` is a hard wall-clock
@@ -190,8 +194,20 @@ class Orchestrator:
 
         for i, p in enumerate(providers):
             threading.Thread(target=worker, args=(i, p), daemon=True).start()
+        # the SLO clock started at _collect entry (``t0``), so only the
+        # REMAINING budget is spent waiting — spawning one thread per
+        # provider must not extend the effective deadline.  The predicate
+        # also wakes on an unexpected worker exception: with no deadline
+        # and a hung straggler, waiting for n_finished alone would park
+        # the raise below forever.
+        timeout = None
+        if self.deadline_s is not None:
+            timeout = max(0.0, self.deadline_s - (time.monotonic() - t0))
         with cond:
-            cond.wait_for(lambda: n_finished[0] >= len(providers), timeout=self.deadline_s)
+            cond.wait_for(
+                lambda: bool(unexpected) or n_finished[0] >= len(providers),
+                timeout=timeout,
+            )
             if unexpected:
                 raise unexpected[0]
             responses = [results[i] for i in sorted(results)]
@@ -297,16 +313,37 @@ class Orchestrator:
         return outs
 
     def build_prompt(self, query_text: str, context: dict, max_len: int = 512) -> np.ndarray:
-        """[BOS] CTX chunk1 SEP chunk2 ... QRY query ANS"""
+        """[BOS] CTX chunk1 SEP chunk2 ... QRY query ANS
+
+        Overflow never breaks the grammar: when the context does not fit
+        in ``max_len``, whole chunks are dropped from the tail of the
+        ranked list (lowest-scored first) — a blind ``ids[-max_len:]``
+        would slice off ``BOS``/``CTX`` and could bisect a chunk.  The
+        ``BOS/CTX/QRY/query/ANS`` skeleton is always kept intact; only a
+        pathologically long query itself is tail-truncated to leave room
+        for the structural markers."""
+        query = [int(t) for t in self.tok.encode(query_text, bos=False) if t not in (PAD, EOS)]
+        n_markers = 4  # BOS, CTX, QRY, ANS
+        query = query[: max(0, max_len - n_markers)]
+        chunk_budget = max_len - n_markers - len(query)
         ids = [BOS, CTX]
         for row in context["chunk_tokens"]:
-            ids += [int(t) for t in row if t not in (PAD, BOS, EOS)]
+            chunk = [int(t) for t in row if t not in (PAD, BOS, EOS)]
+            if len(chunk) + 1 > chunk_budget:  # +1: trailing SEP
+                break  # ranked order: everything after is lower-scored
+            ids += chunk
             ids.append(SEP)
+            chunk_budget -= len(chunk) + 1
         ids.append(QRY)
-        ids += [int(t) for t in self.tok.encode(query_text, bos=False) if t not in (PAD, EOS)]
+        ids += query
         ids.append(ANS)
-        ids = ids[-max_len:]
         return np.asarray(ids, np.int32)[None, :]
+
+    def _prompt_max_len(self) -> int:
+        """Generator-advertised prompt window (``max_prompt_len`` on an
+        engine adapter), so grammar-aware truncation in ``build_prompt``
+        happens at the width the generator will actually consume."""
+        return int(getattr(self.generator, "max_prompt_len", None) or 512)
 
     def answer(self, query_text: str) -> dict:
         responses = self.collect_contexts(query_text)
@@ -316,7 +353,7 @@ class Orchestrator:
             "n_providers": len(responses),
         }
         if self.generator is not None:
-            prompt = self.build_prompt(query_text, context)
+            prompt = self.build_prompt(query_text, context, max_len=self._prompt_max_len())
             out["answer_tokens"] = np.asarray(self.generator(prompt))[0]
             out["prompt"] = prompt
         return out
@@ -339,7 +376,8 @@ class Orchestrator:
             {"context": ctx, "n_providers": len(responses)} for ctx in contexts
         ]
         if self.generator is not None:
-            prompts = [self.build_prompt(q, ctx) for q, ctx in zip(queries, contexts)]
+            width = self._prompt_max_len()
+            prompts = [self.build_prompt(q, ctx, max_len=width) for q, ctx in zip(queries, contexts)]
             gen_batch = getattr(self.generator, "generate_batch", None)
             if gen_batch is not None:
                 answers = gen_batch(prompts)

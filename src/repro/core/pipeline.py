@@ -8,6 +8,8 @@ benchmark, the examples, and the integration tests.
 from __future__ import annotations
 
 import dataclasses
+import threading
+import time
 from typing import Callable
 
 import jax
@@ -34,6 +36,21 @@ class CFedRAGConfig:
     deadline_s: float | None = None  # wall-clock collect cutoff (Alg. 1 k_n <= k)
     concurrent_collect: bool | None = None  # None -> auto (transport-aware)
     use_pallas: bool = False
+
+
+def _serve_result(req, prompt, context, n_providers: int, answer=None) -> dict:
+    """One per-query result dict — the single definition the bit-parity
+    contract between ``serve`` and ``serve_stream`` hangs on."""
+    out = {
+        "context": context,
+        "n_providers": n_providers,
+        "prompt": prompt,
+        "status": req.status,
+        "latency_s": req.latency_s,
+    }
+    if req.status == "done":
+        out["answer_tokens"] = answer
+    return out
 
 
 class CFedRAGSystem:
@@ -118,23 +135,137 @@ class CFedRAGSystem:
 
         responses = orch.collect_contexts_batch(queries)
         contexts = orch.aggregate_batch(queries, responses)
-        outs = [{"context": c, "n_providers": len(responses)} for c in contexts]
-        prompts = [orch.build_prompt(q, c) for q, c in zip(queries, contexts)]
+        # build prompts at the engine's true window so grammar-aware
+        # truncation happens here — the engine's blind tail-slice to
+        # max_prompt_len must never be what cuts an overflowing prompt
+        width = engine.scfg.max_prompt_len
+        prompts = [orch.build_prompt(q, c, max_len=width) for q, c in zip(queries, contexts)]
         sched = Scheduler()
-        rids = sched.submit_many(
-            prompts,
-            max_new_tokens,
-            gen_deadline_s if isinstance(gen_deadline_s, (list, tuple)) else [gen_deadline_s] * len(queries),
-        )
+        # scalar-or-list broadcast (with length validation) lives in
+        # submit_many, shared by every serve entry point
+        rids = sched.submit_many(prompts, max_new_tokens, gen_deadline_s)
         answers = engine.serve(sched)
-        for out, prompt, rid in zip(outs, prompts, rids):
-            req = sched.results[rid]
-            out["prompt"] = prompt
-            out["status"] = req.status
-            out["latency_s"] = req.latency_s
-            if req.status == "done":
-                out["answer_tokens"] = answers[rid]
-        return outs
+        return [
+            _serve_result(sched.results[rid], prompt, ctx, len(responses), answers.get(rid))
+            for rid, prompt, ctx in zip(rids, prompts, contexts)
+        ]
+
+    def serve_stream(
+        self,
+        query_texts: list[str],
+        *,
+        max_new_tokens: int | list[int] | None = None,
+        gen_deadline_s: float | list[float | None] | None = None,
+        collect_batch: int = 8,
+    ):
+        """Pipelined (double-buffered) front door: a collector thread runs
+        ``collect_contexts_batch``/``aggregate_batch`` for micro-batch N+1
+        while the engine decodes micro-batch N, submitting prompts into
+        the live scheduler as they become ready; results are yielded as
+        ``(query_index, result_dict)`` the moment each generation retires
+        (retire order, not submission order).  Scheduler backpressure
+        bounds the collector to one micro-batch of run-ahead, and yielded
+        requests drop their prompt/context/answer buffers, so resident
+        payload memory stays O(collect_batch) however long the query list
+        is (only per-request timestamps are kept for latency stats).
+
+        Per-query dicts are bit-identical to ``serve`` on the same inputs
+        (collect/aggregate are per-query, slot decode is slot-independent)
+        — only ``latency_s`` differs in *meaning*: it now covers the whole
+        collect -> finish span of the query's micro-batch, not just
+        generation, because requests are stamped with the micro-batch's
+        collect start time.  Without an engine-backed continuous generator
+        the phase-barrier ``serve`` runs instead and its results are
+        yielded in order."""
+        queries = list(query_texts)
+        if not queries:
+            return
+        orch = self.orchestrator
+        engine = getattr(orch.generator, "engine", None)
+        continuous = getattr(orch.generator, "mode", "continuous") == "continuous"
+        if orch.generator is None or engine is None or not continuous:
+            for i, out in enumerate(
+                self.serve(queries, max_new_tokens=max_new_tokens, gen_deadline_s=gen_deadline_s)
+            ):
+                yield i, out
+            return
+        from repro.serving.scheduler import Scheduler, _broadcast
+
+        n = len(queries)
+        budgets = _broadcast(max_new_tokens, n, "max_new_tokens")
+        deadlines = _broadcast(gen_deadline_s, n, "gen_deadline_s")
+        collect_batch = max(1, int(collect_batch))
+        width = engine.scfg.max_prompt_len
+        sched = Scheduler()
+        info: dict[int, tuple] = {}  # qidx -> (prompt, context, n_providers)
+        collect_err: list[BaseException] = []
+        stop = threading.Event()  # consumer-gone signal for the collector
+
+        def collector():
+            try:
+                for start in range(0, n, collect_batch):
+                    # double-buffer backpressure: collect micro-batch N+1
+                    # only while at most one micro-batch of work is still
+                    # non-terminal, so a fast collector holds O(collect
+                    # batch) prompts, not the whole workload.  The wait is
+                    # condition-driven; the coarse timeout exists only so
+                    # an abandoned stream (stop set, no more retires to
+                    # wake the condition) unblocks promptly
+                    while not stop.is_set() and not sched.wait_backlog_below(
+                        2 * collect_batch, timeout=0.5
+                    ):
+                        pass
+                    if stop.is_set():
+                        return
+                    chunk = queries[start : start + collect_batch]
+                    t0 = time.monotonic()
+                    responses = orch.collect_contexts_batch(chunk)
+                    contexts = orch.aggregate_batch(chunk, responses)
+                    prompts = [
+                        orch.build_prompt(q, c, max_len=width)
+                        for q, c in zip(chunk, contexts)
+                    ]
+                    idxs = list(range(start, start + len(chunk)))
+                    # publish metadata BEFORE submitting: the engine may
+                    # retire a request the instant it is queued
+                    for j, qidx in enumerate(idxs):
+                        info[qidx] = (prompts[j], contexts[j], len(responses))
+                    sched.submit_many(
+                        prompts,
+                        [budgets[i] for i in idxs],
+                        [deadlines[i] for i in idxs],
+                        tags=idxs,
+                        t0=t0,
+                    )
+            except BaseException as e:  # surfaced to the consumer below
+                collect_err.append(e)
+            finally:
+                sched.close()  # handshake: engine drains and exits
+
+        producer = threading.Thread(target=collector, daemon=True)
+        producer.start()
+        try:
+            for rid, ans in engine.serve_stream(sched):
+                req = sched.results[rid]
+                qidx = req.tag
+                prompt, context, n_providers = info.pop(qidx)
+                req.tokens = req.answer = None  # keep timestamps, drop payloads
+                yield qidx, _serve_result(req, prompt, context, n_providers, ans)
+            # expired requests never reach the engine; report them too so
+            # every submitted query yields exactly one result
+            for req in list(sched.results.values()):
+                if req.status != "expired":
+                    continue
+                prompt, context, n_providers = info.pop(req.tag)
+                req.tokens = None
+                yield req.tag, _serve_result(req, prompt, context, n_providers)
+        finally:
+            # an abandoned stream must not leave the collector blocked on
+            # backpressure: signal it down, then wait it out
+            stop.set()
+            producer.join()
+        if collect_err:
+            raise collect_err[0]
 
     # ---- evaluation (Table 1 protocol on synthetic provenance) ----
     def eval_retrieval(self, n_queries: int | None = None, batch_size: int = 32) -> dict:

@@ -3,6 +3,7 @@ providers + enclave orchestrator, and answer queries.
 
   python -m repro.launch.serve --queries 5 --aggregation rerank
   python -m repro.launch.serve --queries 5 --generate --deadline-s 0.5
+  python -m repro.launch.serve --queries 16 --stream --collect-batch 4
 
 Uses the bag embedder + lexical-overlap reranker by default (training-free
 CPU path).  ``--generate`` stands up a reduced-LM ``ServeEngine`` and
@@ -84,8 +85,19 @@ def main(argv=None):
         "--generate", action="store_true",
         help="decode answers through the continuous-batching ServeEngine",
     )
+    ap.add_argument(
+        "--stream", action="store_true",
+        help="pipelined front door: collect micro-batch N+1 overlaps decode "
+        "of N, results print as each generation retires (implies --generate)",
+    )
+    ap.add_argument(
+        "--collect-batch", type=int, default=4,
+        help="micro-batch size of the --stream collector thread",
+    )
     ap.add_argument("--max-new-tokens", type=int, default=16)
     args = ap.parse_args(argv)
+    if args.stream:
+        args.generate = True
 
     corpus = make_federated_corpus(n_facts=args.n_facts, n_distractors=args.n_facts, n_queries=args.queries)
     tok = HashTokenizer()
@@ -122,7 +134,20 @@ def main(argv=None):
         orch.collect_contexts_batch(texts)
         orch.collect_contexts(texts[0])
         orch.deadline_s = args.deadline_s
-    if args.generate:
+    if args.stream:
+        # pipelined: results arrive in retire order while later
+        # micro-batches are still collecting; print the stream live, then
+        # report per-query below in submission order
+        results = [None] * len(texts)
+        for qidx, out in sys_.serve_stream(
+            texts, max_new_tokens=args.max_new_tokens, collect_batch=args.collect_batch
+        ):
+            results[qidx] = out
+            print(
+                f"  [stream] q{qidx} retired: status={out['status']} "
+                f"lat={out['latency_s'] * 1e3:.1f}ms (collect->finish)"
+            )
+    elif args.generate:
         results = sys_.serve(texts, max_new_tokens=args.max_new_tokens)
     else:
         results = [sys_.orchestrator.answer(t) for t in texts]

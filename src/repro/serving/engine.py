@@ -10,15 +10,20 @@ Two serving modes share one cache layout:
     chunks, one packed prefill + one fused decode ``while_loop`` per
     chunk.  Kept as the deterministic baseline the continuous path is
     parity-tested (and benchmarked) against.
-  * **Continuous** (``serve`` / ``serve_prompts``): a fixed pool of
-    ``max_batch`` cache slots.  Finished rows (EOS or per-request budget)
+  * **Continuous** (``serve_stream`` / ``serve`` / ``serve_prompts``): a
+    fixed pool of ``max_batch`` cache slots.  Finished rows (EOS or
+    per-request budget)
     retire and free their slot; the ``Scheduler`` admits queued requests
     into free slots by prefilling just that row and scattering its cache
     in, while the other slots keep decoding.  Decode runs in fused
     chunks of at most ``sched_chunk`` steps (never past the smallest
     remaining per-slot budget) between scheduler interventions, so one
     long generation no longer stalls the batch and host sync stays off
-    the per-token path.
+    the per-token path.  ``serve_stream`` yields each ``(rid, answer)``
+    at retire time and — fed by a thread-safe ``Scheduler`` — keeps
+    consuming submissions from a producer thread until the scheduler is
+    closed, so an upstream stage (federated collect for the next
+    micro-batch) can overlap decode.
 
 Both paths pack prompts left-aligned (PAD tail) and decode each row from
 its OWN cache position (per-row ``lengths``), so ragged batches never
@@ -188,8 +193,25 @@ class ServeEngine:
     # ------------------------------------------------------------------ #
     def serve(self, scheduler: Scheduler) -> dict[int, np.ndarray]:
         """Drive the slot pool until the scheduler's queue drains and every
-        slot has retired.  Returns {rid: answer tokens}; per-request
-        timestamps land in ``scheduler.results`` for latency stats."""
+        slot has retired (one-shot batch semantics: does NOT wait for more
+        submissions).  Returns {rid: answer tokens}; per-request timestamps
+        land in ``scheduler.results`` for latency stats."""
+        return dict(self.serve_stream(scheduler, drain=True))
+
+    def serve_stream(self, scheduler: Scheduler, *, drain: bool = False):
+        """Generator form of ``serve``: yields ``(rid, answer_tokens)`` the
+        moment a slot retires instead of returning one dict at drain, so a
+        caller can stream results out (and overlap downstream work) while
+        other slots keep decoding.
+
+        With ``drain=False`` (default) the stream is *live*: when the
+        queue is momentarily empty but the scheduler is still open, the
+        engine keeps decoding active slots and then blocks in
+        ``scheduler.wait_for_work`` — a producer thread may keep
+        submitting until it calls ``scheduler.close()``, at which point
+        the stream drains the remaining work and ends.  ``drain=True``
+        restores the one-shot ``serve`` behavior: exit as soon as the
+        queue is empty and every slot has retired, closed or not."""
         scfg = self.scfg
         B, t_cap, width = scfg.max_batch, scfg.max_new_tokens, scfg.max_prompt_len
         cache = LM.init_cache(self.cfg, B, self._cache_len, dtype=jnp.dtype(self.cfg.dtype))
@@ -200,7 +222,6 @@ class ServeEngine:
         budget = jnp.ones((B,), jnp.int32)
         out = jnp.zeros((B, t_cap + 1), jnp.int32)
         slots: list[Request | None] = [None] * B
-        results: dict[int, np.ndarray] = {}
         # host mirrors of emitted/done/budget keep the loop at ONE device
         # sync per chunk; a just-admitted row's done flag is only known
         # on-device (first token may be EOS), so mirror it as live — the
@@ -233,7 +254,13 @@ class ServeEngine:
                 em_h[slot], dn_h[slot], bu_h[slot] = 1, b_new <= 1, b_new
             active = [i for i in range(B) if slots[i] is not None]
             if not active:
-                break  # queue drained and every slot retired
+                if drain or scheduler.closed:
+                    if scheduler.has_pending:
+                        continue  # submit raced the close/empty check
+                    return  # queue drained and every slot retired
+                # live stream: idle until the producer submits or closes
+                scheduler.wait_for_work()
+                continue
 
             remaining = [int(bu_h[i] - em_h[i]) for i in active if not dn_h[i]]
             if remaining:
@@ -257,9 +284,8 @@ class ServeEngine:
                     req = slots[i]
                     ans = out_h[i, : int(em_h[i])].copy()
                     scheduler.finish(req, ans)
-                    results[req.rid] = ans
                     slots[i] = None  # retire: slot free for the next admit
-        return results
+                    yield req.rid, ans
 
     def serve_prompts(
         self,
@@ -308,4 +334,8 @@ def engine_generator(engine: ServeEngine, mode: str = "continuous") -> Callable:
     generate.generate_batch = generate_batch
     generate.engine = engine
     generate.mode = mode
+    # advertise the engine's prompt window so prompt builders truncate
+    # grammar-aware at the right width instead of leaving it to the
+    # engine's blind tail-slice
+    generate.max_prompt_len = engine.scfg.max_prompt_len
     return generate

@@ -2,24 +2,41 @@
 
 The scheduler owns the *admission* side of the serving stack: requests
 enter a FIFO queue with an optional per-request generation budget and an
-optional admission deadline; ``ServeEngine.serve`` pulls from it whenever
-a cache slot frees up, so short generations retire and hand their slot to
-queued work while long generations keep decoding.
+optional admission deadline; ``ServeEngine.serve``/``serve_stream`` pull
+from it whenever a cache slot frees up, so short generations retire and
+hand their slot to queued work while long generations keep decoding.
+
+The scheduler is **thread-safe**: a producer thread may ``submit`` while
+an engine thread is consuming via ``pop_ready``/``finish`` (the pipelined
+front door runs collect for micro-batch N+1 on a collector thread while
+the engine decodes micro-batch N).  The producer signals end-of-stream
+with ``close()``; the engine blocks in ``wait_for_work`` when the queue
+is momentarily empty and exits once the scheduler is closed and drained.
 
 Contracts:
-  * ``submit`` is cheap and returns a request id immediately.
+  * ``submit`` is cheap and returns a request id immediately; submitting
+    to a closed scheduler raises.
   * ``pop_ready`` is FIFO over live requests; a request whose admission
     deadline has already passed is marked ``expired`` (recorded in
     ``results``) and never admitted — the continuous-batching analogue of
     the orchestrator dropping stragglers at the collect deadline.
+  * ``close()`` ends admission; ``drain()`` blocks until every submitted
+    request reached a terminal state (done or expired).
   * Completion timestamps are recorded on ``finish`` so per-request
-    latency distributions (p50/p95) fall out for free.
+    latency distributions (p50/p95) fall out for free.  ``submit`` takes
+    an optional ``t0`` anchor so ``latency_s`` can cover an upstream
+    stage (e.g. collect start), not just generation — the anchor moves
+    ONLY the latency origin; ``deadline_s`` expiry always counts from
+    the actual submit time, so upstream stage cost is never charged
+    against the generation SLO.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
+from typing import Any
 
 import numpy as np
 
@@ -32,25 +49,51 @@ class Request:
     tokens: np.ndarray  # (S,) prompt token ids
     max_new_tokens: int | None = None  # None -> engine's configured cap
     deadline_s: float | None = None  # admission budget from submit time
-    submitted_at: float = 0.0
+    submitted_at: float = 0.0  # actual submit time: the expiry clock
+    anchor_t0: float | None = None  # optional upstream anchor for latency_s only
     started_at: float | None = None  # slot admission time
     finished_at: float | None = None
     answer: np.ndarray | None = None
     status: str = "queued"  # queued | active | done | expired
+    tag: Any = None  # caller-side routing key (e.g. query index)
 
     @property
     def latency_s(self) -> float | None:
         if self.finished_at is None:
             return None
-        return self.finished_at - self.submitted_at
+        start = self.submitted_at if self.anchor_t0 is None else self.anchor_t0
+        return self.finished_at - start
+
+
+def _broadcast(values, n: int, what: str) -> list:
+    """Scalar-or-per-request broadcast shared by every serve entry point.
+
+    A 0-d numpy array is a *scalar* (``isinstance(x, np.ndarray)`` alone
+    would send it down the ``list(x)`` path, which raises); a list-typed
+    value must match ``len(prompts)`` exactly — silent ``zip`` truncation
+    would drop requests."""
+    if isinstance(values, np.ndarray) and values.ndim == 0:
+        values = values.item()
+    if isinstance(values, (list, tuple, np.ndarray)):
+        out = [None if v is None else v for v in list(values)]
+        if len(out) != n:
+            raise ValueError(
+                f"{what} has {len(out)} entries for {n} prompts; "
+                "per-request values must match the prompt count"
+            )
+        return out
+    return [values] * n
 
 
 class Scheduler:
-    """FIFO admission queue feeding the slot pool of a ``ServeEngine``."""
+    """Thread-safe FIFO admission queue feeding a ``ServeEngine`` slot pool."""
 
     def __init__(self):
         self._queue: collections.deque[Request] = collections.deque()
         self._next_rid = 0
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._closed = False
         self.results: dict[int, Request] = {}
 
     def submit(
@@ -59,16 +102,25 @@ class Scheduler:
         *,
         max_new_tokens: int | None = None,
         deadline_s: float | None = None,
+        tag: Any = None,
+        t0: float | None = None,
     ) -> int:
         req = Request(
-            rid=self._next_rid,
+            rid=-1,
             tokens=np.asarray(prompt_tokens).ravel(),
-            max_new_tokens=max_new_tokens,
+            max_new_tokens=None if max_new_tokens is None else int(max_new_tokens),
             deadline_s=deadline_s,
             submitted_at=time.monotonic(),
+            anchor_t0=t0,
+            tag=tag,
         )
-        self._next_rid += 1
-        self._queue.append(req)
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("scheduler is closed; no further submissions")
+            req.rid = self._next_rid
+            self._next_rid += 1
+            self._queue.append(req)
+            self._cond.notify_all()
         return req.rid
 
     def submit_many(
@@ -76,19 +128,24 @@ class Scheduler:
         prompts,
         max_new_tokens=None,
         deadlines=None,
+        *,
+        tags=None,
+        t0: float | None = None,
     ) -> list[int]:
-        """Submit a batch of prompts; scalar-or-per-request budget and
-        deadline broadcast shared by every serve entry point."""
+        """Submit a batch of prompts; ``max_new_tokens``/``deadlines`` may
+        each be a scalar (broadcast) or a per-request sequence whose length
+        must equal ``len(prompts)``."""
         n = len(prompts)
-        budgets = (
-            list(max_new_tokens)
-            if isinstance(max_new_tokens, (list, tuple, np.ndarray))
-            else [max_new_tokens] * n
-        )
-        deadlines = list(deadlines) if deadlines is not None else [None] * n
+        budgets = _broadcast(max_new_tokens, n, "max_new_tokens")
+        deads = _broadcast(deadlines, n, "deadlines")
+        tags = list(tags) if tags is not None else [None] * n
+        if len(tags) != n:
+            raise ValueError(f"tags has {len(tags)} entries for {n} prompts")
         return [
-            self.submit(np.asarray(p).ravel(), max_new_tokens=b, deadline_s=d)
-            for p, b, d in zip(prompts, budgets, deadlines)
+            self.submit(
+                np.asarray(p).ravel(), max_new_tokens=b, deadline_s=d, tag=g, t0=t0
+            )
+            for p, b, d, g in zip(prompts, budgets, deads, tags)
         ]
 
     @property
@@ -99,39 +156,90 @@ class Scheduler:
     def has_pending(self) -> bool:
         return bool(self._queue)
 
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def close(self):
+        """End of admission: no further ``submit`` calls are accepted and
+        consumers blocked in ``wait_for_work`` wake up to drain and exit."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+    def wait_for_work(self, timeout: float | None = None) -> bool:
+        """Block until the queue is non-empty or the scheduler is closed.
+        Returns True if there is work (or close) to act on, False on
+        timeout — the consumer side of the submit/close handshake."""
+        with self._cond:
+            return self._cond.wait_for(
+                lambda: bool(self._queue) or self._closed, timeout=timeout
+            )
+
+    def drain(self, timeout: float | None = None) -> bool:
+        """Block until every submitted request reached a terminal state
+        (done or expired) — the producer side of the handshake."""
+        with self._cond:
+            return self._cond.wait_for(
+                lambda: len(self.results) >= self._next_rid, timeout=timeout
+            )
+
+    @property
+    def n_in_flight(self) -> int:
+        """Submitted requests not yet terminal (queued or active)."""
+        with self._lock:
+            return self._next_rid - len(self.results)
+
+    def wait_backlog_below(self, n: int, timeout: float | None = None) -> bool:
+        """Block until fewer than ``n`` submitted requests are non-terminal
+        — producer-side backpressure, so a fast collector stays a bounded
+        number of micro-batches ahead of a slow engine instead of
+        materializing the whole workload in the queue.  Expired requests
+        count as terminal the moment ``pop_ready`` drops them, so a
+        deadline-heavy workload can never wedge a waiting producer."""
+        with self._cond:
+            return self._cond.wait_for(
+                lambda: self._next_rid - len(self.results) < n, timeout=timeout
+            )
+
     def pop_ready(self) -> Request | None:
         """Next admissible request (FIFO); expires overdue ones in passing."""
-        while self._queue:
-            req = self._queue.popleft()
-            now = time.monotonic()
-            if req.deadline_s is not None and now - req.submitted_at > req.deadline_s:
-                req.status = "expired"
-                req.finished_at = now
-                self.results[req.rid] = req
-                continue
-            req.status = "active"
-            req.started_at = now
-            return req
-        return None
+        with self._cond:
+            while self._queue:
+                req = self._queue.popleft()
+                now = time.monotonic()
+                if req.deadline_s is not None and now - req.submitted_at > req.deadline_s:
+                    req.status = "expired"
+                    req.finished_at = now
+                    self.results[req.rid] = req
+                    self._cond.notify_all()  # wake drain() waiters
+                    continue
+                req.status = "active"
+                req.started_at = now
+                return req
+            return None
 
     def finish(self, req: Request, answer: np.ndarray):
         req.status = "done"
         req.finished_at = time.monotonic()
         req.answer = np.asarray(answer)
-        self.results[req.rid] = req
+        with self._cond:
+            self.results[req.rid] = req
+            self._cond.notify_all()  # wake drain() waiters
 
     # ---- observability ----
     def latency_stats(self) -> dict:
         """p50/p95/mean submit->finish latency over completed requests."""
-        lats = sorted(
-            r.latency_s for r in self.results.values() if r.status == "done"
-        )
+        with self._lock:
+            done = [r for r in self.results.values() if r.status == "done"]
+            n_expired = sum(1 for r in self.results.values() if r.status == "expired")
+        lats = sorted(r.latency_s for r in done)
         if not lats:
             return {"n_done": 0}
         arr = np.asarray(lats)
         return {
             "n_done": len(lats),
-            "n_expired": sum(1 for r in self.results.values() if r.status == "expired"),
+            "n_expired": n_expired,
             "p50_s": float(np.percentile(arr, 50)),
             "p95_s": float(np.percentile(arr, 95)),
             "mean_s": float(arr.mean()),

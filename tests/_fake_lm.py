@@ -1,0 +1,74 @@
+"""Deterministic stand-in LM shared by the scheduler/streaming tests.
+
+Next token is always ``(cur + 1) % VOCAB``, so the exact answer of every
+request — including where EOS lands — is computable in closed form.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.tokenizer import EOS
+from repro.runtime.sharding import ShardingPolicy, base_rules
+
+POL = ShardingPolicy(rules=base_rules(False), mesh=None)
+VOCAB = 256
+
+
+class FakeLM:
+    """Deterministic LM: next token is (cur + 1) % vocab.  A prompt whose
+    last token is e generates e+1, e+2, ... so EOS (=2) arrives exactly
+    (2 - e - 1) % vocab + 1 tokens after prefill."""
+
+    @staticmethod
+    def _logits(tokens):
+        nxt = (tokens + 1) % VOCAB
+        return jnp.eye(VOCAB, dtype=jnp.float32)[nxt]
+
+    @staticmethod
+    def prefill(cfg, pol, params, batch, cache_len=None):
+        tokens = batch["tokens"]
+        return FakeLM._logits(tokens), FakeLM.init_cache(cfg, tokens.shape[0], cache_len)
+
+    @staticmethod
+    def decode_step(cfg, pol, params, cache, tokens, pos):
+        return FakeLM._logits(tokens), cache
+
+    @staticmethod
+    def init_cache(cfg, batch, cache_len, dtype=jnp.float32, abstract=False):
+        # same (n_blocks, B, ...) leaf layout contract as the real cache
+        return {"dummy": jnp.zeros((1, batch, 1), jnp.float32)}
+
+
+def expected_answer(end_token: int, budget: int) -> list[int]:
+    """Closed-form answer of the FakeLM for a prompt ending in end_token."""
+    toks, x = [], end_token
+    while len(toks) < budget:
+        x = (x + 1) % VOCAB
+        toks.append(x)
+        if x == EOS:
+            break
+    return toks
+
+
+def prompt_ending(end_token: int, length: int = 5) -> np.ndarray:
+    p = np.full((length,), 7, np.int32)
+    p[-1] = end_token
+    return p
+
+
+def make_fake_engine(monkeypatch, max_batch=2, max_new_tokens=6, sched_chunk=3):
+    """ServeEngine over the FakeLM (monkeypatched in place of the real
+    model module) with the qwen3 smoke config's 256-token vocab."""
+    import repro.serving.engine as engine_mod
+    from repro.configs import get_config, smoke_config
+    from repro.serving.engine import ServeConfig, ServeEngine
+
+    monkeypatch.setattr(engine_mod, "LM", FakeLM)
+    cfg = smoke_config(get_config("qwen3-0.6b")).with_overrides(dtype="float32")
+    assert cfg.vocab_size == VOCAB
+    return ServeEngine(
+        cfg, POL, {},
+        ServeConfig(
+            max_batch=max_batch, max_prompt_len=8,
+            max_new_tokens=max_new_tokens, sched_chunk=sched_chunk,
+        ),
+    )

@@ -7,6 +7,7 @@ arrived by the deadline, quorum failure raises promptly, and — when every
 provider answers in time — results are bit-identical to the sequential
 dispatch loop.
 """
+import threading
 import time
 
 import numpy as np
@@ -14,7 +15,7 @@ import pytest
 
 from repro.core.pipeline import CFedRAGConfig, CFedRAGSystem
 from repro.data.corpus import make_federated_corpus
-from repro.data.tokenizer import HashTokenizer
+from repro.data.tokenizer import ANS, BOS, CTX, EOS, PAD, QRY, SEP, HashTokenizer
 from repro.launch.serve import overlap_reranker
 
 SLOW = 5.0  # straggler delay; every test must finish far below this
@@ -75,6 +76,7 @@ def test_concurrent_matches_sequential_bitwise(corpus):
         )
 
 
+@pytest.mark.timing
 def test_collect_wallclock_is_max_not_sum(corpus):
     """Acceptance: 4 providers, one with delay 0.2s — batched collect
     wall-clock must track the slowest provider (max), not the sum."""
@@ -89,6 +91,7 @@ def test_collect_wallclock_is_max_not_sum(corpus):
     assert dt < 2 * max(delays), f"collect took {dt:.3f}s (sum={sum(delays)}s)"
 
 
+@pytest.mark.timing
 def test_straggler_cut_off_at_deadline(corpus):
     """A provider slower than deadline_s must be abandoned mid-flight,
     not awaited: collect returns around the deadline with the fast
@@ -103,6 +106,7 @@ def test_straggler_cut_off_at_deadline(corpus):
     assert sorted(int(r["provider"]) for r in responses) == [0, 2, 3]
 
 
+@pytest.mark.timing
 def test_quorum_early_return_does_not_wait_for_stragglers(corpus):
     """With quorum met at the deadline, collect must return immediately —
     the slow provider's response is simply dropped (k_n < k)."""
@@ -114,6 +118,7 @@ def test_quorum_early_return_does_not_wait_for_stragglers(corpus):
     assert res["n_providers"] == 3
 
 
+@pytest.mark.timing
 def test_quorum_failure_raises_promptly(corpus):
     """Too few providers inside the deadline -> RuntimeError at the
     deadline, without waiting the stragglers out."""
@@ -122,6 +127,95 @@ def test_quorum_failure_raises_promptly(corpus):
     with pytest.raises(RuntimeError, match="quorum"):
         sys_.orchestrator.collect_contexts_batch([corpus.queries[0].text])
     assert time.monotonic() - t0 < 2.0
+
+
+@pytest.mark.timing
+def test_deadline_budget_anchored_before_spawn(corpus):
+    """Regression: the deadline clock must start at ``_collect`` entry,
+    not at the post-spawn ``wait_for`` — time already burned before the
+    wait (payload build, thread spawn) comes OUT of the wait budget.
+    Simulated by handing ``_collect_concurrent`` an anchor aged by most
+    of the deadline: only the remainder may be spent waiting."""
+    sys_ = _system(corpus, deadline=0.5, delays=(SLOW, SLOW, SLOW, SLOW), warm=1)
+    orch = sys_.orchestrator
+    tokens = sys_.tok.encode(corpus.queries[0].text, max_len=24)
+    t0 = time.monotonic() - 0.45  # 0.45s of the 0.5s SLO already spent
+    t_start = time.monotonic()
+    with pytest.raises(RuntimeError, match="quorum"):
+        orch._collect_concurrent(orch.providers, lambda p: tokens, t0)
+    dt = time.monotonic() - t_start
+    assert dt < 0.4, (
+        f"wait consumed {dt:.3f}s, but only ~0.05s of the SLO remained — "
+        "the deadline was re-anchored after spawn"
+    )
+
+
+@pytest.mark.timing
+def test_worker_exception_wakes_collect_without_deadline(corpus):
+    """Regression: with ``deadline_s=None``, an unexpected worker
+    exception plus one hung provider used to park ``wait_for`` forever —
+    the predicate only counted finished workers, so the re-raise was
+    unreachable.  The wait must wake on the exception and surface it."""
+    sys_ = _system(corpus, concurrent=True, warm=1)
+    sys_.providers[1].delay_s = SLOW  # hung straggler, never finishes
+
+    def boom(nonce, sealed):
+        raise ValueError("unexpected provider bug")
+
+    sys_.providers[0].handle_request = boom
+    done: list[BaseException] = []
+
+    def run():
+        try:
+            sys_.orchestrator.collect_contexts(corpus.queries[0].text)
+        except BaseException as e:
+            done.append(e)
+
+    t = threading.Thread(target=run, daemon=True)
+    t.start()
+    t.join(timeout=2.0)
+    assert not t.is_alive(), "collect hung: worker exception did not wake wait_for"
+    assert done and isinstance(done[0], ValueError)
+
+
+def test_build_prompt_overflow_keeps_grammar(corpus):
+    """Regression: overflowing prompts used to be tail-sliced
+    (``ids[-max_len:]``), cutting off BOS/CTX and bisecting a chunk.
+    Whole lowest-ranked chunks must be dropped instead, and the
+    [BOS] CTX ... QRY query ANS skeleton preserved."""
+    sys_ = _system(corpus)
+    orch = sys_.orchestrator
+    text = corpus.queries[0].text
+    context = orch.aggregate(text, orch.collect_contexts(text))
+    full = orch.build_prompt(text, context, max_len=512)[0]
+    q_toks = [int(t) for t in sys_.tok.encode(text, bos=False) if t not in (PAD, EOS)]
+    chunks = [
+        [int(t) for t in row if t not in (PAD, BOS, EOS)]
+        for row in context["chunk_tokens"]
+    ]
+    # non-overflow: exact grammar, all chunks, unchanged by the fix
+    want = [BOS, CTX]
+    for c in chunks:
+        want += c + [SEP]
+    want += [QRY] + q_toks + [ANS]
+    assert list(full) == want
+    # overflow: room for only some chunks
+    max_len = 2 + sum(len(c) + 1 for c in chunks[:3]) + 1 + len(q_toks) + 1 + 2
+    small = list(orch.build_prompt(text, context, max_len=max_len)[0])
+    assert len(small) <= max_len
+    assert small[:2] == [BOS, CTX], "BOS/CTX sliced off on overflow"
+    assert small[-1] == ANS and small[-len(q_toks) - 2] == QRY
+    assert small[-len(q_toks) - 1 : -1] == q_toks, "query must survive intact"
+    body = small[2 : -len(q_toks) - 2]
+    # kept chunks are an exact prefix of the ranked list, SEP-terminated
+    kept, i = 0, 0
+    while i < len(body):
+        c = chunks[kept]
+        assert body[i : i + len(c)] == c, f"chunk {kept} bisected on overflow"
+        assert body[i + len(c)] == SEP
+        i += len(c) + 1
+        kept += 1
+    assert 0 < kept < len(chunks), "overflow case must drop some tail chunks"
 
 
 def test_failed_provider_tolerated_concurrently(corpus):

@@ -13,76 +13,21 @@ Two layers of coverage:
 """
 import time
 
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-import repro.serving.engine as engine_mod
-from repro.data.tokenizer import EOS, PAD
-from repro.runtime.sharding import ShardingPolicy, base_rules
+from _fake_lm import POL, expected_answer as _expected, make_fake_engine, prompt_ending as _prompt
+from repro.data.tokenizer import PAD
 from repro.serving.engine import ServeConfig, ServeEngine, engine_generator
 from repro.serving.scheduler import Scheduler
-
-POL = ShardingPolicy(rules=base_rules(False), mesh=None)
-VOCAB = 256
-
-
-class _FakeLM:
-    """Deterministic LM: next token is (cur + 1) % vocab.  A prompt whose
-    last token is e generates e+1, e+2, ... so EOS (=2) arrives exactly
-    (2 - e - 1) % vocab + 1 tokens after prefill."""
-
-    @staticmethod
-    def _logits(tokens):
-        nxt = (tokens + 1) % VOCAB
-        return jnp.eye(VOCAB, dtype=jnp.float32)[nxt]
-
-    @staticmethod
-    def prefill(cfg, pol, params, batch, cache_len=None):
-        tokens = batch["tokens"]
-        return _FakeLM._logits(tokens), _FakeLM.init_cache(cfg, tokens.shape[0], cache_len)
-
-    @staticmethod
-    def decode_step(cfg, pol, params, cache, tokens, pos):
-        return _FakeLM._logits(tokens), cache
-
-    @staticmethod
-    def init_cache(cfg, batch, cache_len, dtype=jnp.float32, abstract=False):
-        # same (n_blocks, B, ...) leaf layout contract as the real cache
-        return {"dummy": jnp.zeros((1, batch, 1), jnp.float32)}
-
-
-def _expected(end_token: int, budget: int) -> list[int]:
-    """Closed-form answer of the FakeLM for a prompt ending in end_token."""
-    toks, x = [], end_token
-    while len(toks) < budget:
-        x = (x + 1) % VOCAB
-        toks.append(x)
-        if x == EOS:
-            break
-    return toks
-
-
-def _prompt(end_token: int, length: int = 5) -> np.ndarray:
-    p = np.full((length,), 7, np.int32)
-    p[-1] = end_token
-    return p
 
 
 @pytest.fixture()
 def fake_engine(monkeypatch):
     def make(max_batch=2, max_new_tokens=6, sched_chunk=3):
-        monkeypatch.setattr(engine_mod, "LM", _FakeLM)
-        from repro.configs import get_config, smoke_config
-
-        cfg = smoke_config(get_config("qwen3-0.6b")).with_overrides(dtype="float32")
-        assert cfg.vocab_size == VOCAB
-        return ServeEngine(
-            cfg, POL, {},
-            ServeConfig(
-                max_batch=max_batch, max_prompt_len=8,
-                max_new_tokens=max_new_tokens, sched_chunk=sched_chunk,
-            ),
+        return make_fake_engine(
+            monkeypatch, max_batch=max_batch,
+            max_new_tokens=max_new_tokens, sched_chunk=sched_chunk,
         )
 
     return make
@@ -102,6 +47,82 @@ def test_scheduler_fifo_and_expiry():
     assert nxt.rid == r3 and nxt.max_new_tokens == 4
     assert s.pop_ready() is None and not s.has_pending
     assert s.results[r2].status == "expired"
+
+
+def test_submit_many_scalar_ndarray_broadcasts():
+    """Regression: a 0-d numpy array passes the np.ndarray isinstance
+    check but is not iterable (``list(np.array(5))`` raises) — it must
+    broadcast like a python scalar."""
+    s = Scheduler()
+    rids = s.submit_many([np.arange(3)] * 3, np.array(5), np.array(1.5))
+    assert len(rids) == 3
+    for rid in rids:
+        req = s.pop_ready()
+        assert req.rid == rid and req.max_new_tokens == 5 and req.deadline_s == 1.5
+
+
+def test_submit_many_rejects_mismatched_lengths():
+    """Regression: a per-request list shorter than the prompt batch used
+    to zip-truncate silently, dropping requests."""
+    s = Scheduler()
+    prompts = [np.arange(3)] * 3
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        s.submit_many(prompts, [4, 4])
+    with pytest.raises(ValueError, match="deadlines"):
+        s.submit_many(prompts, None, [1.0, 1.0, 1.0, 1.0])
+    with pytest.raises(ValueError, match="tags"):
+        s.submit_many(prompts, tags=[0])
+    assert s.n_queued == 0  # no partial submission from a rejected batch
+    rids = s.submit_many(prompts, [4, 5, 6], [None, 0.5, None], tags=["a", "b", "c"])
+    got = [s.pop_ready() for _ in rids]
+    assert [r.max_new_tokens for r in got] == [4, 5, 6]
+    assert [r.deadline_s for r in got] == [None, 0.5, None]
+    assert [r.tag for r in got] == ["a", "b", "c"]
+
+
+def test_latency_anchor_does_not_move_expiry_clock():
+    """The t0 anchor widens latency_s to cover an upstream stage; the
+    deadline_s expiry clock must still start at the actual submit."""
+    s = Scheduler()
+    rid = s.submit(np.arange(3), deadline_s=0.05, t0=time.monotonic() - 10.0)
+    req = s.pop_ready()
+    assert req is not None and req.rid == rid, (
+        "anchored request expired: upstream time was charged to the deadline"
+    )
+    s.finish(req, np.arange(1))
+    assert s.results[rid].latency_s > 9.0  # latency spans the anchor
+
+
+def test_wait_backlog_below_backpressure():
+    s = Scheduler()
+    assert s.wait_backlog_below(1, timeout=0.0)  # nothing in flight
+    s.submit(np.arange(3))
+    s.submit(np.arange(3))
+    assert not s.wait_backlog_below(2, timeout=0.0)
+    req = s.pop_ready()
+    s.finish(req, np.arange(1))
+    assert s.n_in_flight == 1 and s.wait_backlog_below(2, timeout=0.0)
+    # expired requests count as terminal too (no producer wedge)
+    s.submit(np.arange(3), deadline_s=0.0)
+    time.sleep(0.01)
+    assert s.pop_ready() is not None  # the first live request
+    assert s.pop_ready() is None  # expires the overdue one in passing
+    assert s.wait_backlog_below(2, timeout=0.0)
+
+
+def test_scheduler_close_and_drain_handshake():
+    s = Scheduler()
+    rid = s.submit(np.arange(3))
+    assert s.wait_for_work(timeout=0.0)  # queued work is visible
+    s.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        s.submit(np.arange(3))
+    assert s.closed and s.wait_for_work(timeout=0.0)
+    assert not s.drain(timeout=0.0)  # rid has no terminal result yet
+    req = s.pop_ready()
+    s.finish(req, np.arange(2))
+    assert s.drain(timeout=0.0)
+    assert s.results[rid].status == "done"
 
 
 # ------------------------------------------------------------------ #

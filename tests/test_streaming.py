@@ -1,0 +1,176 @@
+"""Streaming serve + pipelined front door.
+
+Engine layer: ``serve_stream`` must yield each ``(rid, answer)`` at
+retire time (retire order, not submission order), stay bit-identical to
+the one-shot ``serve`` dict, and keep consuming submissions from a
+producer thread until the scheduler is closed — the submit-while-serving
+race the thread-safe scheduler exists to make safe.
+
+System layer: ``CFedRAGSystem.serve_stream`` double-buffers collect and
+decode (collector thread runs collect/aggregate for micro-batch N+1
+while the engine decodes N) and must stay bit-identical to the
+phase-barrier ``serve`` on the same inputs, with ``latency_s`` covering
+collect -> finish.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from _fake_lm import expected_answer, make_fake_engine, prompt_ending
+from repro.serving.scheduler import Scheduler
+
+
+@pytest.fixture()
+def fake_engine(monkeypatch):
+    def make(**kw):
+        return make_fake_engine(monkeypatch, **kw)
+
+    return make
+
+
+# ------------------------------------------------------------------ #
+# engine layer
+# ------------------------------------------------------------------ #
+def test_serve_stream_yields_in_retire_order(fake_engine):
+    """A short-budget request admitted alongside a long one must be
+    yielded first, while the long row is still decoding."""
+    eng = fake_engine(max_batch=2, max_new_tokens=8, sched_chunk=1)
+    sched = Scheduler()
+    r_long = sched.submit(prompt_ending(10), max_new_tokens=8)  # no EOS in 8
+    r_short = sched.submit(prompt_ending(10), max_new_tokens=2)
+    order = []
+    for rid, ans in eng.serve_stream(sched, drain=True):
+        order.append(rid)
+        want = expected_answer(10, 8 if rid == r_long else 2)
+        assert list(ans) == want
+    assert order == [r_short, r_long], "short budget must retire (and yield) first"
+
+
+def test_serve_stream_matches_serve_bitwise(fake_engine):
+    eng = fake_engine(max_batch=2, max_new_tokens=6, sched_chunk=3)
+    ends = [253, 0, 10, 254, 5, 1, 77]
+    s1, s2 = Scheduler(), Scheduler()
+    rids1 = s1.submit_many([prompt_ending(e) for e in ends])
+    rids2 = s2.submit_many([prompt_ending(e) for e in ends])
+    streamed = dict(eng.serve_stream(s1, drain=True))
+    oneshot = eng.serve(s2)
+    assert set(streamed) == set(rids1)
+    for e, ra, rb in zip(ends, rids1, rids2):
+        assert list(streamed[ra]) == list(oneshot[rb]) == expected_answer(e, 6)
+
+
+def test_submit_while_serving_threaded_producer(fake_engine):
+    """A producer thread submits into the live scheduler while the engine
+    consumes; every answer must match the closed form and the stream must
+    end exactly at close+drain (no lost or duplicated requests)."""
+    eng = fake_engine(max_batch=2, max_new_tokens=6, sched_chunk=2)
+    sched = Scheduler()
+    ends = [(37 * i + 11) % 256 for i in range(24)]
+    submitted: dict[int, int] = {}  # rid -> end token
+
+    def producer():
+        for i, e in enumerate(ends):
+            submitted[sched.submit(prompt_ending(e))] = e
+            if i % 3 == 0:
+                time.sleep(0.002)  # interleave with decode chunks
+        sched.close()
+
+    t = threading.Thread(target=producer)
+    t.start()
+    got = dict(eng.serve_stream(sched))  # live mode: waits for close
+    t.join()
+    assert len(got) == len(ends)
+    for rid, e in submitted.items():
+        assert list(got[rid]) == expected_answer(e, 6), f"rid={rid} end={e}"
+    assert sched.drain(timeout=0.0)  # everything reached a terminal state
+
+
+def test_serve_stream_live_exits_on_close_with_empty_queue(fake_engine):
+    eng = fake_engine(max_batch=2)
+    sched = Scheduler()
+    sched.close()
+    assert list(eng.serve_stream(sched)) == []
+
+
+# ------------------------------------------------------------------ #
+# system layer (real small LM): pipelined front door parity
+# ------------------------------------------------------------------ #
+@pytest.fixture(scope="module")
+def streamed_system():
+    import jax
+
+    from repro.configs import get_config, smoke_config
+    from repro.core.pipeline import CFedRAGConfig, CFedRAGSystem
+    from repro.data.corpus import make_federated_corpus
+    from repro.data.tokenizer import HashTokenizer
+    from repro.launch.serve import overlap_reranker
+    from repro.models import lm as LM
+    from repro.models.params import init_params
+    from repro.runtime.sharding import ShardingPolicy, base_rules
+    from repro.serving.engine import ServeConfig, ServeEngine, engine_generator
+
+    cfg = smoke_config(get_config("qwen3-0.6b")).with_overrides(dtype="float32")
+    params = init_params(LM.param_specs(cfg), jax.random.PRNGKey(0))
+    pol = ShardingPolicy(rules=base_rules(False), mesh=None)
+    engine = ServeEngine(
+        cfg, pol, params,
+        ServeConfig(max_batch=2, max_prompt_len=128, max_new_tokens=4, sched_chunk=2),
+    )
+    corpus = make_federated_corpus(n_facts=24, n_distractors=24, n_queries=8, seed=11)
+    tok = HashTokenizer()
+    sys_ = CFedRAGSystem(
+        corpus,
+        CFedRAGConfig(
+            aggregation="rerank", m_local=4, n_global=4, chunk_max_len=16
+        ),
+        tokenizer=tok,
+        reranker=overlap_reranker(tok),
+        generator=engine_generator(engine),
+    )
+    return corpus, sys_
+
+
+def test_pipeline_serve_stream_matches_serve(streamed_system):
+    """Acceptance parity: pipelined serve_stream results bit-identical to
+    the phase-barrier serve on the same queries (modulo latency, whose
+    span now covers collect -> finish)."""
+    corpus, sys_ = streamed_system
+    texts = [q.text for q in corpus.queries[:7]]  # uneven micro-batching
+    barrier = sys_.serve(texts, max_new_tokens=4)
+    streamed = [None] * len(texts)
+    seen = []
+    for qidx, out in sys_.serve_stream(texts, max_new_tokens=4, collect_batch=3):
+        seen.append(qidx)
+        streamed[qidx] = out
+    assert sorted(seen) == list(range(len(texts))), "each query yields exactly once"
+    for a, b in zip(barrier, streamed):
+        assert b["status"] == a["status"] == "done"
+        assert np.array_equal(a["prompt"], b["prompt"])
+        assert np.array_equal(a["answer_tokens"], b["answer_tokens"])
+        for k in ("chunk_tokens", "chunk_ids", "scores", "providers"):
+            assert np.array_equal(a["context"][k], b["context"][k])
+        assert b["latency_s"] is not None and b["latency_s"] > 0
+
+
+@pytest.mark.timing
+def test_pipeline_serve_stream_latency_covers_collect(streamed_system):
+    """latency_s is anchored at the micro-batch's collect start: with a
+    slow provider, streamed latency must include the provider round-trip,
+    not just generation."""
+    corpus, sys_ = streamed_system
+    texts = [q.text for q in corpus.queries[:2]]
+    delay = 0.15
+    try:
+        for p in sys_.providers:
+            p.delay_s = delay
+        outs = dict(sys_.serve_stream(texts, max_new_tokens=2, collect_batch=2))
+    finally:
+        for p in sys_.providers:
+            p.delay_s = 0.0
+    assert len(outs) == 2
+    for out in outs.values():
+        assert out["latency_s"] >= delay, (
+            f"latency_s={out['latency_s']:.3f}s must cover the {delay}s collect"
+        )
