@@ -45,6 +45,12 @@ def main(argv=None) -> None:
     for name, us, derived in sched_rows:
         print(f"{name},{us:.1f},{derived}")
     e2e_rows += sched_rows
+
+    print("\n== paged vs contiguous KV cache at equal HBM (short-prompt workload) ==")
+    kv_rows = e2e_pipeline.run_paged_capacity()
+    for name, us, derived in kv_rows:
+        print(f"{name},{us:.1f},{derived}")
+    e2e_rows += kv_rows
     if args.json:
         print(f"wrote {e2e_pipeline.write_json(e2e_rows)}")
 

@@ -50,6 +50,8 @@ def _serve_result(req, prompt, context, n_providers: int, answer=None) -> dict:
     }
     if req.status == "done":
         out["answer_tokens"] = answer
+        if req.truncated:  # cut short by KV-pool OOM, not EOS/budget
+            out["truncated"] = True
     return out
 
 
@@ -145,6 +147,9 @@ class CFedRAGSystem:
         # submit_many, shared by every serve entry point
         rids = sched.submit_many(prompts, max_new_tokens, gen_deadline_s)
         answers = engine.serve(sched)
+        # latency percentiles + engine occupancy gauges (free slots / free
+        # KV blocks) for callers that report memory headroom
+        self.last_serve_stats = sched.latency_stats()
         return [
             _serve_result(sched.results[rid], prompt, ctx, len(responses), answers.get(rid))
             for rid, prompt, ctx in zip(rids, prompts, contexts)
@@ -264,6 +269,7 @@ class CFedRAGSystem:
             # backpressure: signal it down, then wait it out
             stop.set()
             producer.join()
+            self.last_serve_stats = sched.latency_stats()
         if collect_err:
             raise collect_err[0]
 

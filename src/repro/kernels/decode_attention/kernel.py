@@ -114,6 +114,107 @@ def decode_attention_pallas(
     return out.reshape(b, h, dh).astype(q.dtype)
 
 
+def _paged_kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                  m_scr, l_scr, acc_scr, *, bs, scale, n_t):
+    """Grid (B, KV, n_max_blocks).  The scalar-prefetched block table
+    drives the K/V BlockSpec index maps, so pool block ``tbl[b, t]``
+    streams into VMEM for (batch b, logical block t) — the gather never
+    materializes in HBM.  Masking is positional: logical position
+    ``t * bs + lane`` is valid iff < lengths[b] — trash-backed lanes are
+    always past the length and contribute exp(-inf) = 0 exactly."""
+    tj = pl.program_id(2)
+    bi = pl.program_id(0)
+
+    @pl.when(tj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (G, dh)
+    k = k_ref[0, 0].astype(jnp.float32)  # (BS, dh)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (G, BS)
+    kpos = tj * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < len_ref[bi], s, NEG_INF)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_prev * alpha + p.sum(-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(tj == n_t - 1)
+    def _finish():
+        o_ref[0, 0] = acc_scr[...].astype(o_ref.dtype)
+        m_ref[0, 0] = m_scr[...]
+        l_ref[0, 0] = l_scr[...]
+
+
+def paged_decode_attention_pallas(
+    q: jax.Array,  # (B, H, dh) — one new token per sequence
+    k_pool: jax.Array,  # (n_pool, bs, KV, dh) shared block pool
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, n_max_blocks) int32 pool ids per row
+    lengths: jax.Array,  # (B,) valid cache length per sequence
+    *,
+    interpret: bool = True,
+):
+    """Flash-decode over a PAGED KV cache: same online-softmax stream as
+    ``decode_attention_pallas``, but the sequence axis is a block table —
+    the BlockSpec index map reads the scalar-prefetched table to pick
+    which pool block to DMA per grid step (the vLLM-style paged-attention
+    gather, done by the memory system instead of an HBM materialize)."""
+    b, h, dh = q.shape
+    n_pool, bs, kv = k_pool.shape[0], k_pool.shape[1], k_pool.shape[2]
+    n_t = block_tables.shape[1]
+    g = h // kv
+    scale = 1.0 / np.sqrt(dh)
+
+    qg = q.reshape(b, kv, g, dh)
+    kt = k_pool.transpose(0, 2, 1, 3)  # (n_pool, KV, BS, dh)
+    vt = v_pool.transpose(0, 2, 1, 3)
+    grid = (b, kv, n_t)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_tables, lengths
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda bi, ki, tj, tbl, lens: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, 1, bs, dh), lambda bi, ki, tj, tbl, lens: (tbl[bi, tj], ki, 0, 0)),
+            pl.BlockSpec((1, 1, bs, dh), lambda bi, ki, tj, tbl, lens: (tbl[bi, tj], ki, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda bi, ki, tj, tbl, lens: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda bi, ki, tj, tbl, lens: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, 1, g, 1), lambda bi, ki, tj, tbl, lens: (bi, ki, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+    )
+    o, m, l = pl.pallas_call(
+        functools.partial(_paged_kernel, bs=bs, scale=scale, n_t=n_t),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kv, g, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv, g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv, g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), qg, kt, vt)
+    out = o / jnp.maximum(l, 1e-30)
+    return out.reshape(b, h, dh).astype(q.dtype)
+
+
 def combine_partials(o, m, l):
     """Combine a list of (o, m, l) partials from disjoint cache shards."""
     m_g = jnp.max(jnp.stack(m), axis=0)

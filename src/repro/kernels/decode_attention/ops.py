@@ -1,4 +1,4 @@
-"""Jitted public wrapper for flash-decode."""
+"""Jitted public wrappers for flash-decode (contiguous + paged)."""
 import functools
 
 import jax
@@ -6,8 +6,12 @@ import jax
 from repro.kernels.decode_attention.kernel import (
     combine_partials,
     decode_attention_pallas,
+    paged_decode_attention_pallas,
 )
-from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.decode_attention.ref import (
+    decode_attention_ref,
+    paged_decode_attention_ref,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
@@ -17,3 +21,16 @@ def decode_attention(q, k_cache, v_cache, lengths, use_pallas: bool = False):
             q, k_cache, v_cache, lengths, interpret=jax.default_backend() != "tpu"
         )
     return decode_attention_ref(q, k_cache, v_cache, lengths)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, use_pallas: bool = False):
+    """Single-token attention through a block table over a shared KV pool.
+    ``use_pallas=True`` streams pool blocks via scalar-prefetch index maps
+    (TPU target; interpret elsewhere); the default gathers in XLA."""
+    if use_pallas:
+        return paged_decode_attention_pallas(
+            q, k_pool, v_pool, block_tables, lengths,
+            interpret=jax.default_backend() != "tpu",
+        )
+    return paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths)

@@ -15,3 +15,17 @@ def decode_attention_ref(q, k_cache, v_cache, lengths):
     p = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
     return out.reshape(b, h, dh).astype(q.dtype)
+
+
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths):
+    """Oracle for the paged kernel: materialize each row's contiguous view
+    by gathering its table's pool blocks, then run the dense oracle.
+    Positions past ``lengths`` (including every trash-backed lane) are
+    masked identically, so this also defines the paged<->contiguous
+    equivalence the serving engine's bit-parity tests rely on."""
+    b = q.shape[0]
+    bs = k_pool.shape[1]
+    s_pad = block_tables.shape[1] * bs
+    k_view = k_pool[block_tables].reshape(b, s_pad, *k_pool.shape[2:])
+    v_view = v_pool[block_tables].reshape(b, s_pad, *v_pool.shape[2:])
+    return decode_attention_ref(q, k_view, v_view, lengths)

@@ -4,6 +4,7 @@ providers + enclave orchestrator, and answer queries.
   python -m repro.launch.serve --queries 5 --aggregation rerank
   python -m repro.launch.serve --queries 5 --generate --deadline-s 0.5
   python -m repro.launch.serve --queries 16 --stream --collect-batch 4
+  python -m repro.launch.serve --queries 16 --generate --paged --block-size 32
 
 Uses the bag embedder + lexical-overlap reranker by default (training-free
 CPU path).  ``--generate`` stands up a reduced-LM ``ServeEngine`` and
@@ -47,9 +48,14 @@ def overlap_reranker(tok: HashTokenizer):
     return rerank
 
 
-def make_demo_engine(max_new_tokens: int = 16):
+def make_demo_engine(max_new_tokens: int = 16, paged: bool = False,
+                     block_size: int = 32, pool_blocks: int | None = None,
+                     max_batch: int = 4):
     """Reduced-LM ServeEngine (random-init, CPU-sized) + generator adapter
-    for the scheduler-driven serving demo."""
+    for the scheduler-driven serving demo.  ``paged=True`` swaps the
+    per-slot cache stripes for the shared block pool (``--block-size``
+    tokens per block; ``--pool-blocks`` caps the HBM budget, default =
+    ``max_batch`` contiguous stripes)."""
     import jax
 
     from repro.configs import get_config, smoke_config
@@ -63,7 +69,10 @@ def make_demo_engine(max_new_tokens: int = 16):
     pol = ShardingPolicy(rules=base_rules(False), mesh=None)
     engine = ServeEngine(
         cfg, pol, params,
-        ServeConfig(max_batch=4, max_prompt_len=256, max_new_tokens=max_new_tokens),
+        ServeConfig(
+            max_batch=max_batch, max_prompt_len=256, max_new_tokens=max_new_tokens,
+            paged=paged, block_size=block_size, n_pool_blocks=pool_blocks,
+        ),
     )
     return engine_generator(engine)
 
@@ -95,6 +104,17 @@ def main(argv=None):
         help="micro-batch size of the --stream collector thread",
     )
     ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument(
+        "--paged", action="store_true",
+        help="paged KV cache: block-pool memory manager instead of one "
+        "contiguous stripe per slot (admission becomes memory-aware)",
+    )
+    ap.add_argument("--block-size", type=int, default=32, help="tokens per KV block (--paged)")
+    ap.add_argument(
+        "--pool-blocks", type=int, default=None,
+        help="KV pool size in blocks (--paged); default = max-batch contiguous stripes",
+    )
+    ap.add_argument("--max-batch", type=int, default=4, help="engine decode slots")
     args = ap.parse_args(argv)
     if args.stream:
         args.generate = True
@@ -112,7 +132,10 @@ def main(argv=None):
         ),
         tokenizer=tok,
         reranker=overlap_reranker(tok) if args.aggregation == "rerank" else None,
-        generator=make_demo_engine(args.max_new_tokens) if args.generate else None,
+        generator=make_demo_engine(
+            args.max_new_tokens, paged=args.paged, block_size=args.block_size,
+            pool_blocks=args.pool_blocks, max_batch=args.max_batch,
+        ) if args.generate else None,
     )
     if args.kill_provider is not None:
         sys_.providers[args.kill_provider].fail = True
@@ -169,6 +192,19 @@ def main(argv=None):
             p50 = lats[len(lats) // 2]
             p95 = lats[min(len(lats) - 1, int(len(lats) * 0.95))]
             print(f"\ngeneration latency: p50={p50 * 1e3:.1f}ms p95={p95 * 1e3:.1f}ms")
+        st = getattr(sys_, "last_serve_stats", {})
+        if "min_free_slots" in st:
+            slots = sys_.orchestrator.generator.engine.scfg.max_batch
+            line = (
+                f"memory headroom: peak {slots - st['min_free_slots']}/{slots} slots "
+                f"(backlog peak {st['peak_backlog']})"
+            )
+            if "min_free_blocks" in st:
+                line += (
+                    f", KV blocks {st['free_blocks']} free now / "
+                    f"{st['min_free_blocks']} at peak ({args.block_size} tok/block)"
+                )
+            print(line)
     stats = sys_.eval_retrieval(args.queries)
     print(f"\nrecall@{args.n_global}: {stats['recall_at_n']:.3f}  mrr: {stats['mrr']:.3f}")
 

@@ -212,6 +212,46 @@ def attn_decode(cfg: ModelConfig, pol: ShardingPolicy, p, x, k_cache, v_cache, p
     return out, k_cache, v_cache
 
 
+def attn_decode_paged(cfg: ModelConfig, pol: ShardingPolicy, p, x, k_pool, v_pool, pos, block_tables, block_size: int):
+    """Single-token decode against a PAGED KV cache.
+
+    ``k_pool``/``v_pool``: ``(n_pool, block_size, KV, hd)`` shared block
+    pool (this layer's slice); ``block_tables``: ``(B, n_max_blocks)``
+    int32 mapping each row's logical block ``i`` (positions ``[i*bs,
+    (i+1)*bs)``) to a pool block.  ``pos`` is always per-row ``(B,)`` in
+    paged mode.  The new K/V lands at ``pool[table[pos // bs], pos % bs]``
+    and attention runs over the gathered ``(B, n_max_blocks * bs)`` view —
+    identical values, shapes, and mask arithmetic to the contiguous
+    ``attn_decode`` whenever ``n_max_blocks * bs`` equals the contiguous
+    ``cache_len``, which is what makes the paged engine bit-identical to
+    the contiguous baseline.  Unallocated table entries point at the
+    engine's trash block: their lanes are always behind the ``kpos <=
+    pos`` mask, so whatever they hold contributes exactly 0 to softmax.
+    """
+    b = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    q, k_new, v_new = attn_qkv(cfg, pol, p, x, pos[:, None])
+    rows = jnp.arange(b)
+    bid = block_tables[rows, pos // block_size]  # (B,) pool block per row
+    off = pos % block_size
+    # rows own disjoint blocks (the pool allocator guarantees it), so the
+    # (bid, off) scatter targets are distinct across live rows
+    k_pool = k_pool.at[bid, off].set(k_new[:, 0].astype(k_pool.dtype))
+    v_pool = v_pool.at[bid, off].set(v_new[:, 0].astype(v_pool.dtype))
+    s_pad = block_tables.shape[1] * block_size
+    k_view = k_pool[block_tables].reshape(b, s_pad, *k_pool.shape[2:])
+    v_view = v_pool[block_tables].reshape(b, s_pad, *v_pool.shape[2:])
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = _gqa_logits(q, k_view.astype(q.dtype)) * scale  # (B,KV,G,1,S_pad)
+    kpos = jnp.arange(s_pad)
+    valid = (kpos[None, :] <= pos[:, None]).reshape(b, 1, 1, 1, s_pad)
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = _gqa_out(probs, v_view.astype(q.dtype), q.dtype)  # (B,1,H,hd)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, k_pool, v_pool
+
+
 # --------------------------------------------------------------------- #
 # SwiGLU MLP
 # --------------------------------------------------------------------- #

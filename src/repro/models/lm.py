@@ -78,14 +78,23 @@ def param_specs(cfg: ModelConfig) -> dict:
 # --------------------------------------------------------------------- #
 
 
-def _run_position(cfg, pol, i, pp, h, positions, mode, cache_in, pos):
+def _run_position(cfg, pol, i, pp, h, positions, mode, cache_in, pos, paged=None):
     """One layer (mixer + ffn).  cache_in: per-position cache pytree or None.
+    ``paged``: None (contiguous cache) or ``(block_tables, block_size)`` —
+    decode-mode attention then reads/writes K/V through the block table
+    (non-attention state is per-slot in both layouts).
     Returns (h, cache_out, aux)."""
     aux = jnp.zeros((), f32)
     x = L.rmsnorm(h, pp["mixer_norm"], cfg.norm_eps)
     cache_out = None
     if cfg.mixer_kind(i) == "attn":
-        if mode == "decode":
+        if mode == "decode" and paged is not None:
+            tables, bs = paged
+            o, k_c, v_c = L.attn_decode_paged(
+                cfg, pol, pp["attn"], x, cache_in["k"], cache_in["v"], pos, tables, bs
+            )
+            cache_out = {"k": k_c, "v": v_c}
+        elif mode == "decode":
             o, k_c, v_c = L.attn_decode(cfg, pol, pp["attn"], x, cache_in["k"], cache_in["v"], pos)
             cache_out = {"k": k_c, "v": v_c}
         elif mode == "prefill":
@@ -122,8 +131,10 @@ def _run_position(cfg, pol, i, pp, h, positions, mode, cache_in, pos):
     return h + o, cache_out, aux
 
 
-def _run_blocks(cfg, pol, params, h, positions, mode="train", cache=None, pos=0):
+def _run_blocks(cfg, pol, params, h, positions, mode="train", cache=None, pos=0, paged=None):
     """Scan over blocks.  cache: stacked pytree (n_blocks leading) or None.
+    ``paged``: see ``_run_position`` (the block table is shared across
+    layers, so it rides in as a closure constant, not a scanned leaf).
     Returns (h, new_cache, aux_total)."""
     period = cfg.scan_period
 
@@ -134,7 +145,7 @@ def _run_blocks(cfg, pol, params, h, positions, mode="train", cache=None, pos=0)
         for j in range(period):
             c_in = cache_blk.get(f"pos{j}") if cache_blk else None
             hh, c_out, aux = _run_position(
-                cfg, pol, j, bp[f"pos{j}"], hh, positions, mode, c_in, pos
+                cfg, pol, j, bp[f"pos{j}"], hh, positions, mode, c_in, pos, paged
             )
             if c_out is not None:
                 new_cache[f"pos{j}"] = c_out
@@ -228,6 +239,66 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16,
     return blk
 
 
+def init_paged_cache(cfg: ModelConfig, n_pool_blocks: int, block_size: int, n_slots: int, dtype=jnp.bfloat16):
+    """Paged decode cache: attention K/V live in a shared block pool
+    ``(n_layer_blocks, n_pool_blocks, block_size, kv, hd)`` indexed through
+    per-request block tables; SSM/conv state has no sequence axis to page,
+    so those leaves keep the per-slot ``(n_layer_blocks, n_slots, ...)``
+    layout of ``init_cache``.  The caller reserves one pool index as the
+    trash block that unallocated table entries point at."""
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    h, hdm, g, ds, w = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state, cfg.conv_width
+
+    def mk(shape, dt):
+        return jnp.zeros((cfg.n_blocks,) + shape, dt)
+
+    blk = {}
+    for j in range(cfg.scan_period):
+        if cfg.mixer_kind(j) == "attn":
+            blk[f"pos{j}"] = {
+                "k": mk((n_pool_blocks, block_size, kv, hd), dtype),
+                "v": mk((n_pool_blocks, block_size, kv, hd), dtype),
+            }
+        else:
+            blk[f"pos{j}"] = {
+                "conv": tuple(
+                    mk((n_slots, w - 1, c), dtype)
+                    for c in (cfg.d_inner, g * ds, g * ds)
+                ),
+                "ssm": mk((n_slots, h, hdm, ds), f32),
+            }
+    return blk
+
+
+def paged_scatter_prefill(cfg: ModelConfig, cache, row_cache, block_ids, slots, block_size: int):
+    """Scatter a ``g``-row contiguous prefill cache into a paged cache.
+
+    ``row_cache`` comes straight from ``prefill`` with ``cache_len`` a
+    block multiple: attention leaves ``(n_layers, g, n_max_blocks * bs,
+    kv, hd)`` are re-chunked to ``(n_layers, g, n_max_blocks, bs, ...)``
+    and scattered to pool blocks ``block_ids[r, i]`` (``(g,
+    n_max_blocks)`` int32; entries past a row's allocation point at the
+    trash block, so short prompts never touch live pool blocks).
+    Per-slot (SSM/conv) leaves scatter by ``slots`` exactly like the
+    contiguous admit path."""
+    out = {}
+    for key, sub in cache.items():
+        rsub = row_cache[key]
+        if "k" in sub:  # attention: pooled K/V
+
+            def put(pool, rows):
+                n_l, g, s_row = rows.shape[0], rows.shape[1], rows.shape[2]
+                rows = rows.reshape(n_l, g, s_row // block_size, block_size, *rows.shape[3:])
+                return pool.at[:, block_ids].set(rows.astype(pool.dtype))
+
+            out[key] = {"k": put(sub["k"], rsub["k"]), "v": put(sub["v"], rsub["v"])}
+        else:  # per-slot state: same scatter as the contiguous path
+            out[key] = jax.tree.map(
+                lambda c, rc: c.at[:, slots].set(rc.astype(c.dtype)), sub, rsub
+            )
+    return out
+
+
 def cache_pspecs(cfg: ModelConfig, pol: ShardingPolicy):
     """PartitionSpec tree matching init_cache structure."""
     blk = {}
@@ -259,14 +330,21 @@ def prefill(cfg: ModelConfig, pol: ShardingPolicy, params, batch, cache_len: int
     return L.head_apply(cfg, pol, params, h), cache
 
 
-def decode_step(cfg: ModelConfig, pol: ShardingPolicy, params, cache, tokens, pos):
+def decode_step(cfg: ModelConfig, pol: ShardingPolicy, params, cache, tokens, pos,
+                block_tables=None, block_size: int = 0):
     """One decode step.  tokens: (B,1) int32; pos: scalar int32 write
     position (attention sees [0..pos]) or (B,) per-row positions for
-    ragged batches.  Returns (logits (B,1,V), cache)."""
+    ragged batches.  With ``block_tables`` (``(B, n_max_blocks)`` int32,
+    requires per-row ``pos`` and a paged cache from ``init_paged_cache``)
+    attention K/V reads/writes go through the block table instead of a
+    contiguous per-row stripe.  Returns (logits (B,1,V), cache)."""
     h = L.embed_apply(cfg, pol, params["embed"], tokens)
     pos = jnp.asarray(pos, jnp.int32)
     positions = jnp.broadcast_to(pos[:, None] if pos.ndim == 1 else pos, tokens.shape)
-    h, cache, _ = _run_blocks(cfg, pol, params, h, positions, mode="decode", cache=cache, pos=pos)
+    paged = None if block_tables is None else (block_tables, block_size)
+    h, cache, _ = _run_blocks(
+        cfg, pol, params, h, positions, mode="decode", cache=cache, pos=pos, paged=paged
+    )
     h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
     return L.head_apply(cfg, pol, params, h), cache
 

@@ -1,29 +1,48 @@
-"""RAG serving engine: continuous batching over a fixed pool of cache slots.
+"""RAG serving engine: continuous batching over a slot pool with a
+contiguous- or paged-KV cache.
 
 Request flow (paper Fig. 2/3 in serving form):
   query -> federated retrieval (core.retrieval / orchestrator)
         -> enclave re-rank -> prompt build -> slot prefill -> decode chunks
 
-Two serving modes share one cache layout:
+Two serving modes share the slot-state contract:
 
   * **Lock-step** (``step_batch``): drain the queue in fixed ``max_batch``
     chunks, one packed prefill + one fused decode ``while_loop`` per
     chunk.  Kept as the deterministic baseline the continuous path is
-    parity-tested (and benchmarked) against.
+    parity-tested (and benchmarked) against.  Always contiguous.
   * **Continuous** (``serve_stream`` / ``serve`` / ``serve_prompts``): a
-    fixed pool of ``max_batch`` cache slots.  Finished rows (EOS or
-    per-request budget)
-    retire and free their slot; the ``Scheduler`` admits queued requests
-    into free slots by prefilling just that row and scattering its cache
-    in, while the other slots keep decoding.  Decode runs in fused
-    chunks of at most ``sched_chunk`` steps (never past the smallest
-    remaining per-slot budget) between scheduler interventions, so one
-    long generation no longer stalls the batch and host sync stays off
-    the per-token path.  ``serve_stream`` yields each ``(rid, answer)``
-    at retire time and — fed by a thread-safe ``Scheduler`` — keeps
-    consuming submissions from a producer thread until the scheduler is
-    closed, so an upstream stage (federated collect for the next
-    micro-batch) can overlap decode.
+    fixed pool of ``max_batch`` decode slots.  Finished rows (EOS or
+    per-request budget) retire and free their slot; the ``Scheduler``
+    admits queued requests into free slots — bucketed into power-of-2
+    groups so ``k`` waiting requests cost ``O(log k)`` fused
+    prefill+scatter dispatches (``_admit_rows``) instead of ``k`` — while
+    the other slots keep decoding.  Decode runs in fused chunks of at
+    most ``sched_chunk`` steps between scheduler interventions with ONE
+    host sync per chunk.
+
+Cache layouts (``ServeConfig.paged`` selects; both bit-identical for the
+same admission order):
+
+  * **Contiguous** (default): every cache leaf is ``(n_layer_blocks, B,
+    cache_len, ...)`` — one ``max_prompt_len + max_new_tokens`` stripe
+    per slot.  Simple, but a short query pays worst-case HBM and
+    ``max_batch`` is pinned to physical stripes.
+  * **Paged** (``paged=True``): attention K/V live in one shared pool of
+    ``n_pool_blocks`` fixed-size token blocks — leaves ``(n_layer_blocks,
+    n_pool_blocks + 1, block_size, kv, hd)`` (the ``+1`` is a trash block
+    that unallocated table entries point at) — indexed through per-slot
+    block tables ``(B, cache_len_padded / block_size)``.  A
+    ``serving/kv_cache.BlockPool`` allocates blocks at admission
+    (``ceil(prompt_len / block_size)``), grows tables incrementally at
+    decode-chunk boundaries, and frees them at retire.  Admission is
+    memory-aware: a request is only popped while free blocks cover its
+    prompt + first decode token, so ``max_batch`` slots can exceed the
+    contiguous stripe count for short-prompt traffic at the same HBM; a
+    request that cannot get a block at a chunk boundary is force-retired
+    with what it already emitted (its neighbors are never corrupted).
+    Non-attention (SSM/conv) state has no sequence axis and stays
+    per-slot in both layouts.
 
 Both paths pack prompts left-aligned (PAD tail) and decode each row from
 its OWN cache position (per-row ``lengths``), so ragged batches never
@@ -40,19 +59,25 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.data.tokenizer import EOS, PAD, HashTokenizer
+from repro.data.tokenizer import EOS, PAD
 from repro.models import lm as LM
 from repro.runtime.sharding import ShardingPolicy
+from repro.serving.kv_cache import BlockPool, BlockTable, blocks_for
 from repro.serving.scheduler import Request, Scheduler
 
 
 @dataclasses.dataclass
 class ServeConfig:
-    max_batch: int = 8  # cache slots (continuous) / chunk size (lock-step)
+    max_batch: int = 8  # decode slots (continuous) / chunk size (lock-step)
     max_prompt_len: int = 512
     max_new_tokens: int = 16  # hard cap; per-request budgets clamp to this
     temperature: float = 0.0
     sched_chunk: int = 8  # max fused decode steps between scheduler runs
+    paged: bool = False  # paged KV cache (block pool) vs contiguous stripes
+    block_size: int = 32  # tokens per KV block (paged mode)
+    # pool size in blocks; None -> the HBM of max_batch contiguous stripes,
+    # so paged-vs-contiguous comparisons at the default are equal-memory
+    n_pool_blocks: int | None = None
 
 
 class ServeEngine:
@@ -60,9 +85,32 @@ class ServeEngine:
         self.cfg, self.pol, self.params, self.scfg = cfg, pol, params, scfg
         cache_len = scfg.max_prompt_len + scfg.max_new_tokens
         self._cache_len = cache_len
+        # paged geometry: the logical cache length rounds up to a block
+        # multiple so a block table addresses exactly the same number of
+        # key positions as a contiguous stripe (bit-parity needs equal
+        # lane counts through the masked softmax)
+        bs = scfg.block_size
+        self._blocks_per_slot = blocks_for(cache_len, bs)
+        self._cache_len_padded = self._blocks_per_slot * bs
+        if scfg.paged:
+            n_pool = (
+                scfg.n_pool_blocks
+                if scfg.n_pool_blocks is not None
+                else scfg.max_batch * self._blocks_per_slot
+            )
+            if n_pool < self._blocks_per_slot:
+                raise ValueError(
+                    f"n_pool_blocks={n_pool} cannot hold one max-size request "
+                    f"({self._blocks_per_slot} blocks of {bs})"
+                )
+            self._n_pool_blocks = n_pool
+            self._trash_block = n_pool  # extra pool index for masked writes
         t_cap = scfg.max_new_tokens
+        # admit-dispatch observability (bucketed admission benchmark)
+        self.admit_dispatches = 0
+        self.admit_rows_total = 0
 
-        def prefill_fn(params, tokens, lengths):
+        def prefill_fn(params, tokens, lengths, cache_len=cache_len):
             logits, cache = LM.prefill(cfg, pol, params, {"tokens": tokens}, cache_len=cache_len)
             # logits at each row's true last prompt position -> first token
             last = jnp.take_along_axis(logits, (lengths - 1)[:, None, None], axis=1)[:, 0, :]
@@ -94,68 +142,97 @@ class ServeEngine:
             t, _, _, _, out = jax.lax.while_loop(cond, body, state)
             return out, t
 
-        def admit_row(params, cache, cur, lengths, emitted, done, budget, out,
-                      row_tokens, slot, length, b_new):
-            """Prefill ONE request and scatter it into cache slot ``slot``
-            in a single fused call (every cache leaf is (n_blocks, B, ...)
-            so the slot axis is 1).  Fusing prefill + scatter keeps
-            admission at one dispatch per request."""
-            first, row_cache = prefill_fn(params, row_tokens, length[None])
-            first = first[0]
-            cache = jax.tree.map(lambda c, rc: c.at[:, slot].set(rc[:, 0]), cache, row_cache)
-            cur = cur.at[slot].set(first)
-            lengths = lengths.at[slot].set(length)
-            emitted = emitted.at[slot].set(1)
-            budget = budget.at[slot].set(b_new)
-            out = out.at[slot].set(jnp.zeros((t_cap + 1,), jnp.int32).at[0].set(first))
-            done = done.at[slot].set((first == EOS) | (b_new <= 1))
+        def admit_rows(params, cache, cur, lengths, emitted, done, budget, out,
+                       rows_tokens, slot_ids, row_lens, b_new, block_ids=None):
+            """Prefill ``g`` requests and scatter them into slots
+            ``slot_ids`` in a single fused call.  The bucketed admission
+            path dispatches waiting requests in power-of-2 groups, so the
+            jit trace count is bounded at log2(max_batch) group shapes and
+            ``k`` queued requests cost O(log k) dispatches, not k.
+            ``block_ids`` (paged mode): (g, blocks_per_slot) pool blocks
+            per row, trash-padded past each row's allocation."""
+            first, row_cache = prefill_fn(
+                params, rows_tokens, row_lens,
+                cache_len=self._cache_len_padded if scfg.paged else cache_len,
+            )
+            if scfg.paged:
+                cache = LM.paged_scatter_prefill(
+                    cfg, cache, row_cache, block_ids, slot_ids, bs
+                )
+            else:
+                cache = jax.tree.map(
+                    lambda c, rc: c.at[:, slot_ids].set(rc), cache, row_cache
+                )
+            g = rows_tokens.shape[0]
+            cur = cur.at[slot_ids].set(first)
+            lengths = lengths.at[slot_ids].set(row_lens)
+            emitted = emitted.at[slot_ids].set(1)
+            budget = budget.at[slot_ids].set(b_new)
+            out = out.at[slot_ids].set(
+                jnp.zeros((g, t_cap + 1), jnp.int32).at[:, 0].set(first)
+            )
+            done = done.at[slot_ids].set((first == EOS) | (b_new <= 1))
             return cache, cur, lengths, emitted, done, budget, out
 
-        def decode_chunk(params, cache, cur, lengths, emitted, done, budget, out, n_steps):
-            """Fused decode of up to ``n_steps`` tokens across all slots.
-            Per-slot write offsets (``emitted``) make retire/admit cheap: a
-            slot's output row is always its own [0, emitted) prefix.  The
-            inner loop writes a dense (B, chunk) buffer by step index —
-            exactly the lock-step hot loop — and the ragged merge into the
-            per-slot offsets happens ONCE per chunk, so continuous
-            batching adds no per-token bookkeeping to the decode path."""
-            b = scfg.max_batch
-            rows = jnp.arange(b)
-            chunk = jnp.zeros((b, scfg.sched_chunk), jnp.int32)
-            emitted0 = emitted
+        def make_decode_chunk(paged: bool):
+            def decode_chunk(params, cache, cur, lengths, emitted, done, budget, out,
+                             n_steps, tables=None):
+                """Fused decode of up to ``n_steps`` tokens across all
+                slots.  Per-slot write offsets (``emitted``) make
+                retire/admit cheap: a slot's output row is always its own
+                [0, emitted) prefix.  The inner loop writes a dense
+                (B, chunk) buffer by step index — exactly the lock-step
+                hot loop — and the ragged merge into the per-slot offsets
+                happens ONCE per chunk, so continuous batching adds no
+                per-token bookkeeping to the decode path.  In paged mode
+                every K/V read/write goes through ``tables``; the host
+                guarantees each live row's table covers the chunk before
+                dispatch (rows it could not grow arrive force-done)."""
+                b = scfg.max_batch
+                rows = jnp.arange(b)
+                chunk = jnp.zeros((b, scfg.sched_chunk), jnp.int32)
+                emitted0 = emitted
 
-            def cond(st):
-                t = st[0]
-                return (t < n_steps) & ~jnp.all(st[4])
+                def cond(st):
+                    t = st[0]
+                    return (t < n_steps) & ~jnp.all(st[4])
 
-            def body(st):
-                t, cache, cur, emitted, done, chunk = st
-                logits, cache = LM.decode_step(
-                    cfg, pol, params, cache, cur[:, None], lengths + emitted - 1
-                )
-                nxt = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)
-                nxt = jnp.where(done, PAD, nxt)
-                chunk = chunk.at[:, t].set(nxt)
-                emitted = emitted + (~done)
-                done = done | (nxt == EOS) | (emitted >= budget)
-                return (t + 1, cache, nxt, emitted, done, chunk)
+                def body(st):
+                    t, cache, cur, emitted, done, chunk = st
+                    if paged:
+                        logits, cache = LM.decode_step(
+                            cfg, pol, params, cache, cur[:, None],
+                            lengths + emitted - 1, block_tables=tables, block_size=bs,
+                        )
+                    else:
+                        logits, cache = LM.decode_step(
+                            cfg, pol, params, cache, cur[:, None], lengths + emitted - 1
+                        )
+                    nxt = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)
+                    nxt = jnp.where(done, PAD, nxt)
+                    chunk = chunk.at[:, t].set(nxt)
+                    emitted = emitted + (~done)
+                    done = done | (nxt == EOS) | (emitted >= budget)
+                    return (t + 1, cache, nxt, emitted, done, chunk)
 
-            st = (jnp.int32(0), cache, cur, emitted, done, chunk)
-            _, cache, cur, emitted, done, chunk = jax.lax.while_loop(cond, body, st)
-            # ragged merge: row i's fresh tokens are chunk[i, :emitted-emitted0]
-            # landing at out[i, emitted0:emitted]; invalid lanes are clipped
-            # into the spare (t_cap) column, which holds no answer tokens
-            j = jnp.arange(scfg.sched_chunk)
-            idx = jnp.minimum(emitted0[:, None] + j[None, :], t_cap)
-            valid = j[None, :] < (emitted - emitted0)[:, None]
-            keep = out[rows[:, None], idx]
-            out = out.at[rows[:, None], idx].set(jnp.where(valid, chunk, keep))
-            return cache, cur, emitted, done, out
+                st = (jnp.int32(0), cache, cur, emitted, done, chunk)
+                _, cache, cur, emitted, done, chunk = jax.lax.while_loop(cond, body, st)
+                # ragged merge: row i's fresh tokens are chunk[i, :emitted-emitted0]
+                # landing at out[i, emitted0:emitted]; invalid lanes are clipped
+                # into the spare (t_cap) column, which holds no answer tokens
+                j = jnp.arange(scfg.sched_chunk)
+                idx = jnp.minimum(emitted0[:, None] + j[None, :], t_cap)
+                valid = j[None, :] < (emitted - emitted0)[:, None]
+                keep = out[rows[:, None], idx]
+                out = out.at[rows[:, None], idx].set(jnp.where(valid, chunk, keep))
+                return cache, cur, emitted, done, out
+
+            return decode_chunk
 
         self._prefill = jax.jit(prefill_fn)
         self._decode_loop = jax.jit(decode_loop)
-        self._admit_row = jax.jit(admit_row)
-        self._decode_chunk = jax.jit(decode_chunk)
+        self._admit_rows = jax.jit(admit_rows)
+        self._decode_chunk = jax.jit(make_decode_chunk(scfg.paged))
         self.queue: list[np.ndarray] = []
 
     def submit(self, prompt_tokens: np.ndarray):
@@ -170,6 +247,23 @@ class ServeEngine:
             p = p[-width:]
             out[i, : len(p)] = p
         return out
+
+    def _init_serve_cache(self):
+        """Device cache for the continuous path in the configured layout."""
+        dtype = jnp.dtype(self.cfg.dtype)
+        if self.scfg.paged:
+            return LM.init_paged_cache(
+                self.cfg, self._n_pool_blocks + 1, self.scfg.block_size,
+                self.scfg.max_batch, dtype=dtype,
+            )
+        return LM.init_cache(self.cfg, self.scfg.max_batch, self._cache_len, dtype=dtype)
+
+    def cache_nbytes(self) -> int:
+        """HBM held by the continuous-path decode cache (both layouts),
+        computed from abstract shapes — the denominator of every
+        paged-vs-contiguous capacity comparison."""
+        shapes = jax.eval_shape(self._init_serve_cache)
+        return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(shapes))
 
     # ------------------------------------------------------------------ #
     # lock-step path (deterministic baseline)
@@ -214,7 +308,14 @@ class ServeEngine:
         queue is empty and every slot has retired, closed or not."""
         scfg = self.scfg
         B, t_cap, width = scfg.max_batch, scfg.max_new_tokens, scfg.max_prompt_len
-        cache = LM.init_cache(self.cfg, B, self._cache_len, dtype=jnp.dtype(self.cfg.dtype))
+        bs, paged = scfg.block_size, scfg.paged
+        cache = self._init_serve_cache()
+        if paged:
+            pool = BlockPool(self._n_pool_blocks, bs)
+            row_tables = [BlockTable(pool) for _ in range(B)]
+            # every unallocated (or free-slot) table entry points at the
+            # trash block, so masked writes can never land in live blocks
+            tables_h = np.full((B, self._blocks_per_slot), self._trash_block, np.int32)
         cur = jnp.zeros((B,), jnp.int32)
         lengths = jnp.ones((B,), jnp.int32)
         emitted = jnp.ones((B,), jnp.int32)
@@ -222,37 +323,84 @@ class ServeEngine:
         budget = jnp.ones((B,), jnp.int32)
         out = jnp.zeros((B, t_cap + 1), jnp.int32)
         slots: list[Request | None] = [None] * B
-        # host mirrors of emitted/done/budget keep the loop at ONE device
-        # sync per chunk; a just-admitted row's done flag is only known
-        # on-device (first token may be EOS), so mirror it as live — the
-        # worst case is one no-op chunk dispatch before the readback
+        # host mirrors of emitted/done/budget/length keep the loop at ONE
+        # device sync per chunk; a just-admitted row's done flag is only
+        # known on-device (first token may be EOS), so mirror it as live —
+        # the worst case is one no-op chunk dispatch before the readback
         em_h = np.ones((B,), np.int64)
         dn_h = np.ones((B,), bool)
         bu_h = np.ones((B,), np.int64)
+        ln_h = np.ones((B,), np.int64)
+        oom_slots: set[int] = set()  # force-done by pool OOM, not yet retired
+
+        def admit_gate(req: Request) -> bool:
+            # memory-aware admission: pop only if free blocks cover the
+            # prompt plus the first decode token (FIFO order preserved —
+            # a too-big head request blocks the line until retires free
+            # blocks rather than being skipped, so paged and contiguous
+            # admission orders are identical)
+            n_tok = min(len(req.tokens), width) + 1
+            return pool.can_alloc(blocks_for(n_tok, bs))
 
         while True:
-            # admit queued requests into free slots (one fused prefill each)
+            # ---- admit queued requests into free slots (bucketed) ----
+            admits: list[tuple[int, np.ndarray, int, int]] = []
             for slot in range(B):
                 if slots[slot] is not None:
                     continue
-                req = scheduler.pop_ready()
+                req = scheduler.pop_ready(admit_if=admit_gate if paged else None)
                 if req is None:
                     break
                 p = req.tokens[-width:]
-                row = np.zeros((1, width), np.int32)
-                row[0, : len(p)] = p
-                length = np.int32(len(p))
+                length = len(p)
                 # prefill always emits one token, so the effective budget
                 # floor is 1; None means "engine cap" (0 does not)
                 b_new = t_cap if req.max_new_tokens is None else req.max_new_tokens
                 b_new = max(1, min(int(b_new), t_cap))
-                cache, cur, lengths, emitted, done, budget, out = self._admit_row(
-                    self.params, cache, cur, lengths, emitted, done, budget, out,
-                    jnp.asarray(row), jnp.int32(slot), jnp.asarray(length), jnp.int32(b_new),
-                )
+                if paged:
+                    tb = row_tables[slot]
+                    # allocate exactly what admit_gate checked — prompt
+                    # plus the first decode token.  Allocating less (just
+                    # the prompt) would let a later admit in this same
+                    # pass consume the unreserved +1 block and force-
+                    # truncate this request to its prefill token
+                    if not tb.extend_to(length + 1):
+                        # the gate just checked this exact amount and the
+                        # consumer is single-threaded, so it cannot fail
+                        raise RuntimeError("paged admit raced the block pool")
+                    tables_h[slot, :] = self._trash_block
+                    tables_h[slot, : tb.n_blocks] = tb.ids
+                admits.append((slot, p, length, b_new))
                 slots[slot] = req
-                em_h[slot], dn_h[slot], bu_h[slot] = 1, b_new <= 1, b_new
+                em_h[slot], dn_h[slot] = 1, b_new <= 1
+                bu_h[slot], ln_h[slot] = b_new, length
+            while admits:
+                # power-of-2 buckets: k waiting requests prefill in
+                # O(log k) fused dispatches, each a jit trace shared by
+                # every future group of that size
+                g = 1 << (len(admits).bit_length() - 1)
+                group, admits = admits[:g], admits[g:]
+                rows = np.zeros((g, width), np.int32)
+                for i, (_, p, length, _) in enumerate(group):
+                    rows[i, :length] = p
+                slot_ids = np.array([s for s, _, _, _ in group], np.int32)
+                row_lens = np.array([ln for _, _, ln, _ in group], np.int32)
+                b_news = np.array([bn for _, _, _, bn in group], np.int32)
+                args = (
+                    self.params, cache, cur, lengths, emitted, done, budget, out,
+                    jnp.asarray(rows), jnp.asarray(slot_ids), jnp.asarray(row_lens),
+                    jnp.asarray(b_news),
+                )
+                if paged:
+                    args += (jnp.asarray(tables_h[slot_ids]),)
+                cache, cur, lengths, emitted, done, budget, out = self._admit_rows(*args)
+                self.admit_dispatches += 1
+                self.admit_rows_total += g
             active = [i for i in range(B) if slots[i] is not None]
+            scheduler.record_occupancy(
+                free_slots=B - len(active),
+                free_blocks=pool.free_blocks if paged else None,
+            )
             if not active:
                 if drain or scheduler.closed:
                     if scheduler.has_pending:
@@ -269,10 +417,41 @@ class ServeEngine:
                 # the largest live budget but at most sched_chunk steps, so
                 # freed slots wait at most sched_chunk for the next admit
                 n = max(1, min(max(remaining), scfg.sched_chunk))
-                cache, cur, emitted, done, out = self._decode_chunk(
-                    self.params, cache, cur, lengths, emitted, done, budget, out,
-                    jnp.int32(n),
-                )
+                if paged:
+                    # grow each live row's table to cover this chunk's
+                    # writes; a row the pool cannot grow is force-done on
+                    # device and retires at the chunk-end readback with
+                    # whatever it already emitted (its blocks stay valid
+                    # until then, so neighbors never see its failure)
+                    oom = np.zeros((B,), bool)
+                    for i in active:
+                        if dn_h[i]:
+                            continue
+                        need_tok = min(
+                            ln_h[i] + min(em_h[i] + n, bu_h[i]) - 1,
+                            self._cache_len_padded,
+                        )
+                        tb = row_tables[i]
+                        if tb.n_tokens_capacity >= need_tok:
+                            continue
+                        n0 = tb.n_blocks
+                        if tb.extend_to(int(need_tok)):
+                            tables_h[i, n0 : tb.n_blocks] = tb.ids[n0:]
+                        else:
+                            oom[i] = True
+                            dn_h[i] = True
+                            oom_slots.add(i)
+                    if oom.any():
+                        done = jnp.logical_or(done, jnp.asarray(oom))
+                    cache, cur, emitted, done, out = self._decode_chunk(
+                        self.params, cache, cur, lengths, emitted, done, budget, out,
+                        jnp.int32(n), jnp.asarray(tables_h),
+                    )
+                else:
+                    cache, cur, emitted, done, out = self._decode_chunk(
+                        self.params, cache, cur, lengths, emitted, done, budget, out,
+                        jnp.int32(n),
+                    )
             # np.array (not asarray): device views are read-only and the
             # mirrors are written at the next admit
             em_h, dn_h = np.array(emitted), np.array(done)
@@ -283,8 +462,12 @@ class ServeEngine:
                 for i in retired:
                     req = slots[i]
                     ans = out_h[i, : int(em_h[i])].copy()
-                    scheduler.finish(req, ans)
+                    scheduler.finish(req, ans, truncated=i in oom_slots)
+                    oom_slots.discard(i)
                     slots[i] = None  # retire: slot free for the next admit
+                    if paged:
+                        row_tables[i].release()
+                        tables_h[i, :] = self._trash_block
                     yield req.rid, ans
 
     def serve_prompts(

@@ -1,0 +1,138 @@
+"""Paged KV-cache block pool: host-side memory manager for the serving engine.
+
+The contiguous engine layout reserves one ``max_prompt_len +
+max_new_tokens`` cache stripe per slot, so a 12-token query pays the same
+HBM as the longest allowed prompt and the admitted batch size is pinned to
+the number of physical stripes.  The paged layout chops the cache into
+fixed-size **token blocks** (``block_size`` positions each) held in one
+shared pool; each request owns an ordered **block table** mapping its
+logical positions ``[i * block_size, (i + 1) * block_size)`` to pool block
+``table[i]``.  Admission allocates just enough blocks to cover the prompt,
+decode grows the table one block at a time at chunk boundaries, and retire
+returns every block to the pool — so concurrency is bounded by *actual*
+tokens resident, not by worst-case stripes.
+
+This module is deliberately host-only and jax-free: the pool hands out
+integer block ids; the engine owns the device arrays those ids index
+(``models/lm.init_paged_cache`` leaves shaped ``(n_layers, n_pool,
+block_size, ...)``) and the device copy of the block tables.
+
+Contracts:
+  * ``alloc(n)`` is all-or-nothing: it returns ``n`` block ids or raises
+    ``BlockPoolOOM`` without allocating anything (``try_alloc`` returns
+    ``None`` instead) — a half-admitted request can never leak blocks.
+  * ``free`` rejects double-frees and foreign ids loudly: a double-free
+    means two requests believe they own the same block, which is cache
+    corruption, not a recoverable condition.
+  * Allocation order is deterministic (LIFO free list) so paged serving
+    replays are reproducible run to run.
+"""
+from __future__ import annotations
+
+
+class BlockPoolOOM(RuntimeError):
+    """Raised by ``alloc`` when the pool cannot satisfy a request."""
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Number of blocks needed to hold ``n_tokens`` positions (>= 1)."""
+    return max(1, -(-int(n_tokens) // block_size))
+
+
+class BlockPool:
+    """Fixed pool of ``n_blocks`` token blocks with a LIFO free list."""
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks <= 0 or block_size <= 0:
+            raise ValueError(f"need positive pool dims, got {n_blocks}x{block_size}")
+        self.n_blocks = int(n_blocks)
+        self.block_size = int(block_size)
+        # LIFO: block 0 is handed out first, and a just-freed block is the
+        # next one reused (cache-friendly and deterministic)
+        self._free = list(range(self.n_blocks - 1, -1, -1))
+        self._owned: set[int] = set()
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return len(self._owned)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        """Take ``n`` blocks; all-or-nothing (raises BlockPoolOOM)."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            raise BlockPoolOOM(f"need {n} blocks, {len(self._free)} free")
+        ids = [self._free.pop() for _ in range(n)]
+        self._owned.update(ids)
+        return ids
+
+    def try_alloc(self, n: int) -> list[int] | None:
+        """Like ``alloc`` but returns None on OOM (the chunk-boundary grow
+        path treats OOM as an early-retire signal, not an error)."""
+        return self.alloc(n) if self.can_alloc(n) else None
+
+    def free(self, ids) -> None:
+        """Return blocks to the pool.  Double-free / foreign ids raise:
+        either means two requests think they own the same block."""
+        ids = list(ids)
+        bad = [b for b in ids if b not in self._owned]
+        if bad:
+            raise ValueError(f"free of unowned block(s) {bad}")
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"duplicate ids in free: {ids}")
+        for b in ids:
+            self._owned.remove(b)
+        # reversed: freeing [a, b] then allocating 2 returns [a, b] again
+        self._free.extend(reversed(ids))
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (
+            f"BlockPool(n_blocks={self.n_blocks}, block_size={self.block_size}, "
+            f"free={self.free_blocks})"
+        )
+
+
+class BlockTable:
+    """Per-request ordered list of pool block ids.
+
+    ``ids[i]`` backs logical token positions ``[i*bs, (i+1)*bs)``.  The
+    table grows via ``extend`` at decode-chunk boundaries and releases
+    everything via ``release`` at retire; ``n_tokens_capacity`` is the
+    highest position count the table can currently hold.
+    """
+
+    def __init__(self, pool: BlockPool):
+        self.pool = pool
+        self.ids: list[int] = []
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.ids)
+
+    @property
+    def n_tokens_capacity(self) -> int:
+        return len(self.ids) * self.pool.block_size
+
+    def extend_to(self, n_tokens: int) -> bool:
+        """Grow to cover ``n_tokens`` positions.  Returns False on OOM
+        (nothing allocated) — the caller's early-retire signal."""
+        need = blocks_for(n_tokens, self.pool.block_size) - len(self.ids)
+        if need <= 0:
+            return True
+        got = self.pool.try_alloc(need)
+        if got is None:
+            return False
+        self.ids.extend(got)
+        return True
+
+    def release(self) -> None:
+        if self.ids:
+            self.pool.free(self.ids)
+            self.ids = []

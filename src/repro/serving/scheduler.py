@@ -55,6 +55,7 @@ class Request:
     finished_at: float | None = None
     answer: np.ndarray | None = None
     status: str = "queued"  # queued | active | done | expired
+    truncated: bool = False  # done, but cut short by KV-pool OOM
     tag: Any = None  # caller-side routing key (e.g. query index)
 
     @property
@@ -95,6 +96,10 @@ class Scheduler:
         self._cond = threading.Condition(self._lock)
         self._closed = False
         self.results: dict[int, Request] = {}
+        # occupancy gauges (engine-reported): last + extremes, so memory
+        # headroom falls out of latency_stats() alongside the percentiles
+        self._peak_backlog = 0
+        self._occupancy: dict[str, int] = {}
 
     def submit(
         self,
@@ -120,6 +125,7 @@ class Scheduler:
             req.rid = self._next_rid
             self._next_rid += 1
             self._queue.append(req)
+            self._peak_backlog = max(self._peak_backlog, len(self._queue))
             self._cond.notify_all()
         return req.rid
 
@@ -202,25 +208,41 @@ class Scheduler:
                 lambda: self._next_rid - len(self.results) < n, timeout=timeout
             )
 
-    def pop_ready(self) -> Request | None:
-        """Next admissible request (FIFO); expires overdue ones in passing."""
+    def pop_ready(self, admit_if=None) -> Request | None:
+        """Next admissible request (FIFO); expires overdue ones in passing.
+
+        ``admit_if(req) -> bool`` is the engine's memory-aware admission
+        gate (paged KV: does the pool have blocks for this prompt?).  A
+        head request the gate rejects stays AT THE HEAD and ``None`` is
+        returned: strict FIFO is preserved — big requests wait for blocks
+        rather than being overtaken, so admission order (and therefore
+        paged-vs-contiguous bit-parity) never depends on pool pressure."""
         with self._cond:
             while self._queue:
-                req = self._queue.popleft()
+                req = self._queue[0]
                 now = time.monotonic()
                 if req.deadline_s is not None and now - req.submitted_at > req.deadline_s:
+                    self._queue.popleft()
                     req.status = "expired"
                     req.finished_at = now
                     self.results[req.rid] = req
                     self._cond.notify_all()  # wake drain() waiters
                     continue
+                if admit_if is not None and not admit_if(req):
+                    return None  # head stays queued until resources free up
+                self._queue.popleft()
                 req.status = "active"
                 req.started_at = now
                 return req
             return None
 
-    def finish(self, req: Request, answer: np.ndarray):
+    def finish(self, req: Request, answer: np.ndarray, truncated: bool = False):
+        """``truncated=True`` marks a request the engine force-retired on
+        KV-pool OOM: terminal and answered, but the answer is a prefix of
+        what the budget allowed — callers watching degradation under
+        memory pressure read it off the request / ``n_truncated``."""
         req.status = "done"
+        req.truncated = truncated
         req.finished_at = time.monotonic()
         req.answer = np.asarray(answer)
         with self._cond:
@@ -228,19 +250,42 @@ class Scheduler:
             self._cond.notify_all()  # wake drain() waiters
 
     # ---- observability ----
+    def record_occupancy(self, *, free_slots: int | None = None, free_blocks: int | None = None):
+        """Engine-side memory gauges, sampled once per scheduler pass.
+
+        ``free_slots``: open decode slots right now; ``free_blocks``: free
+        KV blocks (paged engines only — contiguous engines pass None).
+        Keeps the last sample plus the running minimum of each, so "how
+        close did serving get to the memory wall" (peak concurrency =
+        ``max_batch - min_free_slots``, block headroom =
+        ``min_free_blocks``) is answerable after the fact."""
+        with self._lock:
+            for key, val in (("free_slots", free_slots), ("free_blocks", free_blocks)):
+                if val is None:
+                    continue
+                self._occupancy[key] = int(val)
+                low = f"min_{key}"
+                self._occupancy[low] = min(self._occupancy.get(low, int(val)), int(val))
+
     def latency_stats(self) -> dict:
-        """p50/p95/mean submit->finish latency over completed requests."""
+        """p50/p95/mean submit->finish latency over completed requests,
+        plus occupancy gauges (peak backlog; free/min-free slots and KV
+        blocks when an engine reported them via ``record_occupancy``)."""
         with self._lock:
             done = [r for r in self.results.values() if r.status == "done"]
             n_expired = sum(1 for r in self.results.values() if r.status == "expired")
+            n_truncated = sum(1 for r in done if r.truncated)
+            gauges = {"peak_backlog": self._peak_backlog, **self._occupancy}
         lats = sorted(r.latency_s for r in done)
         if not lats:
-            return {"n_done": 0}
+            return {"n_done": 0, **gauges}
         arr = np.asarray(lats)
         return {
             "n_done": len(lats),
             "n_expired": n_expired,
+            "n_truncated": n_truncated,
             "p50_s": float(np.percentile(arr, 50)),
             "p95_s": float(np.percentile(arr, 95)),
             "mean_s": float(arr.mean()),
+            **gauges,
         }

@@ -3,6 +3,7 @@
 Next token is always ``(cur + 1) % VOCAB``, so the exact answer of every
 request — including where EOS lands — is computable in closed form.
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -29,13 +30,24 @@ class FakeLM:
         return FakeLM._logits(tokens), FakeLM.init_cache(cfg, tokens.shape[0], cache_len)
 
     @staticmethod
-    def decode_step(cfg, pol, params, cache, tokens, pos):
+    def decode_step(cfg, pol, params, cache, tokens, pos, block_tables=None, block_size=0):
         return FakeLM._logits(tokens), cache
 
     @staticmethod
     def init_cache(cfg, batch, cache_len, dtype=jnp.float32, abstract=False):
         # same (n_blocks, B, ...) leaf layout contract as the real cache
         return {"dummy": jnp.zeros((1, batch, 1), jnp.float32)}
+
+    @staticmethod
+    def init_paged_cache(cfg, n_pool_blocks, block_size, n_slots, dtype=jnp.float32):
+        # stateless model: the paged cache carries no information either,
+        # but keeps the per-slot leaf contract so slot scatters typecheck
+        return {"dummy": jnp.zeros((1, n_slots, 1), jnp.float32)}
+
+    @staticmethod
+    def paged_scatter_prefill(cfg, cache, row_cache, block_ids, slots, block_size):
+        del block_ids, block_size  # no K/V to page in the fake model
+        return jax.tree.map(lambda c, rc: c.at[:, slots].set(rc), cache, row_cache)
 
 
 def expected_answer(end_token: int, budget: int) -> list[int]:
@@ -55,9 +67,10 @@ def prompt_ending(end_token: int, length: int = 5) -> np.ndarray:
     return p
 
 
-def make_fake_engine(monkeypatch, max_batch=2, max_new_tokens=6, sched_chunk=3):
+def make_fake_engine(monkeypatch, max_batch=2, max_new_tokens=6, sched_chunk=3, **scfg_kw):
     """ServeEngine over the FakeLM (monkeypatched in place of the real
-    model module) with the qwen3 smoke config's 256-token vocab."""
+    model module) with the qwen3 smoke config's 256-token vocab.
+    ``scfg_kw`` passes through to ServeConfig (paged/block_size/...)."""
     import repro.serving.engine as engine_mod
     from repro.configs import get_config, smoke_config
     from repro.serving.engine import ServeConfig, ServeEngine
@@ -69,6 +82,6 @@ def make_fake_engine(monkeypatch, max_batch=2, max_new_tokens=6, sched_chunk=3):
         cfg, POL, {},
         ServeConfig(
             max_batch=max_batch, max_prompt_len=8,
-            max_new_tokens=max_new_tokens, sched_chunk=sched_chunk,
+            max_new_tokens=max_new_tokens, sched_chunk=sched_chunk, **scfg_kw,
         ),
     )

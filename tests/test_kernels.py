@@ -80,6 +80,56 @@ def test_decode_attention_sweep(b, s, h, kv, dh, bs):
     assert_allclose(np.asarray(o_p), np.asarray(o_r), rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize(
+    "b,h,kv,dh,bs,n_t", [(2, 8, 4, 32, 16, 4), (3, 4, 4, 16, 32, 2), (1, 16, 2, 64, 8, 8)]
+)
+def test_paged_decode_attention_sweep(b, h, kv, dh, bs, n_t):
+    """Paged flash-decode: block-table gather through scalar-prefetch
+    index maps must match (a) the gather reference and (b) the dense
+    kernel run on each row's materialized contiguous view."""
+    from repro.kernels.decode_attention.kernel import paged_decode_attention_pallas
+    from repro.kernels.decode_attention.ref import paged_decode_attention_ref
+
+    n_pool = b * n_t + 1  # +1 pool block left dangling (never referenced)
+    kk = jax.random.PRNGKey(b * h + n_t)
+    q = jax.random.normal(kk, (b, h, dh))
+    kp = jax.random.normal(jax.random.fold_in(kk, 1), (n_pool, bs, kv, dh))
+    vp = jax.random.normal(jax.random.fold_in(kk, 2), (n_pool, bs, kv, dh))
+    rng = np.random.default_rng(0)
+    # disjoint, shuffled tables: physical order != logical order
+    tables = jnp.asarray(rng.permutation(n_pool - 1)[: b * n_t].reshape(b, n_t), jnp.int32)
+    lens = jnp.asarray(rng.integers(1, n_t * bs + 1, size=b), jnp.int32)
+    o_p = paged_decode_attention_pallas(q, kp, vp, tables, lens)
+    o_r = paged_decode_attention_ref(q, kp, vp, tables, lens)
+    assert_allclose(np.asarray(o_p), np.asarray(o_r, np.float32), rtol=2e-5, atol=2e-5)
+    # dense equivalence: gather each row's blocks into a contiguous cache
+    kc = np.asarray(kp)[np.asarray(tables)].reshape(b, n_t * bs, kv, dh)
+    vc = np.asarray(vp)[np.asarray(tables)].reshape(b, n_t * bs, kv, dh)
+    o_d = decode_attention_ref(q, jnp.asarray(kc), jnp.asarray(vc), lens)
+    assert_allclose(np.asarray(o_r), np.asarray(o_d, np.float32), rtol=0, atol=0)
+
+
+def test_paged_decode_trash_blocks_never_leak():
+    """Lanes past ``lengths`` (including whole table entries that point at
+    a trash block full of garbage) must contribute exactly nothing."""
+    from repro.kernels.decode_attention.ref import paged_decode_attention_ref
+
+    b, h, kv, dh, bs, n_t = 2, 4, 2, 16, 8, 3
+    kk = jax.random.PRNGKey(3)
+    q = jax.random.normal(kk, (b, h, dh))
+    kp = jax.random.normal(jax.random.fold_in(kk, 1), (7, bs, kv, dh))
+    vp = jax.random.normal(jax.random.fold_in(kk, 2), (7, bs, kv, dh))
+    trash = 6
+    tables = jnp.asarray([[0, 1, trash], [2, 3, trash]], jnp.int32)
+    lens = jnp.asarray([2 * bs, bs + 3], jnp.int32)
+    base = paged_decode_attention_ref(q, kp, vp, tables, lens)
+    # poison the trash block and every masked lane of a live block
+    kp2 = kp.at[trash].set(1e4).at[3, 4:].set(-1e4)
+    vp2 = vp.at[trash].set(1e4).at[3, 4:].set(-1e4)
+    poisoned = paged_decode_attention_ref(q, kp2, vp2, tables, lens)
+    assert_allclose(np.asarray(base), np.asarray(poisoned), rtol=0, atol=0)
+
+
 def test_decode_partials_combine_equals_monolithic():
     """flash-decode: combining per-shard partials == attention over full cache."""
     kk = jax.random.PRNGKey(7)

@@ -1,0 +1,101 @@
+"""Block-pool allocator invariants (unit + property tests).
+
+The pool hands out integer block ids that the paged serving engine turns
+into device scatter/gather indices, so the invariants here are the ones
+cache correctness rests on: a block is never owned twice, alloc is
+all-or-nothing, frees are loud on double-free, and allocation order is
+deterministic (paged serving replays must be reproducible)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.kv_cache import BlockPool, BlockPoolOOM, BlockTable, blocks_for
+
+
+def test_blocks_for():
+    assert blocks_for(1, 4) == 1
+    assert blocks_for(4, 4) == 1
+    assert blocks_for(5, 4) == 2
+    assert blocks_for(0, 4) == 1  # a request always holds at least a block
+
+
+def test_alloc_free_roundtrip():
+    pool = BlockPool(4, 16)
+    a = pool.alloc(2)
+    b = pool.alloc(2)
+    assert sorted(a + b) == [0, 1, 2, 3] and pool.free_blocks == 0
+    assert not pool.can_alloc(1)
+    pool.free(a)
+    assert pool.free_blocks == 2
+    # deterministic LIFO reuse: the just-freed blocks come back first
+    assert pool.alloc(2) == a
+
+
+def test_alloc_is_all_or_nothing():
+    pool = BlockPool(3, 8)
+    pool.alloc(2)
+    with pytest.raises(BlockPoolOOM):
+        pool.alloc(2)
+    assert pool.free_blocks == 1  # the failed alloc took nothing
+    assert pool.try_alloc(2) is None
+    assert pool.try_alloc(1) is not None
+
+
+def test_double_free_and_foreign_free_raise():
+    pool = BlockPool(4, 8)
+    ids = pool.alloc(2)
+    pool.free(ids)
+    with pytest.raises(ValueError, match="unowned"):
+        pool.free(ids)  # double-free
+    other = pool.alloc(1)
+    with pytest.raises(ValueError, match="unowned"):
+        pool.free([other[0], 99])  # foreign id
+    with pytest.raises(ValueError, match="duplicate"):
+        pool.free(other + other)
+    assert other[0] in pool._owned  # rejected frees must not half-apply
+
+
+def test_block_table_grow_and_release():
+    pool = BlockPool(4, 8)
+    tb = BlockTable(pool)
+    assert tb.extend_to(5) and tb.n_blocks == 1  # ceil(5/8)
+    assert tb.extend_to(8) and tb.n_blocks == 1  # already covered
+    assert tb.extend_to(17) and tb.n_blocks == 3
+    other = BlockTable(pool)
+    assert other.extend_to(9) is False  # needs 2, pool has 1 -> nothing taken
+    assert pool.free_blocks == 1
+    tb.release()
+    assert pool.free_blocks == 4 and tb.n_blocks == 0
+    assert other.extend_to(9) and other.n_blocks == 2
+
+
+@given(
+    n_blocks=st.integers(1, 24),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=25, deadline=None)
+def test_pool_random_traffic_invariants(n_blocks, seed):
+    """Random alloc/free interleavings: no block is ever owned by two
+    tables, counts conserve, and OOM never corrupts state."""
+    import random
+
+    rng = random.Random(seed)
+    pool = BlockPool(n_blocks, 4)
+    live: list[list[int]] = []
+    for _ in range(200):
+        if live and rng.random() < 0.4:
+            ids = live.pop(rng.randrange(len(live)))
+            pool.free(ids)
+        else:
+            want = rng.randint(1, max(1, n_blocks // 2))
+            got = pool.try_alloc(want)
+            if got is None:
+                assert want > pool.free_blocks  # OOM only when truly short
+            else:
+                live.append(got)
+        owned = [b for ids in live for b in ids]
+        assert len(set(owned)) == len(owned), "block owned twice"
+        assert pool.free_blocks + len(owned) == n_blocks, "blocks leaked"
+        assert all(0 <= b < n_blocks for b in owned)
+    for ids in live:
+        pool.free(ids)
+    assert pool.free_blocks == n_blocks

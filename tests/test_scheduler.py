@@ -49,6 +49,52 @@ def test_scheduler_fifo_and_expiry():
     assert s.results[r2].status == "expired"
 
 
+def test_pop_ready_admit_gate_keeps_fifo():
+    """A head request the memory gate rejects stays AT THE HEAD: smaller
+    requests behind it must not overtake (admission order is part of the
+    paged/contiguous parity contract), and the same pop succeeds once the
+    gate opens."""
+    s = Scheduler()
+    r1 = s.submit(np.arange(10))  # "big": gate rejects
+    r2 = s.submit(np.arange(2))  # small, but FIFO says it waits
+    gate_open = []
+    gate = lambda req: bool(gate_open) or len(req.tokens) < 5
+    assert s.pop_ready(admit_if=gate) is None
+    assert s.n_queued == 2 and s.results == {}  # nothing popped or expired
+    gate_open.append(True)
+    assert s.pop_ready(admit_if=gate).rid == r1
+    assert s.pop_ready(admit_if=gate).rid == r2
+
+
+def test_pop_ready_gate_still_expires_overdue():
+    s = Scheduler()
+    r1 = s.submit(np.arange(3), deadline_s=0.0)
+    s.submit(np.arange(3))
+    time.sleep(0.01)
+    # the gate rejects everything, but the overdue head still expires
+    assert s.pop_ready(admit_if=lambda req: False) is None
+    assert s.results[r1].status == "expired" and s.n_queued == 1
+
+
+def test_occupancy_gauges_in_latency_stats():
+    s = Scheduler()
+    assert s.latency_stats()["peak_backlog"] == 0
+    s.submit(np.arange(3)), s.submit(np.arange(3)), s.submit(np.arange(3))
+    s.record_occupancy(free_slots=4, free_blocks=16)
+    s.record_occupancy(free_slots=0, free_blocks=3)
+    s.record_occupancy(free_slots=2, free_blocks=9)  # last != min
+    req = s.pop_ready()
+    s.finish(req, np.arange(1))
+    st = s.latency_stats()
+    assert st["peak_backlog"] == 3
+    assert st["free_slots"] == 2 and st["min_free_slots"] == 0
+    assert st["free_blocks"] == 9 and st["min_free_blocks"] == 3
+    # contiguous engines report no blocks; gauge stays absent, not zero
+    s2 = Scheduler()
+    s2.record_occupancy(free_slots=1, free_blocks=None)
+    assert "free_blocks" not in s2.latency_stats()
+
+
 def test_submit_many_scalar_ndarray_broadcasts():
     """Regression: a 0-d numpy array passes the np.ndarray isinstance
     check but is not iterable (``list(np.array(5))`` raises) — it must
