@@ -1,0 +1,87 @@
+"""Benchmark-schema guard: the perf trajectory across PRs lives in the
+``name`` keys of BENCH_e2e.json / BENCH_kernels.json, so a refactor that
+silently drops a row (e.g. a renamed ``run_*`` function falling out of
+``benchmarks/run.py --json``) would erase history without failing
+anything.  This guard pins the accumulated key set in
+``benchmarks/bench_schema.json`` and fails when a BENCH file no longer
+carries every previously-recorded key.
+
+  python benchmarks/check_schema.py            # verify (CI step)
+  python benchmarks/check_schema.py --update   # adopt newly-added keys
+
+New keys are allowed (they are the point of new PRs) — ``--update``
+records them; verification only ever fails on *missing* keys or a
+missing/unreadable BENCH file.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+MANIFEST = os.path.join(HERE, "bench_schema.json")
+
+
+def _bench_names(path: str) -> set[str]:
+    with open(path) as f:
+        return {row["name"] for row in json.load(f)}
+
+
+def verify(manifest_path: str = MANIFEST, root: str = ROOT) -> list[str]:
+    """Returns a list of human-readable failures (empty == green)."""
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    failures: list[str] = []
+    for fname, want in manifest.items():
+        path = os.path.join(root, fname)
+        try:
+            have = _bench_names(path)
+        except (OSError, ValueError, KeyError) as e:
+            failures.append(f"{fname}: unreadable ({e})")
+            continue
+        missing = sorted(set(want) - have)
+        if missing:
+            failures.append(
+                f"{fname}: previously-recorded benchmark key(s) dropped: "
+                + ", ".join(missing)
+            )
+    return failures
+
+
+def update(manifest_path: str = MANIFEST, root: str = ROOT) -> dict:
+    """Extend the manifest with any new keys present in the BENCH files
+    (never removes — dropping a key is an explicit manifest edit)."""
+    with open(manifest_path) as f:
+        manifest = json.load(f)
+    for fname, want in manifest.items():
+        path = os.path.join(root, fname)
+        if os.path.exists(path):
+            manifest[fname] = sorted(set(want) | _bench_names(path))
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.write("\n")
+    return manifest
+
+
+def main(argv=None, root: str = ROOT) -> int:
+    """``root``: directory holding the BENCH files to validate — the repo
+    checkout by default (CI validates the committed files), or the
+    writer's cwd when invoked right after ``run.py --json`` so the guard
+    inspects exactly what was just written."""
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--update" in argv:
+        manifest = update(root=root)
+        print(f"bench_schema.json now pins {sum(len(v) for v in manifest.values())} keys")
+    failures = verify(root=root)
+    for msg in failures:
+        print(f"SCHEMA GUARD: {msg}", file=sys.stderr)
+    if failures:
+        return 1
+    print("bench schema ok: no previously-recorded keys dropped")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

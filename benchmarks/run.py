@@ -51,8 +51,23 @@ def main(argv=None) -> None:
     for name, us, derived in kv_rows:
         print(f"{name},{us:.1f},{derived}")
     e2e_rows += kv_rows
+
+    print("\n== prefix-cache reuse on shared-preamble micro-batches ==")
+    px_rows = e2e_pipeline.run_prefix_reuse()
+    for name, us, derived in px_rows:
+        print(f"{name},{us:.1f},{derived}")
+    e2e_rows += px_rows
     if args.json:
         print(f"wrote {e2e_pipeline.write_json(e2e_rows)}")
+        # schema guard: regenerating the jsons must never drop a
+        # previously-recorded perf-trajectory key.  write_json writes to
+        # the cwd, so validate the files just written there
+        import os
+
+        from benchmarks import check_schema
+
+        if check_schema.main([], root=os.getcwd()):
+            raise SystemExit("benchmark schema regressed (key dropped)")
 
     print("\n== fault tolerance: recall vs providers down (Alg. 1 k_n <= k) ==")
     from benchmarks import quorum_sweep

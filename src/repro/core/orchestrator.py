@@ -62,6 +62,7 @@ class Orchestrator:
         selector_top_p: int = 0,  # 0 -> broadcast to all (paper's basic setup)
         rewriter=None,  # core.advanced.QueryRewriter (per-provider expansion)
         concurrent_collect: bool | None = None,  # None -> auto (transport-aware)
+        query_reserve: int = 32,  # prompt tail allowance (see build_prompt)
     ):
         self.providers = list(providers)
         self.tok = tokenizer
@@ -75,6 +76,7 @@ class Orchestrator:
         self.selector_top_p = selector_top_p
         self.rewriter = rewriter
         self.concurrent_collect = concurrent_collect
+        self.query_reserve = query_reserve
         self.enclave = Enclave("cfedrag-orchestrator-v1")
         self._establish_channels()
 
@@ -313,19 +315,31 @@ class Orchestrator:
         return outs
 
     def build_prompt(self, query_text: str, context: dict, max_len: int = 512) -> np.ndarray:
-        """[BOS] CTX chunk1 SEP chunk2 ... QRY query ANS
+        """[BOS] CTX chunk1 SEP chunk2 ... QRY query ANS — a STABLE
+        shared-prefix layout.
 
-        Overflow never breaks the grammar: when the context does not fit
-        in ``max_len``, whole chunks are dropped from the tail of the
-        ranked list (lowest-scored first) — a blind ``ids[-max_len:]``
-        would slice off ``BOS``/``CTX`` and could bisect a chunk.  The
-        ``BOS/CTX/QRY/query/ANS`` skeleton is always kept intact; only a
-        pathologically long query itself is tail-truncated to leave room
-        for the structural markers."""
+        The context preamble comes first and is a pure function of the
+        context and ``max_len``: the chunk budget reserves a FIXED query
+        allowance (``query_reserve``, not the query's own length), so two
+        queries served against the same aggregated context produce
+        byte-identical prompts up to and including the ``QRY`` marker —
+        exactly the prefix the paged engine's refcounted prefix cache
+        shares block-for-block across micro-batch siblings and retries
+        (``ServeConfig.prefix_cache``).  Truncation cuts from the TAIL:
+        overflow drops whole lowest-ranked chunks first, and only the
+        query itself is tail-truncated into whatever space remains (at
+        least the reserve, so structural markers always survive).
+
+        Overflow never breaks the grammar: dropping whole chunks keeps
+        the ``BOS/CTX/QRY/query/ANS`` skeleton intact, where a blind
+        ``ids[-max_len:]`` would slice off ``BOS``/``CTX`` and could
+        bisect a chunk."""
         query = [int(t) for t in self.tok.encode(query_text, bos=False) if t not in (PAD, EOS)]
         n_markers = 4  # BOS, CTX, QRY, ANS
-        query = query[: max(0, max_len - n_markers)]
-        chunk_budget = max_len - n_markers - len(query)
+        # fixed reserve: chunk inclusion must not depend on the query, or
+        # same-context siblings diverge before QRY and never share blocks
+        reserve = min(self.query_reserve, max(0, (max_len - n_markers) // 2))
+        chunk_budget = max_len - n_markers - reserve
         ids = [BOS, CTX]
         for row in context["chunk_tokens"]:
             chunk = [int(t) for t in row if t not in (PAD, BOS, EOS)]
@@ -335,7 +349,7 @@ class Orchestrator:
             ids.append(SEP)
             chunk_budget -= len(chunk) + 1
         ids.append(QRY)
-        ids += query
+        ids += query[: max(0, max_len - len(ids) - 1)]  # tail cut, ANS always fits
         ids.append(ANS)
         return np.asarray(ids, np.int32)[None, :]
 

@@ -139,7 +139,11 @@ class CFedRAGSystem:
         contexts = orch.aggregate_batch(queries, responses)
         # build prompts at the engine's true window so grammar-aware
         # truncation happens here — the engine's blind tail-slice to
-        # max_prompt_len must never be what cuts an overflowing prompt
+        # max_prompt_len must never be what cuts an overflowing prompt.
+        # build_prompt's layout is prefix-stable (context preamble first,
+        # fixed query reserve), so when the engine runs the paged prefix
+        # cache, same-context siblings and retries in this batch share
+        # their preamble KV blocks instead of re-prefilling them
         width = engine.scfg.max_prompt_len
         prompts = [orch.build_prompt(q, c, max_len=width) for q, c in zip(queries, contexts)]
         sched = Scheduler()

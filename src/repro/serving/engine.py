@@ -62,7 +62,7 @@ from repro.configs.base import ModelConfig
 from repro.data.tokenizer import EOS, PAD
 from repro.models import lm as LM
 from repro.runtime.sharding import ShardingPolicy
-from repro.serving.kv_cache import BlockPool, BlockTable, blocks_for
+from repro.serving.kv_cache import BlockPool, BlockTable, PrefixIndex, blocks_for
 from repro.serving.scheduler import Request, Scheduler
 
 
@@ -78,6 +78,11 @@ class ServeConfig:
     # pool size in blocks; None -> the HBM of max_batch contiguous stripes,
     # so paged-vs-contiguous comparisons at the default are equal-memory
     n_pool_blocks: int | None = None
+    # refcounted prefix cache on the paged pool: admission looks up the
+    # longest cached prompt prefix (block-granular hash-chain), shares
+    # those blocks into the new request's table, and prefills only the
+    # suffix; retired prompt blocks park in an LRU index for reuse
+    prefix_cache: bool = False
 
 
 class ServeEngine:
@@ -105,10 +110,51 @@ class ServeEngine:
                 )
             self._n_pool_blocks = n_pool
             self._trash_block = n_pool  # extra pool index for masked writes
+        if scfg.prefix_cache:
+            if not scfg.paged:
+                raise ValueError(
+                    "prefix_cache=True requires paged=True: block tables are "
+                    "what make prompt prefixes shareable"
+                )
+            if any(cfg.mixer_kind(i) != "attn" for i in range(cfg.n_layers)):
+                raise ValueError(
+                    "prefix_cache requires an all-attention model: SSM/conv "
+                    "state folds the whole sequence and cannot restart mid-prompt"
+                )
+            if cfg.attn_impl == "pallas":
+                raise ValueError(
+                    "prefix_cache is incompatible with attn_impl='pallas': the "
+                    "cold (dense) prefill would run the flash kernel while the "
+                    "warm suffix path runs the inline XLA softmax, breaking "
+                    "hit-vs-miss bit-parity (a paged suffix-prefill kernel is a "
+                    "ROADMAP item)"
+                )
+            if scfg.max_prompt_len > cfg.attn_chunk:
+                raise ValueError(
+                    f"prefix_cache suffix prefill needs the naive attention core "
+                    f"for bit-parity with the dense prefill: max_prompt_len="
+                    f"{scfg.max_prompt_len} must be <= attn_chunk={cfg.attn_chunk}"
+                )
+            if jnp.dtype(cfg.dtype) != jnp.float32:
+                raise ValueError(
+                    f"prefix_cache requires a float32 cache (cfg.dtype="
+                    f"{cfg.dtype}): a cold prefill attends to full-precision "
+                    f"activation K/V while a warm admit gathers pool lanes that "
+                    f"round-tripped through the cache dtype — hit-vs-miss "
+                    f"bit-parity would silently break (relaxing this to a "
+                    f"tolerance knob is future work)"
+                )
         t_cap = scfg.max_new_tokens
         # admit-dispatch observability (bucketed admission benchmark)
         self.admit_dispatches = 0
         self.admit_rows_total = 0
+        # prefix-cache observability (engine lifetime; serve passes report
+        # them into Scheduler.record_prefix_stats each pass)
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefill_tokens_total = 0
+        self.prefill_tokens_saved = 0
+        self.prefix_shared_total = 0  # blocks adopted by reference (cumulative)
 
         def prefill_fn(params, tokens, lengths, cache_len=cache_len):
             logits, cache = LM.prefill(cfg, pol, params, {"tokens": tokens}, cache_len=cache_len)
@@ -174,6 +220,41 @@ class ServeEngine:
             done = done.at[slot_ids].set((first == EOS) | (b_new <= 1))
             return cache, cur, lengths, emitted, done, budget, out
 
+        def suffix_admit_rows(params, cache, cur, lengths, emitted, done, budget, out,
+                              suf_tokens, slot_ids, row_lens, starts, b_new, tables_g):
+            """Prefix-cache admission: prefill ONLY the suffix of ``g``
+            requests whose first ``starts[r]`` positions already sit in
+            shared pool blocks (reachable through ``tables_g``), scatter
+            the suffix K/V into the pool (shared blocks are never
+            written; the COW boundary copy has already run), and seed the
+            slots exactly like ``admit_rows``.  ``suf_tokens`` is packed
+            to a power-of-2 suffix width, so the trace count stays
+            O(log(max_batch) * log(width))."""
+            suffix_lens = row_lens - starts
+            logits, suf_cache = LM.paged_prefill_suffix(
+                cfg, pol, params, {"tokens": suf_tokens}, cache, tables_g,
+                starts, bs, scfg.max_prompt_len,
+            )
+            cache = LM.paged_scatter_prefill(
+                cfg, cache, suf_cache, tables_g, slot_ids, bs,
+                start_pos=starts, suffix_lens=suffix_lens,
+            )
+            last = jnp.take_along_axis(logits, (suffix_lens - 1)[:, None, None], axis=1)[:, 0, :]
+            first = jnp.argmax(last, -1).astype(jnp.int32)
+            g = suf_tokens.shape[0]
+            cur = cur.at[slot_ids].set(first)
+            lengths = lengths.at[slot_ids].set(row_lens)
+            emitted = emitted.at[slot_ids].set(1)
+            budget = budget.at[slot_ids].set(b_new)
+            out = out.at[slot_ids].set(
+                jnp.zeros((g, t_cap + 1), jnp.int32).at[:, 0].set(first)
+            )
+            done = done.at[slot_ids].set((first == EOS) | (b_new <= 1))
+            return cache, cur, lengths, emitted, done, budget, out
+
+        def cow_copy(cache, src, dst):
+            return LM.paged_copy_block(cfg, cache, src, dst)
+
         def make_decode_chunk(paged: bool):
             def decode_chunk(params, cache, cur, lengths, emitted, done, budget, out,
                              n_steps, tables=None):
@@ -232,6 +313,8 @@ class ServeEngine:
         self._prefill = jax.jit(prefill_fn)
         self._decode_loop = jax.jit(decode_loop)
         self._admit_rows = jax.jit(admit_rows)
+        self._suffix_admit_rows = jax.jit(suffix_admit_rows)
+        self._cow_copy = jax.jit(cow_copy)
         self._decode_chunk = jax.jit(make_decode_chunk(scfg.paged))
         self.queue: list[np.ndarray] = []
 
@@ -310,9 +393,18 @@ class ServeEngine:
         B, t_cap, width = scfg.max_batch, scfg.max_new_tokens, scfg.max_prompt_len
         bs, paged = scfg.block_size, scfg.paged
         cache = self._init_serve_cache()
+        index: PrefixIndex | None = None
         if paged:
             pool = BlockPool(self._n_pool_blocks, bs)
             row_tables = [BlockTable(pool) for _ in range(B)]
+            if scfg.prefix_cache:
+                index = PrefixIndex(pool)  # registers itself as evictor
+                # engine counters are lifetime-cumulative; the scheduler's
+                # gauges must describe THIS run (the index starts cold
+                # each serve), so report deltas from these snapshots
+                lk0, ht0 = self.prefix_lookups, self.prefix_hits
+                pt0, ps0 = self.prefill_tokens_total, self.prefill_tokens_saved
+                sh0 = self.prefix_shared_total
             # every unallocated (or free-slot) table entry points at the
             # trash block, so masked writes can never land in live blocks
             tables_h = np.full((B, self._blocks_per_slot), self._trash_block, np.int32)
@@ -333,18 +425,31 @@ class ServeEngine:
         ln_h = np.ones((B,), np.int64)
         oom_slots: set[int] = set()  # force-done by pool OOM, not yet retired
 
+        planned: dict[int, object] = {}  # rid -> gate's plan (consumed at admit)
+
         def admit_gate(req: Request) -> bool:
             # memory-aware admission: pop only if free blocks cover the
             # prompt plus the first decode token (FIFO order preserved —
             # a too-big head request blocks the line until retires free
             # blocks rather than being skipped, so paged and contiguous
-            # admission orders are identical)
+            # admission orders are identical).  With the prefix cache the
+            # same reservation is planned against shared + free +
+            # reclaimable (evictable parked) blocks — a cached prefix
+            # shrinks what the head request actually needs.  The plan is
+            # memoized for the admit that follows: nothing touches the
+            # pool between this gate and the commit (single consumer)
+            if index is not None:
+                plan = index.plan(req.tokens[-width:])
+                if plan is not None:
+                    planned[req.rid] = plan
+                return plan is not None
             n_tok = min(len(req.tokens), width) + 1
             return pool.can_alloc(blocks_for(n_tok, bs))
 
         while True:
             # ---- admit queued requests into free slots (bucketed) ----
             admits: list[tuple[int, np.ndarray, int, int]] = []
+            pre_admits: list[dict] = []  # prefix-cache path records
             for slot in range(B):
                 if slots[slot] is not None:
                     continue
@@ -357,7 +462,47 @@ class ServeEngine:
                 # floor is 1; None means "engine cap" (0 does not)
                 b_new = t_cap if req.max_new_tokens is None else req.max_new_tokens
                 b_new = max(1, min(int(b_new), t_cap))
-                if paged:
+                if index is not None:
+                    # prefix-cache admission: longest cached prefix is
+                    # shared by reference (refcount +1 per block), a
+                    # full-prefix hit copy-on-writes its boundary block,
+                    # and only blocks_for(L+1) - shared fresh blocks are
+                    # allocated — the same prompt+1 reservation the gate
+                    # planned, so same-pass admits never starve each other
+                    plan = planned.pop(req.rid, None) or index.plan(p)
+                    if plan is None:
+                        raise RuntimeError("prefix admit raced the block pool")
+                    table_ids, cow_dst = index.commit(plan)
+                    row_tables[slot].adopt(table_ids)
+                    tables_h[slot, :] = self._trash_block
+                    tables_h[slot, : len(table_ids)] = table_ids
+                    self.prefix_lookups += 1
+                    self.prefill_tokens_total += length
+                    if plan.start:
+                        self.prefix_hits += 1
+                        self.prefill_tokens_saved += plan.start
+                        self.prefix_shared_total += len(plan.shared) + (cow_dst is not None)
+                    if plan.start == 0:
+                        # cold row (no shared chain, no COW): identical to
+                        # the PR-4 dense admit — ride the shared dispatch
+                        # block below, which runs before the warm waves,
+                        # so same-pass warm admits matching its chunks
+                        # read materialized blocks
+                        admits.append((slot, p, length, b_new))
+                    else:
+                        pre_admits.append(dict(
+                            slot=slot, p=p, length=length, start=plan.start, b_new=b_new,
+                            cow_src=plan.cow_src, cow_dst=cow_dst,
+                            # dispatch-ordering edges: blocks this admit
+                            # READS (shared chain + COW source) and the
+                            # cached chunks it WRITES (matchable by later
+                            # same-pass admits before their content exists)
+                            deps=frozenset(plan.shared) | (
+                                {plan.cow_src} if cow_dst is not None else set()
+                            ),
+                            writes=frozenset(table_ids[len(plan.nodes): length // bs]),
+                        ))
+                elif paged:
                     tb = row_tables[slot]
                     # allocate exactly what admit_gate checked — prompt
                     # plus the first decode token.  Allocating less (just
@@ -370,7 +515,8 @@ class ServeEngine:
                         raise RuntimeError("paged admit raced the block pool")
                     tables_h[slot, :] = self._trash_block
                     tables_h[slot, : tb.n_blocks] = tb.ids
-                admits.append((slot, p, length, b_new))
+                if index is None:
+                    admits.append((slot, p, length, b_new))
                 slots[slot] = req
                 em_h[slot], dn_h[slot] = 1, b_new <= 1
                 bu_h[slot], ln_h[slot] = b_new, length
@@ -396,11 +542,65 @@ class ServeEngine:
                 cache, cur, lengths, emitted, done, budget, out = self._admit_rows(*args)
                 self.admit_dispatches += 1
                 self.admit_rows_total += g
+            # ---- prefix-cache dispatch: dependency waves ----
+            # cold rows rode the shared dense dispatch above, so every
+            # chunk a warm admit can match is either materialized or
+            # owned by another WARM admit of this pass: an admit whose
+            # matched chain includes chunks another same-pass admit is
+            # about to compute defers a wave (cache dataflow then orders
+            # the device work, so its gather reads materialized blocks).
+            # Each wave dispatches COW copies, then warm rows grouped
+            # pow-2 with a pow-2 suffix width (bounded trace count)
+            pending = frozenset().union(*(a["writes"] for a in pre_admits)) if pre_admits else frozenset()
+            while pre_admits:
+                warm = [a for a in pre_admits if not (a["deps"] & pending)]
+                pre_admits = [a for a in pre_admits if a["deps"] & pending]
+                assert warm, "dependency wave stalled (cyclic prefix deps?)"
+                pending = pending.difference(*(a["writes"] for a in warm))
+                for a in warm:
+                    if a["cow_dst"] is not None:
+                        cache = self._cow_copy(
+                            cache, jnp.int32(a["cow_src"]), jnp.int32(a["cow_dst"])
+                        )
+                        # the copy has consumed the source's cache VALUE
+                        # (functional dataflow), so commit's pin can drop:
+                        # even if pressure now recycles the block, later
+                        # dispatches write the post-copy array
+                        pool.free([a["cow_src"]])
+                while warm:
+                    g = 1 << (len(warm).bit_length() - 1)
+                    group, warm = warm[:g], warm[g:]
+                    s_max = max(a["length"] - a["start"] for a in group)
+                    s_w = min(width, 1 << max(0, s_max - 1).bit_length())
+                    rows = np.zeros((g, s_w), np.int32)
+                    for i, a in enumerate(group):
+                        rows[i, : a["length"] - a["start"]] = a["p"][a["start"]:]
+                    slot_ids = np.array([a["slot"] for a in group], np.int32)
+                    cache, cur, lengths, emitted, done, budget, out = self._suffix_admit_rows(
+                        self.params, cache, cur, lengths, emitted, done, budget, out,
+                        jnp.asarray(rows), jnp.asarray(slot_ids),
+                        jnp.asarray(np.array([a["length"] for a in group], np.int32)),
+                        jnp.asarray(np.array([a["start"] for a in group], np.int32)),
+                        jnp.asarray(np.array([a["b_new"] for a in group], np.int32)),
+                        jnp.asarray(tables_h[slot_ids]),
+                    )
+                    self.admit_dispatches += 1
+                    self.admit_rows_total += g
             active = [i for i in range(B) if slots[i] is not None]
             scheduler.record_occupancy(
                 free_slots=B - len(active),
                 free_blocks=pool.free_blocks if paged else None,
+                reclaimable_blocks=pool.reclaimable_blocks if index is not None else None,
             )
+            if index is not None:
+                scheduler.record_prefix_stats(
+                    lookups=self.prefix_lookups - lk0,
+                    hits=self.prefix_hits - ht0,
+                    prefill_tokens=self.prefill_tokens_total - pt0,
+                    prefill_tokens_saved=self.prefill_tokens_saved - ps0,
+                    shared_blocks=self.prefix_shared_total - sh0,
+                    cached_blocks=index.n_cached_blocks,
+                )
             if not active:
                 if drain or scheduler.closed:
                     if scheduler.has_pending:

@@ -12,22 +12,60 @@ decode grows the table one block at a time at chunk boundaries, and retire
 returns every block to the pool — so concurrency is bounded by *actual*
 tokens resident, not by worst-case stripes.
 
+Blocks are **refcounted** so prompt prefixes can be shared: ``alloc``
+hands a block out at refcount 1, ``share`` increments (a second request's
+table now points at the same physical block), and ``free`` decrements —
+a block is recycled (or parked, see below) only when its count reaches
+zero.  The C-FedRAG front door builds every prompt as ``[BOS] CTX
+<aggregated chunks> QRY <query> ANS`` with the context preamble first, so
+micro-batch siblings and retries repeat the expensive prefix verbatim;
+two block tables pointing at one immutable prompt block de-duplicate both
+the HBM and the prefill FLOPs that computed it.
+
+``PrefixIndex`` is the lookup structure on top: a hash-chain trie over
+``block_size``-token chunks of prompt token ids.  Each cached chunk is
+one trie node keyed by ``(parent, chunk tokens)`` holding the pool block
+with that chunk's K/V.  ``lookup`` walks the trie for the longest cached
+prefix; when a request retires, its cached blocks drop to refcount zero
+and are **parked** — contents preserved, reclaimable — rather than
+recycled, and an LRU sweep evicts parked leaves when the pool is under
+pressure (``BlockPool.alloc`` asks its registered ``evictor`` to recycle
+parked blocks before declaring OOM).
+
 This module is deliberately host-only and jax-free: the pool hands out
 integer block ids; the engine owns the device arrays those ids index
 (``models/lm.init_paged_cache`` leaves shaped ``(n_layers, n_pool,
 block_size, ...)``) and the device copy of the block tables.
 
-Contracts:
+Contracts / invariants (property-tested in tests/test_kv_cache.py):
   * ``alloc(n)`` is all-or-nothing: it returns ``n`` block ids or raises
     ``BlockPoolOOM`` without allocating anything (``try_alloc`` returns
     ``None`` instead) — a half-admitted request can never leak blocks.
-  * ``free`` rejects double-frees and foreign ids loudly: a double-free
-    means two requests believe they own the same block, which is cache
-    corruption, not a recoverable condition.
-  * Allocation order is deterministic (LIFO free list) so paged serving
-    replays are reproducible run to run.
+    Under pool pressure it first asks the registered evictor to recycle
+    parked (zero-ref cached) blocks, LRU-first.
+  * Refcounts are never negative: ``free`` of a block that is not owned
+    (refcount >= 1) raises loudly — a double-free means two requests
+    believe they own the same block, which is cache corruption, not a
+    recoverable condition.  ``share`` requires an owned block.
+  * A block is in exactly one state: free, owned (refcount >= 1), or
+    parked (refcount == 0, cached contents preserved, reclaimable).
+    Zero-ref blocks are always reclaimable — either on the free list or
+    parked where the evictor can reach them.
+  * Eviction never touches a block with refcount > 0: only parked blocks
+    are recycled, and only trie leaves (a cached chunk is evicted before
+    the parent chunk its hash chains on, so every surviving chain stays
+    reachable from the root).
+  * Allocation order is deterministic (LIFO free list, FIFO eviction by
+    LRU stamp) so paged serving replays are reproducible run to run.
+  * Shared prompt blocks are immutable: the engine only writes positions
+    ``>= start`` of a request whose blocks below ``start`` are shared,
+    and copy-on-writes the boundary block when a full-prefix hit would
+    otherwise write position ``L - 1`` into a block it does not own
+    exclusively (see ``PrefixIndex.plan``).
 """
 from __future__ import annotations
+
+from typing import Any
 
 
 class BlockPoolOOM(RuntimeError):
@@ -40,7 +78,15 @@ def blocks_for(n_tokens: int, block_size: int) -> int:
 
 
 class BlockPool:
-    """Fixed pool of ``n_blocks`` token blocks with a LIFO free list."""
+    """Fixed pool of ``n_blocks`` refcounted token blocks.
+
+    States: **free** (on the LIFO free list), **owned** (refcount >= 1,
+    at least one block table points at it), **parked** (refcount == 0
+    but contents preserved for prefix reuse; recycled by the registered
+    ``evictor`` under pressure).  Without a registered evictor (plain
+    paged serving, no prefix cache) blocks never park and the pool
+    degenerates to the PR-4 alloc/free manager.
+    """
 
     def __init__(self, n_blocks: int, block_size: int):
         if n_blocks <= 0 or block_size <= 0:
@@ -50,7 +96,10 @@ class BlockPool:
         # LIFO: block 0 is handed out first, and a just-freed block is the
         # next one reused (cache-friendly and deterministic)
         self._free = list(range(self.n_blocks - 1, -1, -1))
-        self._owned: set[int] = set()
+        self._ref: dict[int, int] = {}  # owned blocks -> refcount >= 1
+        self._parked: set[int] = set()  # zero-ref cached blocks (reclaimable)
+        self._cached: set[int] = set()  # blocks a PrefixIndex holds (owned or parked)
+        self.evictor: Any = None  # PrefixIndex registers itself here
 
     @property
     def free_blocks(self) -> int:
@@ -58,19 +107,45 @@ class BlockPool:
 
     @property
     def used_blocks(self) -> int:
-        return len(self._owned)
+        return len(self._ref)
+
+    @property
+    def reclaimable_blocks(self) -> int:
+        """Parked blocks: zero-ref cached prefixes the evictor can recycle."""
+        return len(self._parked)
+
+    def refcount(self, b: int) -> int:
+        return self._ref.get(b, 0)
+
+    def is_parked(self, b: int) -> bool:
+        return b in self._parked
 
     def can_alloc(self, n: int) -> bool:
-        return n <= len(self._free)
+        """Could ``alloc(n)`` succeed?  Counts parked blocks only when an
+        evictor is registered to actually reclaim them."""
+        avail = len(self._free) + (len(self._parked) if self.evictor is not None else 0)
+        return n <= avail
+
+    def _make_room(self, n: int) -> None:
+        while len(self._free) < n and self.evictor is not None:
+            if not self.evictor.evict_one():
+                break
 
     def alloc(self, n: int) -> list[int]:
-        """Take ``n`` blocks; all-or-nothing (raises BlockPoolOOM)."""
+        """Take ``n`` blocks at refcount 1; all-or-nothing (raises
+        BlockPoolOOM).  Under pressure, parked prefix blocks are evicted
+        LRU-first before giving up."""
         if n < 0:
             raise ValueError(f"alloc({n})")
+        self._make_room(n)
         if n > len(self._free):
-            raise BlockPoolOOM(f"need {n} blocks, {len(self._free)} free")
+            raise BlockPoolOOM(
+                f"need {n} blocks, {len(self._free)} free "
+                f"(+{len(self._parked)} parked)"
+            )
         ids = [self._free.pop() for _ in range(n)]
-        self._owned.update(ids)
+        for b in ids:
+            self._ref[b] = 1
         return ids
 
     def try_alloc(self, n: int) -> list[int] | None:
@@ -78,24 +153,75 @@ class BlockPool:
         path treats OOM as an early-retire signal, not an error)."""
         return self.alloc(n) if self.can_alloc(n) else None
 
-    def free(self, ids) -> None:
-        """Return blocks to the pool.  Double-free / foreign ids raise:
-        either means two requests think they own the same block."""
+    def share(self, ids) -> None:
+        """Increment the refcount of owned blocks: a second table now
+        points at the same physical block.  Parked blocks must be
+        ``reactivate``d instead (0 -> 1 is a state change, not a share)."""
         ids = list(ids)
-        bad = [b for b in ids if b not in self._owned]
+        bad = [b for b in ids if b not in self._ref]
+        if bad:
+            raise ValueError(f"share of unowned block(s) {bad}")
+        for b in ids:
+            self._ref[b] += 1
+
+    def reactivate(self, ids) -> None:
+        """Parked -> owned at refcount 1: a prefix-cache hit on a block
+        whose last owner already retired."""
+        ids = list(ids)
+        bad = [b for b in ids if b not in self._parked]
+        if bad:
+            raise ValueError(f"reactivate of non-parked block(s) {bad}")
+        for b in ids:
+            self._parked.remove(b)
+            self._ref[b] = 1
+
+    def free(self, ids) -> None:
+        """Decrement refcounts; a block reaching zero is parked if a
+        prefix index holds it (contents stay reclaimable) and recycled to
+        the free list otherwise.  Unowned ids raise: a double-free means
+        two requests think they own the same block."""
+        ids = list(ids)
+        bad = [b for b in ids if b not in self._ref]
         if bad:
             raise ValueError(f"free of unowned block(s) {bad}")
-        if len(set(ids)) != len(ids):
-            raise ValueError(f"duplicate ids in free: {ids}")
+        counts: dict[int, int] = {}
         for b in ids:
-            self._owned.remove(b)
+            counts[b] = counts.get(b, 0) + 1
+        over = [b for b, c in counts.items() if c > self._ref[b]]
+        if over:
+            raise ValueError(f"free decrements below zero for block(s) {over}")
+        recycled = []
+        for b in ids:
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                if b in self._cached:
+                    self._parked.add(b)
+                else:
+                    recycled.append(b)
         # reversed: freeing [a, b] then allocating 2 returns [a, b] again
-        self._free.extend(reversed(ids))
+        self._free.extend(reversed(recycled))
+
+    # ---- prefix-index hooks ----
+    def mark_cached(self, b: int) -> None:
+        if b not in self._ref and b not in self._parked:
+            raise ValueError(f"mark_cached of free block {b}")
+        self._cached.add(b)
+
+    def recycle_parked(self, b: int) -> None:
+        """Eviction endpoint: a parked block loses its cached contents and
+        returns to the free list.  Refuses owned blocks — eviction must
+        never touch refcount > 0."""
+        if b not in self._parked:
+            raise ValueError(f"recycle_parked of non-parked block {b}")
+        self._parked.remove(b)
+        self._cached.discard(b)
+        self._free.append(b)
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return (
             f"BlockPool(n_blocks={self.n_blocks}, block_size={self.block_size}, "
-            f"free={self.free_blocks})"
+            f"free={self.free_blocks}, parked={len(self._parked)})"
         )
 
 
@@ -104,8 +230,10 @@ class BlockTable:
 
     ``ids[i]`` backs logical token positions ``[i*bs, (i+1)*bs)``.  The
     table grows via ``extend`` at decode-chunk boundaries and releases
-    everything via ``release`` at retire; ``n_tokens_capacity`` is the
-    highest position count the table can currently hold.
+    everything via ``release`` at retire (a release is a refcount
+    decrement: shared prefix blocks survive under their other owners or
+    park in the prefix index); ``n_tokens_capacity`` is the highest
+    position count the table can currently hold.
     """
 
     def __init__(self, pool: BlockPool):
@@ -132,7 +260,220 @@ class BlockTable:
         self.ids.extend(got)
         return True
 
+    def adopt(self, ids) -> None:
+        """Seed the table with already-accounted blocks (shared prefix
+        chain + freshly alloc'd suffix blocks, in logical order)."""
+        assert not self.ids, "adopt into a non-empty table"
+        self.ids = list(ids)
+
     def release(self) -> None:
         if self.ids:
             self.pool.free(self.ids)
             self.ids = []
+
+
+class _Node:
+    """One cached chunk: trie node keyed by its chunk tokens under its
+    parent, holding the pool block with the chunk's K/V."""
+
+    __slots__ = ("chunk", "block", "parent", "children", "stamp")
+
+    def __init__(self, chunk: tuple, block: int, parent: "_Node | None", stamp: int):
+        self.chunk = chunk
+        self.block = block
+        self.parent = parent
+        self.children: dict[tuple, _Node] = {}
+        self.stamp = stamp
+
+
+class PrefixPlan:
+    """Admission plan for one prompt: what to share, copy, and allocate.
+
+    ``shared``: cached blocks adopted by reference (refcount +1 each).
+    ``cow_src``: cached block to copy-on-write, or None.  Set exactly when
+    the cache holds the *entire* prompt and the prompt ends on a block
+    boundary: the suffix is then the single last prompt token (we still
+    need its logits for the first decode token) and its K/V write at
+    position ``L - 1`` would mutate the shared boundary block — so that
+    block is duplicated into a private copy first.
+    ``n_fresh``: private blocks to allocate beyond shared + COW copy
+    (suffix prompt blocks + the first decode block), i.e.
+    ``blocks_for(L + 1) - len(shared) - (1 if cow)``.
+    ``start``: first prompt position the engine must actually prefill;
+    positions ``< start`` ride in shared blocks.
+    """
+
+    __slots__ = ("tokens", "nodes", "shared", "cow_src", "n_fresh", "start", "n_tokens")
+
+    def __init__(self, tokens, nodes, shared, cow_src, n_fresh, start, n_tokens):
+        self.tokens = tokens
+        self.nodes = nodes  # matched trie nodes, root-first
+        self.shared = shared  # block ids shared by reference
+        self.cow_src = cow_src  # block id to copy, or None
+        self.n_fresh = n_fresh
+        self.start = start
+        self.n_tokens = n_tokens  # L (prompt length within the window)
+
+
+class PrefixIndex:
+    """Hash-chain trie over ``block_size``-token chunks of prompt ids.
+
+    Registers itself as the pool's evictor: under allocation pressure the
+    least-recently-used parked *leaf* chunk is evicted (leaf-first keeps
+    every surviving chain reachable), its block recycled.  Lookup walks
+    the trie chunk by chunk for the longest cached prefix; ``plan`` turns
+    a lookup into an admission plan (shared chain, optional COW boundary
+    copy, fresh-block count) and checks feasibility against the pool
+    without mutating anything.
+    """
+
+    def __init__(self, pool: BlockPool):
+        self.pool = pool
+        self.block_size = pool.block_size
+        self._root = _Node((), -1, None, 0)
+        self._node_of_block: dict[int, _Node] = {}
+        self._clock = 0
+        pool.evictor = self
+
+    # ---- observability ----
+    @property
+    def n_cached_blocks(self) -> int:
+        return len(self._node_of_block)
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    @staticmethod
+    def _chunks(tokens, bs: int):
+        L = len(tokens)
+        for i in range(L // bs):
+            yield tuple(int(t) for t in tokens[i * bs : (i + 1) * bs])
+
+    def lookup(self, tokens) -> list[_Node]:
+        """Longest cached prefix: matched trie nodes, root-first."""
+        node, out = self._root, []
+        for chunk in self._chunks(tokens, self.block_size):
+            nxt = node.children.get(chunk)
+            if nxt is None:
+                break
+            out.append(nxt)
+            node = nxt
+        return out
+
+    def plan(self, tokens, n_reserve_tokens: int | None = None) -> PrefixPlan | None:
+        """Admission plan for ``tokens`` (already window-truncated), or
+        None when the pool cannot cover it even after evicting every
+        parked block not needed by the plan itself.  Pure: nothing is
+        shared, allocated, or evicted until ``commit``.
+
+        ``n_reserve_tokens`` defaults to ``len(tokens) + 1`` — prompt
+        plus the first decode token, exactly what the PR-4 admission gate
+        reserves so same-pass admits can never starve each other."""
+        L = len(tokens)
+        n_total = blocks_for(
+            L + 1 if n_reserve_tokens is None else n_reserve_tokens, self.block_size
+        )
+        nodes = self.lookup(tokens)
+        matched = len(nodes) * self.block_size
+        if matched == L and nodes:
+            # full-prefix hit ending on a block boundary: recompute only
+            # the last prompt token (its logits seed decode) and COW the
+            # boundary block its K/V write would otherwise mutate
+            start, shared_nodes, cow = L - 1, nodes[:-1], nodes[-1]
+        else:
+            start, shared_nodes, cow = matched, nodes, None
+        shared = [n.block for n in shared_nodes]
+        n_fresh = n_total - len(shared) - (1 if cow is not None else 0)
+        # feasibility: fresh + COW copy must come from free blocks plus
+        # parked blocks OUTSIDE the plan's own chain (evicting a block we
+        # are about to share/copy would be self-defeating)
+        pinned = {n.block for n in nodes}
+        reclaimable = sum(1 for b in self.pool._parked if b not in pinned)
+        need = n_fresh + (1 if cow is not None else 0)
+        if need > self.pool.free_blocks + reclaimable:
+            return None
+        return PrefixPlan(tokens, nodes, shared, None if cow is None else cow.block,
+                          n_fresh, start, L)
+
+    def commit(self, plan: PrefixPlan) -> tuple[list[int], int | None]:
+        """Execute a plan: acquire the shared chain (share / reactivate),
+        allocate the COW copy and fresh blocks (evicting parked blocks
+        under pressure — the chain is pinned first, so eviction can never
+        touch it), and register the prompt chunks this request will
+        compute.  Returns ``(table_ids, cow_dst)``: the request's block
+        table in logical order, and the private copy destination the
+        engine must fill from ``plan.cow_src`` on device (None when no
+        COW).
+
+        When ``cow_dst`` is not None, ``plan.cow_src`` is returned STILL
+        PINNED (refcount +1): the caller must ``pool.free([cow_src])``
+        only after dispatching the device copy.  Unpinning earlier would
+        let a later same-pass commit under pool pressure evict and
+        re-allocate the source before the copy reads it."""
+        pool, stamp = self.pool, self._tick()
+        for n in plan.nodes:
+            n.stamp = stamp  # LRU touch on every matched chunk
+        # 1. pin the shared chain before any allocation can evict it
+        for b in plan.shared:
+            if pool.is_parked(b):
+                pool.reactivate([b])
+            else:
+                pool.share([b])
+        cow = plan.cow_src is not None
+        if cow:
+            # pin the source so allocation pressure cannot evict it before
+            # the engine's device copy reads it (eviction never touches
+            # refcount >= 1).  The pin survives commit — the caller
+            # releases it after dispatching the copy
+            if pool.is_parked(plan.cow_src):
+                pool.reactivate([plan.cow_src])
+            else:
+                pool.share([plan.cow_src])
+        try:
+            got = pool.alloc(plan.n_fresh + (1 if cow else 0))
+        except BlockPoolOOM:
+            # plan() said feasible and the consumer is single-threaded,
+            # so this means the caller raced the pool — unwind loudly
+            if cow:
+                pool.free([plan.cow_src])
+            if plan.shared:
+                pool.free(plan.shared)
+            raise
+        cow_dst = got[0] if cow else None
+        fresh = got[1:] if cow else got
+        table = plan.shared + ([cow_dst] if cow_dst is not None else []) + fresh
+        # 2. register the full prompt chunks this request computes (the
+        # COW copy stays private: its original chunk is already cached)
+        node = plan.nodes[-1] if plan.nodes else self._root
+        chunks = list(self._chunks(plan.tokens, self.block_size))
+        for i in range(len(plan.nodes), len(chunks)):
+            node = self._insert_child(node, chunks[i], table[i], stamp)
+        return table, cow_dst
+
+    def _insert_child(self, parent: _Node, chunk: tuple, block: int, stamp: int) -> _Node:
+        assert chunk not in parent.children, "duplicate chunk insert"
+        node = _Node(chunk, block, parent, stamp)
+        parent.children[chunk] = node
+        self._node_of_block[block] = node
+        self.pool.mark_cached(block)
+        return node
+
+    # ---- eviction (BlockPool.evictor protocol) ----
+    def evict_one(self) -> bool:
+        """Recycle the LRU parked leaf chunk.  Returns False when nothing
+        is evictable (every cached block is owned or has cached
+        children)."""
+        victim: _Node | None = None
+        for b in self.pool._parked:
+            node = self._node_of_block.get(b)
+            if node is None or node.children:
+                continue  # not ours / interior chunk: children chain on it
+            if victim is None or node.stamp < victim.stamp:
+                victim = node
+        if victim is None:
+            return False
+        del victim.parent.children[victim.chunk]
+        del self._node_of_block[victim.block]
+        self.pool.recycle_parked(victim.block)
+        return True

@@ -100,6 +100,7 @@ class Scheduler:
         # headroom falls out of latency_stats() alongside the percentiles
         self._peak_backlog = 0
         self._occupancy: dict[str, int] = {}
+        self._prefix: dict[str, int] | None = None
 
     def submit(
         self,
@@ -110,9 +111,18 @@ class Scheduler:
         tag: Any = None,
         t0: float | None = None,
     ) -> int:
+        tokens = np.asarray(prompt_tokens).ravel()
+        if tokens.size == 0:
+            # an empty prompt has no last position to read first-token
+            # logits from, yet would still allocate a KV block
+            # (blocks_for(0) == 1) — reject at the door, loudly
+            raise ValueError(
+                "empty prompt: a request must carry at least one token "
+                "(zero-length prompts have no position to decode from)"
+            )
         req = Request(
             rid=-1,
-            tokens=np.asarray(prompt_tokens).ravel(),
+            tokens=tokens,
             max_new_tokens=None if max_new_tokens is None else int(max_new_tokens),
             deadline_s=deadline_s,
             submitted_at=time.monotonic(),
@@ -250,32 +260,68 @@ class Scheduler:
             self._cond.notify_all()  # wake drain() waiters
 
     # ---- observability ----
-    def record_occupancy(self, *, free_slots: int | None = None, free_blocks: int | None = None):
+    def record_occupancy(self, *, free_slots: int | None = None, free_blocks: int | None = None,
+                         reclaimable_blocks: int | None = None):
         """Engine-side memory gauges, sampled once per scheduler pass.
 
         ``free_slots``: open decode slots right now; ``free_blocks``: free
-        KV blocks (paged engines only — contiguous engines pass None).
+        KV blocks (paged engines only — contiguous engines pass None);
+        ``reclaimable_blocks``: parked zero-ref prefix-cache blocks the
+        pool can evict under pressure (prefix-cache engines only).
         Keeps the last sample plus the running minimum of each, so "how
         close did serving get to the memory wall" (peak concurrency =
         ``max_batch - min_free_slots``, block headroom =
-        ``min_free_blocks``) is answerable after the fact."""
+        ``min_free_blocks`` + reclaimable) is answerable after the fact."""
         with self._lock:
-            for key, val in (("free_slots", free_slots), ("free_blocks", free_blocks)):
+            for key, val in (
+                ("free_slots", free_slots),
+                ("free_blocks", free_blocks),
+                ("reclaimable_blocks", reclaimable_blocks),
+            ):
                 if val is None:
                     continue
                 self._occupancy[key] = int(val)
                 low = f"min_{key}"
                 self._occupancy[low] = min(self._occupancy.get(low, int(val)), int(val))
 
+    def record_prefix_stats(self, *, lookups: int, hits: int, prefill_tokens: int,
+                            prefill_tokens_saved: int, shared_blocks: int,
+                            cached_blocks: int):
+        """Prefix-cache counters (engine-cumulative, overwritten each
+        pass): admission lookups / hits, prompt tokens seen vs skipped by
+        prefix sharing, blocks adopted by reference, and chunks currently
+        cached.  ``latency_stats`` derives ``prefix_hit_rate`` and
+        ``prefill_saved_frac`` from them."""
+        with self._lock:
+            self._prefix = {
+                "prefix_lookups": int(lookups),
+                "prefix_hits": int(hits),
+                "prefill_tokens": int(prefill_tokens),
+                "prefill_tokens_saved": int(prefill_tokens_saved),
+                "prefix_shared_blocks": int(shared_blocks),
+                "prefix_cached_blocks": int(cached_blocks),
+            }
+
     def latency_stats(self) -> dict:
         """p50/p95/mean submit->finish latency over completed requests,
         plus occupancy gauges (peak backlog; free/min-free slots and KV
-        blocks when an engine reported them via ``record_occupancy``)."""
+        blocks when an engine reported them via ``record_occupancy``) and
+        prefix-cache hit-rate gauges (``record_prefix_stats``)."""
         with self._lock:
             done = [r for r in self.results.values() if r.status == "done"]
             n_expired = sum(1 for r in self.results.values() if r.status == "expired")
             n_truncated = sum(1 for r in done if r.truncated)
             gauges = {"peak_backlog": self._peak_backlog, **self._occupancy}
+            if self._prefix is not None:
+                gauges.update(self._prefix)
+                if self._prefix["prefix_lookups"]:
+                    gauges["prefix_hit_rate"] = (
+                        self._prefix["prefix_hits"] / self._prefix["prefix_lookups"]
+                    )
+                if self._prefix["prefill_tokens"]:
+                    gauges["prefill_saved_frac"] = (
+                        self._prefix["prefill_tokens_saved"] / self._prefix["prefill_tokens"]
+                    )
         lats = sorted(r.latency_s for r in done)
         if not lats:
             return {"n_done": 0, **gauges}

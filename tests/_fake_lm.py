@@ -45,9 +45,23 @@ class FakeLM:
         return {"dummy": jnp.zeros((1, n_slots, 1), jnp.float32)}
 
     @staticmethod
-    def paged_scatter_prefill(cfg, cache, row_cache, block_ids, slots, block_size):
-        del block_ids, block_size  # no K/V to page in the fake model
+    def paged_scatter_prefill(cfg, cache, row_cache, block_ids, slots, block_size,
+                              start_pos=None, suffix_lens=None):
+        del block_ids, block_size, start_pos, suffix_lens  # no K/V to page
         return jax.tree.map(lambda c, rc: c.at[:, slots].set(rc), cache, row_cache)
+
+    @staticmethod
+    def paged_prefill_suffix(cfg, pol, params, batch, cache, block_tables, start,
+                             block_size, attend_len):
+        # the fake model is stateless, so suffix logits need no prefix K/V
+        tokens = batch["tokens"]
+        return FakeLM._logits(tokens), {
+            "dummy": jnp.zeros((1, tokens.shape[0], 1), jnp.float32)
+        }
+
+    @staticmethod
+    def paged_copy_block(cfg, cache, src, dst):
+        return cache  # no pooled K/V to copy
 
 
 def expected_answer(end_token: int, budget: int) -> list[int]:

@@ -49,6 +49,24 @@ def test_scheduler_fifo_and_expiry():
     assert s.results[r2].status == "expired"
 
 
+def test_zero_length_prompt_rejected_at_submit():
+    """Regression: an empty prompt used to flow through admission into
+    ``blocks_for(0, bs) == 1`` — a KV block allocated for a request with
+    no position to decode from.  Both submit entry points must reject it
+    at the door with a clear message, taking nothing into the queue."""
+    s = Scheduler()
+    with pytest.raises(ValueError, match="empty prompt"):
+        s.submit(np.zeros((0,), np.int32))
+    with pytest.raises(ValueError, match="empty prompt"):
+        s.submit(np.zeros((0, 5), np.int32))  # ravel()s to zero length too
+    with pytest.raises(ValueError, match="empty prompt"):
+        s.submit_many([np.arange(3), np.zeros((0,), np.int32)], 4)
+    # the good prompt of the failed batch was submitted before the bad
+    # one raised; nothing after it entered, and the queue stays usable
+    assert s.n_queued == 1
+    assert s.pop_ready() is not None and s.pop_ready() is None
+
+
 def test_pop_ready_admit_gate_keeps_fifo():
     """A head request the memory gate rejects stays AT THE HEAD: smaller
     requests behind it must not overtake (admission order is part of the

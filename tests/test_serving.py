@@ -217,6 +217,132 @@ def test_paged_pool_must_fit_one_request(monkeypatch):
 
 
 # ------------------------------------------------------------------ #
+# refcounted prefix cache: bit-parity + sharing semantics
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("block_size", [4, 8, 16])
+def test_prefix_shared_matches_unshared_bitwise(small_lm, block_size):
+    """Acceptance: prefix-shared serving must be BIT-identical to the
+    non-shared paged path for the same admission order on a ragged
+    prompt/budget workload that mixes cold prompts, partial-prefix hits,
+    same-pass identical siblings, and a full-prefix hit whose length is a
+    multiple of every tested block size (the COW boundary-block case:
+    the last prompt token's K/V write lands in a shared block and must
+    go through a private copy, never mutate it)."""
+    cfg, params = small_lm
+    # width fits every prompt whole: a window tail-slice would shift the
+    # preamble off block alignment and (correctly) turn hits into misses
+    base_kw = dict(max_batch=2, max_prompt_len=20, max_new_tokens=5, sched_chunk=2)
+    rng = np.random.default_rng(42)
+    pre = rng.integers(8, cfg.vocab_size, size=16).astype(np.int32)  # 16 % {4,8,16} == 0
+    tails = [rng.integers(8, cfg.vocab_size, size=n).astype(np.int32) for n in (1, 3, 2)]
+    prompts = [
+        np.concatenate([pre, tails[0]]),  # cold: inserts the preamble chunks
+        np.concatenate([pre, tails[1]]),  # same-pass sibling: shares them
+        pre.copy(),                        # full-prefix hit -> COW boundary block
+        rng.integers(8, cfg.vocab_size, size=9).astype(np.int32),  # unrelated cold
+        pre.copy(),                        # COW again, now against a parked chain
+        np.concatenate([pre, tails[2]]),
+    ]
+    budgets = [5, 1, 4, 5, 2, 3]
+    base = ServeEngine(
+        cfg, POL, params, ServeConfig(paged=True, block_size=block_size, **base_kw)
+    )
+    want = base.serve_prompts(prompts, max_new_tokens=budgets)
+    shared = ServeEngine(
+        cfg, POL, params,
+        ServeConfig(paged=True, prefix_cache=True, block_size=block_size, **base_kw),
+    )
+    got = shared.serve_prompts(prompts, max_new_tokens=budgets)
+    for i, (w, g) in enumerate(zip(want, got)):
+        assert np.array_equal(w, g), f"prompt {i}: shared {list(g)} != unshared {list(w)}"
+    assert shared.prefix_lookups == len(prompts)
+    assert shared.prefix_hits >= 3  # sibling + both full-prefix hits
+    assert shared.prefill_tokens_saved > 0
+
+
+def test_prefix_cache_gauges_and_savings(small_lm):
+    """The hit-rate / tokens-saved gauges must surface through
+    ``Scheduler.latency_stats`` and count real sharing: 4 prompts with a
+    common 8-token preamble (block size 4) skip the preamble prefill on
+    every hit."""
+    cfg, params = small_lm
+    eng = ServeEngine(
+        cfg, POL, params,
+        ServeConfig(max_batch=2, max_prompt_len=12, max_new_tokens=3,
+                    sched_chunk=2, paged=True, prefix_cache=True, block_size=4),
+    )
+    rng = np.random.default_rng(3)
+    pre = rng.integers(8, cfg.vocab_size, size=8).astype(np.int32)
+    prompts = [
+        np.concatenate([pre, rng.integers(8, cfg.vocab_size, size=n).astype(np.int32)])
+        for n in (2, 3, 1, 4)
+    ]
+    sched = Scheduler()
+    sched.submit_many(prompts, 3)
+    eng.serve(sched)
+    st = sched.latency_stats()
+    assert st["prefix_lookups"] == 4 and st["prefix_hits"] == 3
+    assert st["prefix_hit_rate"] == pytest.approx(0.75)
+    assert st["prefill_tokens_saved"] == 3 * len(pre)
+    assert st["prefill_tokens"] == sum(len(p) for p in prompts)
+    assert st["prefill_saved_frac"] == pytest.approx(
+        3 * len(pre) / sum(len(p) for p in prompts)
+    )
+    assert st["prefix_cached_blocks"] >= 2 and st["prefix_shared_blocks"] >= 6
+    assert "reclaimable_blocks" in st
+
+
+def test_prefix_cache_recycles_and_evicts_exactly(monkeypatch):
+    """FIFO stream of repeated + distinct prompts through a pool too
+    small to cache everything: every answer must stay exact (eviction
+    only ever recycles zero-ref parked blocks; live chains are pinned by
+    their refcounts) and nothing may truncate — pressure is absorbed by
+    the LRU sweep, not by degrading requests."""
+    eng = make_fake_engine(
+        monkeypatch, max_batch=3, max_new_tokens=4, sched_chunk=2,
+        paged=True, block_size=4, n_pool_blocks=6, prefix_cache=True,
+    )
+    ends = [250, 250, 10, 250, 99, 10, 250, 30, 99]
+    budgets = [4, 3, 2, 4, 1, 4, 2, 3, 2]
+    sched = Scheduler()
+    rids = sched.submit_many([prompt_ending(e, 8) for e in ends], budgets)
+    res = eng.serve(sched)
+    for e, b, rid in zip(ends, budgets, rids):
+        assert list(res[rid]) == expected_answer(e, b), f"end={e} budget={b}"
+    st = sched.latency_stats()
+    assert st["n_truncated"] == 0
+    assert st["prefix_hits"] > 0  # repeats actually shared
+
+
+def test_prefix_cache_config_validation(small_lm):
+    cfg, params = small_lm
+    with pytest.raises(ValueError, match="requires paged"):
+        ServeEngine(cfg, POL, params, ServeConfig(prefix_cache=True, paged=False))
+    with pytest.raises(ValueError, match="attn_chunk"):
+        ServeEngine(
+            cfg.with_overrides(attn_chunk=8), POL, params,
+            ServeConfig(prefix_cache=True, paged=True, max_prompt_len=16),
+        )
+    ssm = smoke_config(get_config("mamba2-1.3b")).with_overrides(dtype="float32")
+    with pytest.raises(ValueError, match="all-attention"):
+        ServeEngine(ssm, POL, {}, ServeConfig(prefix_cache=True, paged=True))
+    # pallas prefill would make cold (flash-kernel) and warm (XLA) rows
+    # numerically diverge — hit-vs-miss parity must reject it
+    with pytest.raises(ValueError, match="pallas"):
+        ServeEngine(
+            cfg.with_overrides(attn_impl="pallas"), POL, params,
+            ServeConfig(prefix_cache=True, paged=True),
+        )
+    # a bf16 pool rounds the shared prefix K/V that a cold prefill would
+    # attend to in f32 — same hit-vs-miss divergence, same rejection
+    with pytest.raises(ValueError, match="float32"):
+        ServeEngine(
+            cfg.with_overrides(dtype="bfloat16"), POL, params,
+            ServeConfig(prefix_cache=True, paged=True, max_prompt_len=16),
+        )
+
+
+# ------------------------------------------------------------------ #
 # bucketed admission (applies to both cache layouts)
 # ------------------------------------------------------------------ #
 def test_bucketed_admission_dispatch_count(monkeypatch):
