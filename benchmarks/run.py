@@ -57,6 +57,14 @@ def main(argv=None) -> None:
     for name, us, derived in px_rows:
         print(f"{name},{us:.1f},{derived}")
     e2e_rows += px_rows
+
+    print("\n== federation resilience under injected faults (breaker on/off) ==")
+    from benchmarks import federation_faults
+
+    fault_rows = federation_faults.run()
+    for name, us, derived in fault_rows:
+        print(f"{name},{us:.1f},{derived}")
+    e2e_rows += fault_rows
     if args.json:
         print(f"wrote {e2e_pipeline.write_json(e2e_rows)}")
         # schema guard: regenerating the jsons must never drop a

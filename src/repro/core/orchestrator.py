@@ -31,6 +31,15 @@ provider position before aggregation, so results are bit-identical
 between the two dispatchers whenever every provider responds in time;
 ``concurrent_collect=True/False`` forces either path (False is the
 determinism baseline).
+
+Dispatch is also **resilient** (core/resilience.py): per-provider
+retry/backoff (budget deducted from the live deadline), circuit breakers
+that skip flapping providers, channel self-healing on ``IntegrityError``
+(one re-attest + re-establish before a round counts as failed), an
+opt-in aggregator-side poisoning gate (per-provider score calibration +
+outlier quarantine), and a ``federation_stats()`` health ledger.  All of
+it is overlay: with retries off / breaker off / gate off and no faults
+firing, collect results are bit-identical to the plain path.
 """
 from __future__ import annotations
 
@@ -40,9 +49,24 @@ from typing import Callable, Sequence
 
 import numpy as np
 
-from repro.core.confidential import Enclave, SecureChannel
+from repro.core.confidential import Enclave, IntegrityError, SecureChannel
 from repro.core.provider import DataProvider, pack, unpack
+from repro.core.resilience import (
+    BreakerPolicy,
+    CircuitBreaker,
+    ProviderHealth,
+    QuorumNotMet,
+    RetryPolicy,
+    ScoreGate,
+)
 from repro.data.tokenizer import ANS, BOS, CTX, EOS, PAD, QRY, SEP, HashTokenizer
+
+# the faults one provider may raise without failing the round: absorbed
+# by quorum (Algorithm 1's k_n <= k), counted in the health ledger.  An
+# IntegrityError (tampered/corrupted/replayed sealed payload) is a
+# per-provider fault exactly like a dead link — it must never crash the
+# whole round.
+_TOLERATED_FAULTS = (ConnectionError, TimeoutError, IntegrityError)
 
 
 class Orchestrator:
@@ -63,6 +87,9 @@ class Orchestrator:
         rewriter=None,  # core.advanced.QueryRewriter (per-provider expansion)
         concurrent_collect: bool | None = None,  # None -> auto (transport-aware)
         query_reserve: int = 32,  # prompt tail allowance (see build_prompt)
+        retry: RetryPolicy | None = None,  # None -> single-shot (legacy path)
+        breaker: BreakerPolicy | None = None,  # None -> no circuit breakers
+        score_gate: ScoreGate | None = None,  # None -> raw provider scores
     ):
         self.providers = list(providers)
         self.tok = tokenizer
@@ -77,6 +104,16 @@ class Orchestrator:
         self.rewriter = rewriter
         self.concurrent_collect = concurrent_collect
         self.query_reserve = query_reserve
+        self.retry = retry
+        self.breaker_policy = breaker
+        self.score_gate = score_gate
+        # per-provider health ledger (attempts/retries/faults/breaker/...)
+        self._health: dict[int, ProviderHealth] = {
+            int(p.provider_id): ProviderHealth(
+                breaker=CircuitBreaker(breaker) if breaker is not None else None
+            )
+            for p in self.providers
+        }
         self.enclave = Enclave("cfedrag-orchestrator-v1")
         self._establish_channels()
 
@@ -86,9 +123,12 @@ class Orchestrator:
         (directional keys agree because both are derived from the same
         static-DH secret with measurement-ordered labels)."""
         for p in self.providers:
-            ch = SecureChannel.establish(self.enclave, p.enclave, p.enclave.measurement)
-            p.channel = SecureChannel.establish(p.enclave, self.enclave, self.enclave.measurement)
-            setattr(p, "_orch_channel", ch)
+            self._establish_channel(p)
+
+    def _establish_channel(self, p):
+        ch = SecureChannel.establish(self.enclave, p.enclave, p.enclave.measurement)
+        p.channel = SecureChannel.establish(p.enclave, self.enclave, self.enclave.measurement)
+        setattr(p, "_orch_channel", ch)
 
     def select_providers(self, query_text: str) -> list[DataProvider]:
         if self.selector is not None and self.selector_top_p:
@@ -112,10 +152,114 @@ class Orchestrator:
 
     def _quorum_check(self, responses: list[dict]) -> list[dict]:
         if len(responses) < self.quorum:
-            raise RuntimeError(
-                f"quorum not met: {len(responses)}/{self.quorum} providers answered"
-            )
+            raise QuorumNotMet(len(responses), self.quorum)
         return responses
+
+    def _health_for(self, p) -> ProviderHealth:
+        pid = int(p.provider_id)
+        h = self._health.get(pid)
+        if h is None:  # provider added after construction
+            h = self._health[pid] = ProviderHealth(
+                breaker=CircuitBreaker(self.breaker_policy)
+                if self.breaker_policy is not None
+                else None
+            )
+        return h
+
+    def _heal_channel(self, p, tokens_for) -> dict | None:
+        """Channel self-heal: an ``IntegrityError`` (tampered payload,
+        replayed nonce, sequence desync) may mean the session state is
+        wedged rather than the provider hostile — re-attest and
+        re-establish the provider's SecureChannel ONCE, then retry the
+        exchange once, before the round counts as failed.  Re-
+        establishment runs attestation from scratch, so a provider whose
+        code identity changed still fails closed (AttestationError is
+        not tolerated)."""
+        h = self._health_for(p)
+        h.rechannels += 1
+        with p.rpc_lock:  # never re-key mid-roundtrip of another round
+            self._establish_channel(p)
+        try:
+            h.attempts += 1
+            return self._roundtrip(p, tokens_for)
+        except _TOLERATED_FAULTS as e:
+            h.record_fault(e)
+            return None
+
+    def _exchange(self, p, tokens_for, t0: float) -> dict | None:
+        """One resilient provider exchange: breaker gate, bounded retries
+        with exponential backoff (the backoff budget comes OUT of the
+        remaining ``deadline_s``), channel self-heal on IntegrityError.
+        Returns the response dict, or None when the provider failed the
+        whole round (tolerated — quorum decides downstream).  With
+        ``retry=None`` and ``breaker=None`` this is exactly one
+        ``_roundtrip`` plus fault accounting — the legacy path."""
+        h = self._health_for(p)
+        br = h.breaker
+        if br is not None and not br.allow():
+            h.skips += 1
+            return None
+        attempts = self.retry.max_attempts if self.retry is not None else 1
+        resp = None
+        for attempt in range(attempts):
+            if attempt:
+                backoff = self.retry.backoff(attempt)
+                if self.deadline_s is not None:
+                    remaining = self.deadline_s - (time.monotonic() - t0)
+                    if remaining <= backoff:
+                        break  # SLO cannot afford another attempt
+                h.retries += 1
+                if backoff:
+                    time.sleep(backoff)
+            h.attempts += 1
+            try:
+                resp = self._roundtrip(p, tokens_for)
+            except IntegrityError as e:
+                h.record_fault(e)
+                resp = self._heal_channel(p, tokens_for)
+                if resp is not None:
+                    break
+            except _TOLERATED_FAULTS as e:
+                h.record_fault(e)
+            else:
+                break
+        if resp is None:
+            if br is not None:
+                br.record_failure()  # one failure per failed ROUND
+            return None
+        if br is not None:
+            br.record_success()
+        h.successes += 1
+        return resp
+
+    def federation_stats(self) -> dict:
+        """Per-provider health ledger + federation totals: attempts,
+        retries, breaker state/trips, faults by type, skip/quarantine
+        counts — and, for fault-injection harness runs, the wrapper's
+        injected-fault counters so a benchmark can reconcile every
+        injected fault against an observed one."""
+        per: dict[int, dict] = {}
+        for p in self.providers:
+            d = self._health_for(p).as_dict()
+            injected = getattr(p, "faults", None)
+            if isinstance(injected, dict):
+                d["injected"] = dict(injected)
+            per[int(p.provider_id)] = d
+        totals = {
+            k: sum(d[k] for d in per.values())
+            for k in ("attempts", "successes", "retries", "skips", "rechannels",
+                      "quarantined", "dropped_chunks")
+        }
+        totals["faults"] = {
+            k: sum(d["faults"][k] for d in per.values())
+            for k in ("conn", "timeout", "integrity")
+        }
+        totals["breakers_open"] = sum(
+            1 for d in per.values() if d["breaker"] not in (None, "closed")
+        )
+        if self.score_gate is not None:
+            totals["score_gate"] = self.score_gate.snapshot()
+        return {"providers": per, "totals": totals}
 
     def _use_concurrent(self, providers) -> bool:
         """Transport-aware dispatch policy: fan out when overlap can pay
@@ -147,15 +291,16 @@ class Orchestrator:
     def _collect_sequential(self, providers, tokens_for, t0: float) -> list[dict]:
         """Sequential loop — the in-process fast path and the determinism
         baseline (``concurrent_collect=False``): latency is the SUM of
-        provider round-trips and the deadline only fires between calls."""
+        provider round-trips and the deadline only fires between calls.
+        Per-provider faults (dead link, timeout, tampered payload) are
+        absorbed by ``_exchange`` and left to the quorum check."""
         responses = []
         for p in providers:
             if self.deadline_s is not None and time.monotonic() - t0 > self.deadline_s:
                 break  # deadline: proceed with what we have (k_n <= k)
-            try:
-                responses.append(self._roundtrip(p, tokens_for))
-            except (ConnectionError, TimeoutError):
-                continue  # straggler/failed provider: tolerated by quorum
+            resp = self._exchange(p, tokens_for, t0)
+            if resp is not None:
+                responses.append(resp)
         return self._quorum_check(responses)
 
     def _collect_concurrent(self, providers, tokens_for, t0: float) -> list[dict]:
@@ -179,9 +324,9 @@ class Orchestrator:
         def worker(i, p):
             resp = None
             try:
-                resp = self._roundtrip(p, tokens_for)
-            except (ConnectionError, TimeoutError):
-                pass  # failed provider: tolerated by quorum
+                # expected faults (dead link, timeout, tampered payload)
+                # are absorbed inside _exchange -> None; quorum decides
+                resp = self._exchange(p, tokens_for, t0)
             except BaseException as e:  # real bugs must surface, not vanish
                 with cond:
                     unexpected.append(e)
@@ -252,8 +397,47 @@ class Orchestrator:
 
         return self._collect(self.providers, tokens_for)
 
+    def _gate_responses(self, responses: list[dict]) -> tuple[list[dict], dict | None]:
+        """Aggregator-side poisoning gate (opt-in, ``score_gate``): each
+        provider's round is z-checked against that provider's OWN running
+        score distribution — anomalous rounds are quarantined (their
+        chunks never reach ranking), surviving scores are calibrated to
+        per-provider z-scores so incompatible embedding spaces become
+        comparable.  Returns (kept responses, provenance meta).  If the
+        gate would quarantine EVERY provider the raw rounds are kept
+        instead: the defense assumes an honest majority, and dropping
+        the whole federation on a global distribution shift would turn
+        the gate itself into a denial of service."""
+        if self.score_gate is None or not responses:
+            return responses, None
+        kept, quarantined = [], []
+        for r in responses:
+            pid = int(r["provider"])
+            keep, calibrated = self.score_gate.admit(pid, r["scores"])
+            if keep:
+                r = dict(r)
+                r["scores"] = calibrated
+                kept.append(r)
+            else:
+                quarantined.append((pid, int(np.asarray(r["chunk_ids"]).size)))
+        if not kept:
+            return responses, {"quarantined": [], "calibrated": False}
+        for pid, n_chunks in quarantined:
+            h = self._health.get(pid)
+            if h is not None:
+                h.quarantined += 1
+                h.dropped_chunks += n_chunks
+        return kept, {
+            "quarantined": [pid for pid, _ in quarantined],
+            "calibrated": True,
+        }
+
     def aggregate(self, query_text: str, responses: list[dict]) -> dict:
-        """Step 4: in-enclave context aggregation (global re-rank)."""
+        """Step 4: in-enclave context aggregation (global re-rank).  With
+        a ``score_gate``, poisoned/outlier provider rounds are quarantined
+        first and surviving scores calibrated; the context dict carries
+        the provenance (``providers`` per chunk + ``gated`` round meta)."""
+        responses, gated = self._gate_responses(responses)
         all_tokens = np.concatenate([r["chunk_tokens"] for r in responses], 0)
         all_ids = np.concatenate([r["chunk_ids"] for r in responses], 0)
         all_scores = np.concatenate([r["scores"] for r in responses], 0)
@@ -267,18 +451,22 @@ class Orchestrator:
             rank_scores = all_scores
         n = min(self.n_global, len(all_ids))
         order = np.argsort(-rank_scores)[:n]
-        return {
+        out = {
             "chunk_tokens": all_tokens[order],
             "chunk_ids": all_ids[order],
             "scores": rank_scores[order],
             "providers": providers[order],
             "n_candidates": len(all_ids),
         }
+        if gated is not None:
+            out["gated"] = gated
+        return out
 
     def aggregate_batch(self, queries: Sequence[str], responses: list[dict]) -> list[dict]:
         """Step 4 over a batch: one re-rank pass over the (B, C, S)
         candidate block when the reranker supports batching, else per-row.
         Produces per-query context dicts identical to ``aggregate``."""
+        responses, gated = self._gate_responses(responses)
         all_tokens = np.concatenate([r["chunk_tokens"] for r in responses], 1)  # (B, C, S)
         all_ids = np.concatenate([r["chunk_ids"] for r in responses], 1)  # (B, C)
         all_scores = np.concatenate([r["scores"] for r in responses], 1)
@@ -303,15 +491,16 @@ class Orchestrator:
         outs = []
         for b in range(len(queries)):
             order = np.argsort(-rank_scores[b])[:n]
-            outs.append(
-                {
-                    "chunk_tokens": all_tokens[b][order],
-                    "chunk_ids": all_ids[b][order],
-                    "scores": rank_scores[b][order],
-                    "providers": providers[b][order],
-                    "n_candidates": all_ids.shape[1],
-                }
-            )
+            ctx = {
+                "chunk_tokens": all_tokens[b][order],
+                "chunk_ids": all_ids[b][order],
+                "scores": rank_scores[b][order],
+                "providers": providers[b][order],
+                "n_candidates": all_ids.shape[1],
+            }
+            if gated is not None:
+                ctx["gated"] = gated
+            outs.append(ctx)
         return outs
 
     def build_prompt(self, query_text: str, context: dict, max_len: int = 512) -> np.ndarray:

@@ -19,6 +19,14 @@ import numpy as np
 from repro.core.filters import MaxChunksFilter, ProvenanceStripFilter
 from repro.core.orchestrator import Orchestrator
 from repro.core.provider import DataProvider
+from repro.core.resilience import (
+    BreakerPolicy,
+    FaultSpec,
+    FaultyProvider,
+    QuorumNotMet,
+    RetryPolicy,
+    ScoreGate,
+)
 from repro.data.corpus import FederatedCorpus
 from repro.data.embeddings import bag_embed
 from repro.data.tokenizer import HashTokenizer
@@ -36,6 +44,14 @@ class CFedRAGConfig:
     deadline_s: float | None = None  # wall-clock collect cutoff (Alg. 1 k_n <= k)
     concurrent_collect: bool | None = None  # None -> auto (transport-aware)
     use_pallas: bool = False
+    # federation resilience (core/resilience.py); defaults keep the
+    # legacy bit-identical single-shot path
+    retries: int = 1  # collect attempts per provider per round (1 = off)
+    retry_backoff_s: float = 0.02  # base of the exponential backoff
+    breaker: bool = False  # per-provider circuit breakers
+    breaker_threshold: int = 2  # consecutive failed rounds to open
+    breaker_cooldown_s: float = 1.0  # open -> half-open probe delay
+    score_gate: bool = False  # aggregator-side poisoning gate
 
 
 def _serve_result(req, prompt, context, n_providers: int, answer=None) -> dict:
@@ -55,6 +71,22 @@ def _serve_result(req, prompt, context, n_providers: int, answer=None) -> dict:
     return out
 
 
+def _degraded_result(err: QuorumNotMet) -> dict:
+    """Per-query result for a micro-batch whose collect missed quorum:
+    flagged degraded (mirroring the ``truncated`` convention — degraded,
+    never silent, never fatal to the rest of the stream) instead of
+    propagating the exception and killing every other micro-batch."""
+    return {
+        "context": None,
+        "n_providers": err.arrived,
+        "prompt": None,
+        "status": "degraded",
+        "degraded": True,
+        "error": str(err),
+        "latency_s": None,
+    }
+
+
 class CFedRAGSystem:
     def __init__(
         self,
@@ -64,6 +96,7 @@ class CFedRAGSystem:
         embed_fn: Callable | None = None,
         reranker: Callable | None = None,
         generator: Callable | None = None,
+        fault_spec: FaultSpec | None = None,
     ):
         self.cfg = cfg or CFedRAGConfig()
         self.corpus = corpus
@@ -89,6 +122,11 @@ class CFedRAGSystem:
         ]
         for p in self.providers:
             p.build_index()
+        if fault_spec is not None:
+            # the fault-injection harness wraps every provider; the
+            # wrapper proxies everything but handle_request, so the
+            # orchestrator (channels, rpc_lock, delay_s) is none the wiser
+            self.providers = [FaultyProvider(p, fault_spec) for p in self.providers]
         self.orchestrator = Orchestrator(
             self.providers,
             self.tok,
@@ -100,6 +138,18 @@ class CFedRAGSystem:
             quorum=self.cfg.quorum,
             deadline_s=self.cfg.deadline_s,
             concurrent_collect=self.cfg.concurrent_collect,
+            retry=RetryPolicy(
+                max_attempts=self.cfg.retries, backoff_s=self.cfg.retry_backoff_s
+            )
+            if self.cfg.retries > 1
+            else None,
+            breaker=BreakerPolicy(
+                fail_threshold=self.cfg.breaker_threshold,
+                cooldown_s=self.cfg.breaker_cooldown_s,
+            )
+            if self.cfg.breaker
+            else None,
+            score_gate=ScoreGate() if self.cfg.score_gate else None,
         )
 
     # ---- serving entry points ----
@@ -132,10 +182,18 @@ class CFedRAGSystem:
         if orch.generator is None or engine is None or not continuous:
             # no engine-backed generator (or a lockstep determinism
             # baseline was wired in): keep answer_batch semantics
-            return self.answer_batch(queries)
+            try:
+                return self.answer_batch(queries)
+            except QuorumNotMet as e:
+                self.last_serve_stats = {"federation": orch.federation_stats()}
+                return [_degraded_result(e) for _ in queries]
         from repro.serving.scheduler import Scheduler
 
-        responses = orch.collect_contexts_batch(queries)
+        try:
+            responses = orch.collect_contexts_batch(queries)
+        except QuorumNotMet as e:
+            self.last_serve_stats = {"federation": orch.federation_stats()}
+            return [_degraded_result(e) for _ in queries]
         contexts = orch.aggregate_batch(queries, responses)
         # build prompts at the engine's true window so grammar-aware
         # truncation happens here — the engine's blind tail-slice to
@@ -152,8 +210,10 @@ class CFedRAGSystem:
         rids = sched.submit_many(prompts, max_new_tokens, gen_deadline_s)
         answers = engine.serve(sched)
         # latency percentiles + engine occupancy gauges (free slots / free
-        # KV blocks) for callers that report memory headroom
+        # KV blocks) + the federation health ledger for callers that
+        # report memory headroom / provider health
         self.last_serve_stats = sched.latency_stats()
+        self.last_serve_stats["federation"] = orch.federation_stats()
         return [
             _serve_result(sched.results[rid], prompt, ctx, len(responses), answers.get(rid))
             for rid, prompt, ctx in zip(rids, prompts, contexts)
@@ -207,6 +267,7 @@ class CFedRAGSystem:
         width = engine.scfg.max_prompt_len
         sched = Scheduler()
         info: dict[int, tuple] = {}  # qidx -> (prompt, context, n_providers)
+        degraded: dict[int, dict] = {}  # qidx -> quorum-degraded result
         collect_err: list[BaseException] = []
         stop = threading.Event()  # consumer-gone signal for the collector
 
@@ -228,7 +289,13 @@ class CFedRAGSystem:
                         return
                     chunk = queries[start : start + collect_batch]
                     t0 = time.monotonic()
-                    responses = orch.collect_contexts_batch(chunk)
+                    try:
+                        responses = orch.collect_contexts_batch(chunk)
+                    except QuorumNotMet as e:
+                        # this micro-batch degrades; the stream survives
+                        for j in range(len(chunk)):
+                            degraded[start + j] = _degraded_result(e)
+                        continue
                     contexts = orch.aggregate_batch(chunk, responses)
                     prompts = [
                         orch.build_prompt(q, c, max_len=width)
@@ -268,12 +335,18 @@ class CFedRAGSystem:
                 prompt, context, n_providers = info.pop(req.tag)
                 req.tokens = None
                 yield req.tag, _serve_result(req, prompt, context, n_providers)
+            # quorum-degraded micro-batches were never submitted either;
+            # their flagged results complete the one-result-per-query
+            # contract (mirrors the expired convention above)
+            for qidx in sorted(degraded):
+                yield qidx, degraded[qidx]
         finally:
             # an abandoned stream must not leave the collector blocked on
             # backpressure: signal it down, then wait it out
             stop.set()
             producer.join()
             self.last_serve_stats = sched.latency_stats()
+            self.last_serve_stats["federation"] = orch.federation_stats()
         if collect_err:
             raise collect_err[0]
 

@@ -8,6 +8,13 @@ chunks never leave except as filtered, AEAD-sealed responses to an
 attested orchestrator.  Providers never talk to each other and never
 receive inbound connections except via the orchestrator channel (paper
 §4.1).
+
+The ``fail`` flag is the blunt always-down switch (kept for the quorum
+tests and the ``--kill-provider`` CLI); the full fault taxonomy —
+seeded connection failures, timeouts, jitter, payload corruption,
+replayed nonces, poisoned scores — lives in
+``core.resilience.FaultyProvider``, which wraps a provider without it
+noticing.
 """
 from __future__ import annotations
 

@@ -18,6 +18,7 @@ import argparse
 import numpy as np
 
 from repro.core.pipeline import CFedRAGConfig, CFedRAGSystem
+from repro.core.resilience import FaultSpec
 from repro.data.corpus import make_federated_corpus
 from repro.data.embeddings import bag_embed
 from repro.data.tokenizer import HashTokenizer
@@ -129,9 +130,31 @@ def main(argv=None):
         "skip their prefill (implies --paged --generate)",
     )
     ap.add_argument(
-        "--retries", type=int, default=1,
+        "--repeat", type=int, default=1,
         help="serve the query set N times (the repeat/retry traffic a "
         "prefix cache de-duplicates; watch the hit-rate gauge climb)",
+    )
+    ap.add_argument(
+        "--fault-spec", type=str, default=None, metavar="JSON",
+        help='seeded fault injection on every provider, e.g. '
+        '\'{"seed": 0, "p_conn": 0.1, "p_corrupt": 0.05, "p_poison": 0.05}\' '
+        "(see core.resilience.FaultSpec for the full taxonomy)",
+    )
+    ap.add_argument(
+        "--retries", type=int, default=1,
+        help="collect attempts per provider per round (exponential "
+        "backoff, budget deducted from --deadline-s; 1 = off)",
+    )
+    ap.add_argument(
+        "--breaker", action=argparse.BooleanOptionalAction, default=False,
+        help="per-provider circuit breakers: a provider that fails "
+        "consecutive rounds is skipped (no round-trip cost) until a "
+        "cooldown expires (--no-breaker to force off)",
+    )
+    ap.add_argument(
+        "--score-gate", action="store_true",
+        help="aggregator-side poisoning gate: per-provider score "
+        "calibration + outlier-round quarantine",
     )
     args = ap.parse_args(argv)
     if args.prefix_cache:
@@ -149,7 +172,11 @@ def main(argv=None):
             n_global=args.n_global,
             deadline_s=args.deadline_s,
             concurrent_collect=False if args.sequential_collect else None,
+            retries=args.retries,
+            breaker=args.breaker,
+            score_gate=args.score_gate,
         ),
+        fault_spec=FaultSpec.from_json(args.fault_spec) if args.fault_spec else None,
         tokenizer=tok,
         reranker=overlap_reranker(tok) if args.aggregation == "rerank" else None,
         generator=make_demo_engine(
@@ -164,11 +191,11 @@ def main(argv=None):
 
     texts = [q.text for q in corpus.queries[: args.queries]]
     qmeta = list(corpus.queries[: args.queries])
-    if args.retries > 1:
+    if args.repeat > 1:
         # whole-list repeats: round 2+ re-serves every query, so each
         # prompt's context preamble is a guaranteed prefix-cache hit
-        texts = texts * args.retries
-        qmeta = qmeta * args.retries
+        texts = texts * args.repeat
+        qmeta = qmeta * args.repeat
     if args.generate:
         # warm the engine's jit paths (admit/decode-chunk) so the printed
         # per-request p50/p95 reflect serving latency, not compilation
@@ -202,6 +229,12 @@ def main(argv=None):
     else:
         results = [sys_.orchestrator.answer(t) for t in texts]
     for q, res in zip(qmeta, results):
+        if res.get("degraded"):
+            print(
+                f"Q: {q.text!r:45s} DEGRADED ({res['error']}) — "
+                "flagged result, stream/batch kept serving"
+            )
+            continue
         ids = list(res["context"]["chunk_ids"])
         hit = q.gold_chunk_id in ids
         extra = ""
@@ -241,6 +274,29 @@ def main(argv=None):
                 f"{st['prefix_shared_blocks']} blocks shared by reference, "
                 f"{st['prefix_cached_blocks']} chunks cached "
                 f"({st.get('reclaimable_blocks', 0)} reclaimable)"
+            )
+    fed = sys_.orchestrator.federation_stats()
+    tot = fed["totals"]
+    if tot["attempts"]:
+        print(
+            f"federation: {tot['successes']}/{tot['attempts']} round-trips ok, "
+            f"{tot['retries']} retries, {tot['skips']} breaker skips "
+            f"({tot['breakers_open']} breakers open), "
+            f"{tot['rechannels']} channel re-establishes, "
+            f"faults conn={tot['faults']['conn']} timeout={tot['faults']['timeout']} "
+            f"integrity={tot['faults']['integrity']}, "
+            f"{tot['quarantined']} rounds quarantined by the score gate"
+        )
+        flaky = {
+            pid: d for pid, d in fed["providers"].items()
+            if d["attempts"] != d["successes"] or d["skips"] or d["quarantined"]
+        }
+        for pid, d in sorted(flaky.items()):
+            print(
+                f"  provider {pid}: {d['successes']}/{d['attempts']} ok, "
+                f"{d['retries']} retries, {d['skips']} skips, "
+                f"breaker={d['breaker'] or 'off'}, faults={d['faults']}"
+                + (f", injected={d['injected']}" if "injected" in d else "")
             )
     stats = sys_.eval_retrieval(args.queries)
     print(f"\nrecall@{args.n_global}: {stats['recall_at_n']:.3f}  mrr: {stats['mrr']:.3f}")

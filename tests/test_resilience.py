@@ -1,0 +1,531 @@
+"""Federation resilience layer (core/resilience.py).
+
+Covers the hardened collect path end to end:
+
+  * bit-parity overlay invariant — FaultyProvider wrappers at zero rates
+    with retries/breaker/gate off produce collect results identical to
+    the plain system (resilience must be pure overlay)
+  * deterministic fault injection — same seed, same schedule, and every
+    injected fault reconciles against an observed one in the health
+    ledger (injected conn/timeout == observed; corrupt+replay ==
+    observed integrity)
+  * IntegrityError tolerance in BOTH dispatchers (the satellite-1
+    regression: a tampering provider must cost only itself, not the
+    round) + channel self-heal after transient corruption and after a
+    provider-side re-key (sequence desync)
+  * retry/backoff recovery and the deadline-budget guard
+  * circuit breaker unit transitions (fake clock) and system-level
+    skip/recovery of a dead provider
+  * typed QuorumNotMet + degraded (never fatal) serve / serve_stream
+  * ScoreGate: onset poisoning quarantined with provenance tags,
+    honest-majority fallback when every provider looks poisoned
+  * confidential-channel failure modes through handle_request ->
+    concurrent _collect: replayed nonce, truncated ciphertext, flipped
+    tag bytes
+"""
+import time
+
+import numpy as np
+import pytest
+
+from _fake_lm import make_fake_engine
+from repro.core.confidential import SecureChannel
+from repro.core.pipeline import CFedRAGConfig, CFedRAGSystem
+from repro.core.resilience import (
+    BreakerPolicy,
+    CircuitBreaker,
+    FaultSpec,
+    FaultyProvider,
+    QuorumNotMet,
+    RetryPolicy,
+    ScoreGate,
+)
+from repro.data.corpus import make_federated_corpus
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_federated_corpus(n_facts=48, n_distractors=48, n_queries=8, seed=5)
+
+
+def build_system(corpus, fault_spec=None, **cfg_kw):
+    kw = dict(
+        split_by="corpus",  # 4 providers
+        aggregation="embedding_rank",
+        m_local=4,
+        n_global=4,
+        chunk_max_len=16,
+    )
+    kw.update(cfg_kw)
+    return CFedRAGSystem(corpus, CFedRAGConfig(**kw), fault_spec=fault_spec)
+
+
+# ------------------------------------------------------------------ #
+# FaultSpec / policy units
+# ------------------------------------------------------------------ #
+def test_fault_spec_validation_and_json():
+    spec = FaultSpec.from_json('{"seed": 3, "p_conn": 0.1, "p_corrupt": 0.05}')
+    assert spec.seed == 3 and spec.p_conn == 0.1 and spec.p_corrupt == 0.05
+    assert spec.total_rate == pytest.approx(0.15)
+    with pytest.raises(ValueError, match="unknown"):
+        FaultSpec.from_json('{"p_oops": 0.1}')
+    with pytest.raises(ValueError, match="> 1"):
+        FaultSpec(p_conn=0.7, p_timeout=0.7)
+
+
+def test_retry_policy_backoff_is_exponential():
+    r = RetryPolicy(max_attempts=4, backoff_s=0.01, backoff_mult=3.0)
+    assert r.backoff(1) == pytest.approx(0.01)
+    assert r.backoff(2) == pytest.approx(0.03)
+    assert r.backoff(3) == pytest.approx(0.09)
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+
+
+def test_circuit_breaker_state_machine():
+    clk = [0.0]
+    br = CircuitBreaker(
+        BreakerPolicy(fail_threshold=2, cooldown_s=10.0), clock=lambda: clk[0]
+    )
+    assert br.state == "closed" and br.allow()
+    br.record_failure()
+    assert br.state == "closed" and br.allow(), "one failure below threshold"
+    br.record_failure()
+    assert br.state == "open" and br.trips == 1
+    assert not br.allow(), "open: requests skipped during cooldown"
+    clk[0] = 10.0
+    assert br.state == "half-open"
+    assert br.allow(), "cooldown elapsed: one probe admitted"
+    assert not br.allow(), "only a single half-open probe may be in flight"
+    br.record_failure()
+    assert br.state == "open" and br.trips == 2, "failed probe re-opens"
+    clk[0] = 20.0
+    assert br.allow()
+    br.record_success()
+    assert br.state == "closed" and br.allow() and br.allow()
+
+
+def test_score_gate_unit_quarantine_and_history_hygiene():
+    gate = ScoreGate(z_max=4.0, min_history=8)
+    rng = np.random.default_rng(0)
+    base = rng.normal(0.5, 0.1, size=8).astype(np.float32)
+    keep, out = gate.admit(0, base)
+    assert keep and np.array_equal(out, base), "cold start ranks raw scores"
+    n_before = gate.snapshot()[0]["n"]
+    keep, _ = gate.admit(0, base + np.float32(50.0))
+    assert not keep, "outlier round quarantined once history is warm"
+    assert gate.snapshot()[0]["n"] == n_before, "poison never folds into history"
+    keep, out = gate.admit(0, base)
+    assert keep, "honest scores still admitted after the attack"
+    assert not np.array_equal(out, base), "warm history: scores are calibrated"
+
+
+# ------------------------------------------------------------------ #
+# bit-parity overlay invariant
+# ------------------------------------------------------------------ #
+def test_bit_parity_with_overlay_off(corpus):
+    """FaultyProvider wrappers at zero rates + retries off + gate off:
+    collect/aggregate results are bit-identical to the plain system."""
+    texts = [q.text for q in corpus.queries[:4]]
+    plain = build_system(corpus)
+    wrapped = build_system(corpus, fault_spec=FaultSpec(seed=0))
+    assert all(isinstance(p, FaultyProvider) for p in wrapped.providers)
+    for conc in (False, True):
+        plain.orchestrator.concurrent_collect = conc
+        wrapped.orchestrator.concurrent_collect = conc
+        ra = plain.orchestrator.collect_contexts_batch(texts)
+        rb = wrapped.orchestrator.collect_contexts_batch(texts)
+        assert len(ra) == len(rb) == 4
+        for a, b in zip(ra, rb):
+            for k in ("provider", "scores", "chunk_ids", "chunk_tokens"):
+                assert np.array_equal(a[k], b[k]), (conc, k)
+        ca = plain.orchestrator.aggregate_batch(texts, ra)
+        cb = wrapped.orchestrator.aggregate_batch(texts, rb)
+        for a, b in zip(ca, cb):
+            assert "gated" not in a and "gated" not in b
+            for k in ("chunk_ids", "scores", "providers"):
+                assert np.array_equal(a[k], b[k])
+    assert all(f == 0 for p in wrapped.providers for f in p.faults.values())
+
+
+# ------------------------------------------------------------------ #
+# deterministic injection + accounting
+# ------------------------------------------------------------------ #
+MIXED = FaultSpec(
+    seed=7, p_conn=0.2, p_timeout=0.1, p_corrupt=0.1, p_replay=0.1, p_poison=0.05
+)
+
+
+def _run_rounds(sys_, texts, rounds):
+    absorbed = 0
+    for i in range(rounds):
+        try:
+            sys_.orchestrator.collect_contexts(texts[i % len(texts)])
+        except QuorumNotMet:
+            absorbed += 1
+    return absorbed
+
+
+def test_fault_schedule_is_deterministic(corpus):
+    texts = [q.text for q in corpus.queries]
+    runs = []
+    for _ in range(2):
+        sys_ = build_system(corpus, fault_spec=MIXED, quorum=1, retries=2,
+                            retry_backoff_s=0.0)
+        _run_rounds(sys_, texts, 8)
+        runs.append([dict(p.faults) for p in sys_.orchestrator.providers])
+    assert runs[0] == runs[1], "same seed must reproduce the fault schedule"
+    assert sum(sum(f.values()) for f in runs[0]) > 0, "schedule actually fired"
+
+
+@pytest.mark.parametrize("conc", [False, True])
+def test_every_injected_fault_is_accounted(corpus, conc):
+    """No deadline, so every worker finishes: the orchestrator's observed
+    fault ledger must reconcile exactly against the wrapper's injected
+    counters, and attempts == successes + faults."""
+    texts = [q.text for q in corpus.queries]
+    sys_ = build_system(corpus, fault_spec=MIXED, quorum=1, retries=2,
+                        retry_backoff_s=0.0, concurrent_collect=conc)
+    _run_rounds(sys_, texts, 10)
+    stats = sys_.orchestrator.federation_stats()
+    fired = 0
+    for p in sys_.orchestrator.providers:
+        d = stats["providers"][int(p.provider_id)]
+        inj, obs = d["injected"], d["faults"]
+        assert inj == dict(p.faults)
+        assert obs["conn"] == inj["conn"]
+        assert obs["timeout"] == inj["timeout"]
+        assert obs["integrity"] == inj["corrupt"] + inj["replay"]
+        assert d["attempts"] == d["successes"] + sum(obs.values())
+        fired += sum(inj.values())
+    assert fired > 0, "mixed spec must actually inject faults over 10 rounds"
+    tot = stats["totals"]
+    assert tot["attempts"] == sum(
+        d["attempts"] for d in stats["providers"].values()
+    )
+
+
+# ------------------------------------------------------------------ #
+# IntegrityError tolerance + channel self-heal (satellite 1)
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("conc", [False, True])
+def test_corrupting_provider_absorbed_by_quorum(corpus, conc):
+    """A provider whose sealed payloads always arrive tampered fails only
+    itself: both dispatchers must return the other providers' responses
+    and count the IntegrityErrors per provider."""
+    sys_ = build_system(corpus, quorum=1, concurrent_collect=conc)
+    orch = sys_.orchestrator
+    orch.providers[1] = FaultyProvider(
+        orch.providers[1], FaultSpec(seed=0, p_corrupt=1.0)
+    )
+    text = corpus.queries[0].text
+    responses = orch.collect_contexts(text)
+    assert sorted(int(r["provider"]) for r in responses) == [0, 2, 3]
+    h = orch.federation_stats()["providers"][1]
+    # first exchange corrupts, the one-shot heal retry corrupts again
+    assert h["faults"]["integrity"] == 2
+    assert h["rechannels"] == 1
+    assert h["successes"] == 0
+
+
+def test_channel_self_heal_recovers_one_shot_corruption(corpus):
+    """One tampered response: the orchestrator re-attests, re-establishes
+    the channel, and retries within the SAME round — no provider lost."""
+    sys_ = build_system(corpus, quorum=1, concurrent_collect=True)
+    orch = sys_.orchestrator
+    p = orch.providers[2]
+    orig = p.handle_request
+    state = {"fired": False}
+
+    def corrupt_once(nonce, sealed):
+        r_nonce, r_sealed = orig(nonce, sealed)
+        if not state["fired"]:
+            state["fired"] = True
+            tampered = bytearray(r_sealed)
+            tampered[len(tampered) // 2] ^= 0xFF
+            return r_nonce, bytes(tampered)
+        return r_nonce, r_sealed
+
+    p.handle_request = corrupt_once
+    responses = orch.collect_contexts(corpus.queries[0].text)
+    assert sorted(int(r["provider"]) for r in responses) == [0, 1, 2, 3]
+    h = orch.federation_stats()["providers"][2]
+    assert h["rechannels"] == 1
+    assert h["faults"]["integrity"] == 1
+    assert h["successes"] == 1
+
+
+def test_channel_self_heal_after_provider_rekey(corpus):
+    """A provider that restarted (fresh channel, sequence numbers reset)
+    answers with an already-seen nonce -> replay detection fires at the
+    orchestrator; the self-heal re-establishes BOTH directions and the
+    round succeeds."""
+    sys_ = build_system(corpus, quorum=1)
+    orch = sys_.orchestrator
+    assert len(orch.collect_contexts(corpus.queries[0].text)) == 4  # advance seqs
+    p = orch.providers[3]
+    p.channel = SecureChannel.establish(
+        p.enclave, orch.enclave, orch.enclave.measurement
+    )
+    responses = orch.collect_contexts(corpus.queries[1].text)
+    assert sorted(int(r["provider"]) for r in responses) == [0, 1, 2, 3]
+    h = orch.federation_stats()["providers"][3]
+    assert h["rechannels"] == 1
+    assert h["faults"]["integrity"] == 1
+
+
+# ------------------------------------------------------------------ #
+# retry / deadline budget
+# ------------------------------------------------------------------ #
+def test_retry_recovers_transiently_failing_provider(corpus):
+    """A provider whose link drops every other request: with retries the
+    round always completes with all 4 providers; without, it cannot."""
+    sys_ = build_system(corpus, quorum=1, retries=2, retry_backoff_s=0.001)
+    orch = sys_.orchestrator
+    p = orch.providers[0]
+    orig = p.handle_request
+    calls = {"n": 0}
+
+    def flaky(nonce, sealed):
+        calls["n"] += 1
+        if calls["n"] % 2 == 1:
+            raise ConnectionError("transient link drop")
+        return orig(nonce, sealed)
+
+    p.handle_request = flaky
+    for q in corpus.queries[:3]:
+        assert len(orch.collect_contexts(q.text)) == 4
+    h = orch.federation_stats()["providers"][0]
+    assert h["retries"] == 3 and h["faults"]["conn"] == 3
+    assert h["successes"] == 3 and h["attempts"] == 6
+
+
+def test_retry_backoff_respects_deadline_budget(corpus):
+    """Backoff comes OUT of the remaining deadline: a 5s backoff against a
+    0.25s SLO must be skipped, not slept."""
+    sys_ = build_system(
+        corpus, quorum=1, retries=4, retry_backoff_s=5.0, deadline_s=0.25,
+        concurrent_collect=False,
+    )
+    orch = sys_.orchestrator
+    orch.providers[0].fail = True  # forwards to the inner provider
+    t0 = time.monotonic()
+    responses = orch.collect_contexts(corpus.queries[0].text)
+    assert time.monotonic() - t0 < 2.0, "must not sleep the 5s backoff"
+    assert sorted(int(r["provider"]) for r in responses) == [1, 2, 3]
+    h = orch.federation_stats()["providers"][0]
+    assert h["attempts"] == 1 and h["retries"] == 0
+
+
+# ------------------------------------------------------------------ #
+# circuit breaker in the collect path
+# ------------------------------------------------------------------ #
+def test_breaker_skips_dead_provider(corpus):
+    sys_ = build_system(
+        corpus, quorum=1, breaker=True, breaker_threshold=2,
+        breaker_cooldown_s=60.0,
+    )
+    orch = sys_.orchestrator
+    dead = orch.providers[0]
+    dead.fail = True
+    for q in corpus.queries[:5]:
+        assert len(orch.collect_contexts(q.text)) == 3
+    stats = orch.federation_stats()
+    h = stats["providers"][0]
+    assert h["attempts"] == 2, "threshold=2: two failed rounds, then open"
+    assert h["skips"] == 3, "remaining rounds skipped without a round-trip"
+    assert h["breaker"] == "open" and h["breaker_trips"] == 1
+    assert dead.n_requests == 2, "skipped rounds never reach the provider"
+    assert stats["totals"]["breakers_open"] == 1
+
+
+def test_breaker_half_open_probe_recovers(corpus):
+    """cooldown 0: every post-trip round is a half-open probe; once the
+    provider comes back the probe closes the breaker and the provider
+    rejoins the federation."""
+    sys_ = build_system(
+        corpus, quorum=1, breaker=True, breaker_threshold=2,
+        breaker_cooldown_s=0.0,
+    )
+    orch = sys_.orchestrator
+    p = orch.providers[0]
+    p.fail = True
+    for q in corpus.queries[:3]:  # 2 to trip + 1 failed probe
+        orch.collect_contexts(q.text)
+    br = orch.federation_stats()["providers"][0]
+    assert br["breaker_trips"] == 2, "failed half-open probe re-opens"
+    p.fail = False
+    responses = orch.collect_contexts(corpus.queries[3].text)
+    assert sorted(int(r["provider"]) for r in responses) == [0, 1, 2, 3]
+    h = orch.federation_stats()["providers"][0]
+    assert h["breaker"] == "closed" and h["successes"] == 1
+
+
+# ------------------------------------------------------------------ #
+# typed quorum failure + degraded serving
+# ------------------------------------------------------------------ #
+def test_quorum_not_met_is_typed_and_backward_compatible(corpus):
+    sys_ = build_system(corpus, quorum=3)
+    orch = sys_.orchestrator
+    orch.providers[0].fail = True
+    orch.providers[1].fail = True
+    with pytest.raises(QuorumNotMet) as ei:
+        orch.collect_contexts(corpus.queries[0].text)
+    assert ei.value.arrived == 2 and ei.value.required == 3
+    # legacy call sites catch RuntimeError with match="quorum"
+    with pytest.raises(RuntimeError, match="quorum"):
+        orch.collect_contexts(corpus.queries[0].text)
+
+
+def test_serve_returns_degraded_results_on_quorum_failure(corpus):
+    """serve never dies on quorum: every query gets a flagged degraded
+    result (mirroring the ``truncated`` convention) and the federation
+    ledger lands in last_serve_stats."""
+    sys_ = build_system(corpus, quorum=4)
+    for p in sys_.orchestrator.providers:
+        p.fail = True
+    texts = [q.text for q in corpus.queries[:3]]
+    results = sys_.serve(texts)
+    assert len(results) == 3
+    for res in results:
+        assert res["status"] == "degraded" and res["degraded"] is True
+        assert res["n_providers"] == 0 and res["context"] is None
+        assert "quorum" in res["error"]
+    fed = sys_.last_serve_stats["federation"]
+    assert fed["totals"]["faults"]["conn"] == 4
+    # the raw batched API keeps raising: degradation is a serving-layer choice
+    with pytest.raises(QuorumNotMet):
+        sys_.answer_batch(texts)
+
+
+def test_serve_stream_degrades_per_microbatch(corpus, monkeypatch):
+    """Engine-backed stream: a micro-batch that misses quorum yields
+    flagged degraded results for ITS queries only — earlier micro-batches
+    decode and retire normally, one result per query either way."""
+    from repro.serving.engine import engine_generator
+
+    engine = make_fake_engine(monkeypatch, max_batch=2, max_new_tokens=4,
+                              sched_chunk=2)
+    sys_ = CFedRAGSystem(
+        corpus,
+        CFedRAGConfig(split_by="corpus", aggregation="embedding_rank",
+                      m_local=4, n_global=4, chunk_max_len=16, quorum=1),
+        generator=engine_generator(engine),
+    )
+    # every provider dies after its first (batched) request: micro-batch 1
+    # collects cleanly, micro-batch 2 arrives to a dead federation
+    for p in sys_.orchestrator.providers:
+        orig = p.handle_request
+        state = {"n": 0}
+
+        def die_after_first(nonce, sealed, _orig=orig, _s=state):
+            _s["n"] += 1
+            if _s["n"] > 1:
+                raise ConnectionError("provider went away")
+            return _orig(nonce, sealed)
+
+        p.handle_request = die_after_first
+    texts = [q.text for q in corpus.queries[:6]]
+    results = dict(sys_.serve_stream(texts, max_new_tokens=4, collect_batch=3))
+    assert sorted(results) == list(range(6)), "one result per query"
+    for qidx in (0, 1, 2):
+        assert results[qidx]["status"] == "done"
+        assert results[qidx]["n_providers"] == 4
+    for qidx in (3, 4, 5):
+        assert results[qidx]["status"] == "degraded"
+        assert results[qidx]["degraded"] is True and results[qidx]["context"] is None
+    assert sys_.last_serve_stats["federation"]["totals"]["faults"]["conn"] == 4
+
+
+# ------------------------------------------------------------------ #
+# poisoning gate in the aggregate path
+# ------------------------------------------------------------------ #
+def test_score_gate_quarantines_onset_poisoning(corpus):
+    """A provider honest long enough to build a baseline, then inflating
+    its scores: the round is quarantined, its chunks never reach the
+    context, and the provenance tags say so."""
+    sys_ = build_system(corpus, quorum=1, score_gate=True, m_local=8)
+    orch = sys_.orchestrator
+    warm = [q.text for q in corpus.queries[:2]]
+    for t in warm:  # 2 rounds x m_local=8 -> min_history=16 per provider
+        orch.aggregate(t, orch.collect_contexts(t))
+    orch.providers[1] = FaultyProvider(
+        orch.providers[1], FaultSpec(seed=0, p_poison=1.0, poison_scale=50.0)
+    )
+    text = corpus.queries[2].text
+    ctx = orch.aggregate(text, orch.collect_contexts(text))
+    assert ctx["gated"] == {"quarantined": [1], "calibrated": True}
+    assert 1 not in ctx["providers"], "poisoned chunks never reach the context"
+    stats = orch.federation_stats()
+    h = stats["providers"][1]
+    assert h["quarantined"] == 1 and h["dropped_chunks"] == 8
+    assert h["injected"]["poison"] == 1
+    assert stats["totals"]["score_gate"][1]["n"] == 16, "history unpolluted"
+
+
+def test_score_gate_honest_majority_fallback(corpus):
+    """If the gate would quarantine EVERY provider (global distribution
+    shift, not a minority attacker), raw rounds are kept: the defense
+    must not become its own denial of service."""
+    sys_ = build_system(corpus, quorum=1, score_gate=True, m_local=8)
+    orch = sys_.orchestrator
+    for t in (q.text for q in corpus.queries[:2]):
+        orch.aggregate(t, orch.collect_contexts(t))
+    orch.providers = [
+        FaultyProvider(p, FaultSpec(seed=0, p_poison=1.0)) for p in orch.providers
+    ]
+    text = corpus.queries[2].text
+    ctx = orch.aggregate(text, orch.collect_contexts(text))
+    assert ctx["gated"] == {"quarantined": [], "calibrated": False}
+    assert len(ctx["chunk_ids"]) > 0
+    stats = orch.federation_stats()
+    assert stats["totals"]["quarantined"] == 0, "fallback does not count drops"
+
+
+# ------------------------------------------------------------------ #
+# channel failure modes e2e (satellite 3): replayed nonce, truncated
+# ciphertext, flipped tag bytes -> handle_request -> concurrent collect
+# ------------------------------------------------------------------ #
+def test_channel_failure_modes_concurrent_collect(corpus):
+    sys_ = build_system(corpus, quorum=1, concurrent_collect=True)
+    orch = sys_.orchestrator
+
+    def patch(p, mutate):
+        orig = p.handle_request
+
+        def h(nonce, sealed, _orig=orig, _m=mutate):
+            return _m(*_orig(nonce, sealed))
+
+        p.handle_request = h
+
+    prev = {}
+
+    def replay(n, s):  # provider 1: always re-send the previous response
+        out = prev.get("r", (n, s))
+        prev["r"] = (n, s)
+        return out
+
+    patch(orch.providers[1], replay)
+    patch(orch.providers[2], lambda n, s: (n, s[: len(s) // 2]))  # truncated ct
+    patch(
+        orch.providers[3],
+        lambda n, s: (n, s[:-1] + bytes([s[-1] ^ 0xFF])),  # flipped tag byte
+    )
+    # round 1: provider 1 replays its own first response only on round 2+
+    r1 = orch.collect_contexts(corpus.queries[0].text)
+    assert sorted(int(r["provider"]) for r in r1) == [0, 1]
+    # round 2: the replayed round-1 nonce is behind the receive sequence
+    # -> IntegrityError; the self-heal resets sequence numbers, so the
+    # stale-but-authentic message verifies again and the round recovers
+    r2 = orch.collect_contexts(corpus.queries[1].text)
+    assert sorted(int(r["provider"]) for r in r2) == [0, 1]
+    stats = orch.federation_stats()
+    h1 = stats["providers"][1]
+    assert h1["faults"]["integrity"] == 1, "replayed nonce detected"
+    assert h1["rechannels"] == 1 and h1["successes"] == 2
+    # truncated/tampered providers fail initial + heal-retry every round
+    for pid in (2, 3):
+        h = stats["providers"][pid]
+        assert h["faults"]["integrity"] == 4 and h["rechannels"] == 2
+        assert h["successes"] == 0
+    assert stats["providers"][0]["successes"] == 2, "honest provider untouched"
