@@ -58,6 +58,12 @@ def main(argv=None) -> None:
         print(f"{name},{us:.1f},{derived}")
     e2e_rows += px_rows
 
+    print("\n== chunked prefill: decode tail under periodic long-prompt arrivals ==")
+    cp_rows = e2e_pipeline.run_mixed_prefill()
+    for name, us, derived in cp_rows:
+        print(f"{name},{us:.1f},{derived}")
+    e2e_rows += cp_rows
+
     print("\n== federation resilience under injected faults (breaker on/off) ==")
     from benchmarks import federation_faults
 

@@ -1,0 +1,137 @@
+"""Unified chunked-prefill Pallas kernel: paged flash attention over a
+ragged q-tile, one dispatch for any mix of prefill chunks and decode steps.
+
+Same scalar-prefetch split as ``paged_decode_attention_pallas`` — the
+block table never materializes a gather in HBM; the BlockSpec index map
+reads the prefetched table to DMA pool block ``tbl[desc[r, 0], t]`` per
+grid step — but the q block is a (W, H) *tile of lanes* instead of a
+single token, with per-row descriptors ``(slot, q_start, q_len, kv_len)``
+carrying the ragged geometry (see ref.py for the mask contract).  Cold
+prefills, warm suffix prefills riding a shared prefix, and 1-token decode
+rows (q_len == 1) all run in the same grid.
+
+Grid (R, KV, n_t); all W lanes x G group heads of a (row, kv-head) pair
+ride in one (W*G, BS) logits block so the MXU sees a real tile even when
+most rows are decodes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mixed_kernel(desc_ref, tbl_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                  m_scr, l_scr, acc_scr, *, bs, scale, n_t, g):
+    """Online softmax over pool blocks for one (row, kv-head) pair.
+
+    The flattened q axis interleaves lanes and group heads as
+    ``i = lane * g + group``, so ``lane = i // g`` recovers the logical
+    query position offset.  Probabilities are re-zeroed under the mask
+    after the exp: for a live lane that's an exact identity (masked
+    logits are NEG_INF, exp(NEG_INF - m) == +0.0 whenever any position
+    is live), but a fully-masked lane keeps m == NEG_INF so the exp
+    would give exp(0) == 1 per position — zeroing makes dead lanes
+    contribute l == 0 and output exactly 0 instead."""
+    ri = pl.program_id(0)
+    tj = pl.program_id(2)
+
+    @pl.when(tj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)  # (W*G, dh)
+    k = k_ref[0, 0].astype(jnp.float32)  # (BS, dh)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # (W*G, BS)
+    lane = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // g
+    kpos = tj * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    qpos = desc_ref[ri, 1] + lane
+    valid = (kpos <= qpos) & (kpos < desc_ref[ri, 3]) & (lane < desc_ref[ri, 2])
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev, l_prev = m_scr[...], l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.where(valid, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_prev * alpha + p.sum(-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+
+    @pl.when(tj == n_t - 1)
+    def _finish():
+        o_ref[0, 0] = acc_scr[...].astype(o_ref.dtype)
+        m_ref[0, 0] = m_scr[...]
+        l_ref[0, 0] = l_scr[...]
+
+
+def mixed_prefill_attention_pallas(
+    q: jax.Array,  # (R, W, H, dh) — W ragged query lanes per row
+    k_pool: jax.Array,  # (n_pool, bs, KV, dh) shared block pool
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, n_t) int32 pool ids per cache slot
+    desc: jax.Array,  # (R, 4) int32 (slot, q_start, q_len, kv_len)
+    *,
+    interpret: bool = True,
+):
+    """Paged flash attention for a mixed prefill+decode batch: descriptors
+    plus the block table ride scalar prefetch; K/V stream from the pool
+    block by block (no HBM gather) while every lane masks causally within
+    its own ``(q_start + lane, kv_len)`` span."""
+    r, w, h, dh = q.shape
+    bs, kv = k_pool.shape[1], k_pool.shape[2]
+    n_t = block_tables.shape[1]
+    g = h // kv
+    scale = 1.0 / np.sqrt(dh)
+
+    # (R, W, KV, G, dh) -> (R, KV, W*G, dh): lanes x groups flatten so one
+    # block per (row, kv-head) covers the whole ragged tile
+    qg = q.reshape(r, w, kv, g, dh).transpose(0, 2, 1, 3, 4).reshape(r, kv, w * g, dh)
+    kt = k_pool.transpose(0, 2, 1, 3)  # (n_pool, KV, BS, dh)
+    vt = v_pool.transpose(0, 2, 1, 3)
+    grid = (r, kv, n_t)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # desc, block_tables
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, w * g, dh), lambda ri, ki, tj, dsc, tbl: (ri, ki, 0, 0)),
+            pl.BlockSpec((1, 1, bs, dh), lambda ri, ki, tj, dsc, tbl: (tbl[dsc[ri, 0], tj], ki, 0, 0)),
+            pl.BlockSpec((1, 1, bs, dh), lambda ri, ki, tj, dsc, tbl: (tbl[dsc[ri, 0], tj], ki, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, w * g, dh), lambda ri, ki, tj, dsc, tbl: (ri, ki, 0, 0)),
+            pl.BlockSpec((1, 1, w * g, 1), lambda ri, ki, tj, dsc, tbl: (ri, ki, 0, 0)),
+            pl.BlockSpec((1, 1, w * g, 1), lambda ri, ki, tj, dsc, tbl: (ri, ki, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((w * g, 1), jnp.float32),
+            pltpu.VMEM((w * g, 1), jnp.float32),
+            pltpu.VMEM((w * g, dh), jnp.float32),
+        ],
+    )
+    o, m, l = pl.pallas_call(
+        functools.partial(_mixed_kernel, bs=bs, scale=scale, n_t=n_t, g=g),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((r, kv, w * g, dh), jnp.float32),
+            jax.ShapeDtypeStruct((r, kv, w * g, 1), jnp.float32),
+            jax.ShapeDtypeStruct((r, kv, w * g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(desc.astype(jnp.int32), block_tables.astype(jnp.int32), qg, kt, vt)
+    out = o / jnp.maximum(l, 1e-30)
+    out = out.reshape(r, kv, w, g, dh).transpose(0, 2, 1, 3, 4)
+    return out.reshape(r, w, h, dh).astype(q.dtype)

@@ -1,0 +1,21 @@
+"""Jitted public wrapper for the unified chunked-prefill attention kernel."""
+import functools
+
+import jax
+
+from repro.kernels.chunked_prefill.kernel import mixed_prefill_attention_pallas
+from repro.kernels.chunked_prefill.ref import mixed_prefill_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def mixed_prefill_attention(q, k_pool, v_pool, block_tables, desc, use_pallas: bool = False):
+    """Ragged mixed prefill/decode attention through a block table over a
+    shared KV pool.  ``use_pallas=True`` streams pool blocks via
+    scalar-prefetch index maps (TPU target; interpret elsewhere); the
+    default gathers in XLA."""
+    if use_pallas:
+        return mixed_prefill_attention_pallas(
+            q, k_pool, v_pool, block_tables, desc,
+            interpret=jax.default_backend() != "tpu",
+        )
+    return mixed_prefill_attention_ref(q, k_pool, v_pool, block_tables, desc)

@@ -5,6 +5,7 @@ providers + enclave orchestrator, and answer queries.
   python -m repro.launch.serve --queries 5 --generate --deadline-s 0.5
   python -m repro.launch.serve --queries 16 --stream --collect-batch 4
   python -m repro.launch.serve --queries 16 --generate --paged --block-size 32
+  python -m repro.launch.serve --queries 16 --token-budget 32 --prefix-cache
 
 Uses the bag embedder + lexical-overlap reranker by default (training-free
 CPU path).  ``--generate`` stands up a reduced-LM ``ServeEngine`` and
@@ -51,14 +52,18 @@ def overlap_reranker(tok: HashTokenizer):
 
 def make_demo_engine(max_new_tokens: int = 16, paged: bool = False,
                      block_size: int = 32, pool_blocks: int | None = None,
-                     max_batch: int = 4, prefix_cache: bool = False):
+                     max_batch: int = 4, prefix_cache: bool = False,
+                     token_budget: int | None = None):
     """Reduced-LM ServeEngine (random-init, CPU-sized) + generator adapter
     for the scheduler-driven serving demo.  ``paged=True`` swaps the
     per-slot cache stripes for the shared block pool (``--block-size``
     tokens per block; ``--pool-blocks`` caps the HBM budget, default =
     ``max_batch`` contiguous stripes); ``prefix_cache=True`` adds the
     refcounted prefix index on top, so repeated context preambles prefill
-    once and share blocks."""
+    once and share blocks; ``token_budget`` switches admission to the
+    unified chunked-prefill path — every engine step is ONE mixed
+    dispatch advancing at most that many prefill lanes plus every live
+    decode row, so long prompts stop stalling in-flight decodes."""
     import jax
 
     from repro.configs import get_config, smoke_config
@@ -68,9 +73,12 @@ def make_demo_engine(max_new_tokens: int = 16, paged: bool = False,
     from repro.serving.engine import ServeConfig, ServeEngine, engine_generator
 
     cfg = smoke_config(get_config("qwen3-0.6b")).with_overrides(dtype="float32")
-    if prefix_cache:
-        # suffix-prefill bit-parity needs the naive attention core over
-        # the whole prompt window (smoke_config clamps attn_chunk to 64)
+    if prefix_cache and token_budget is None:
+        # the legacy dense+suffix pipeline needs the naive attention core
+        # over the whole prompt window for suffix-prefill bit-parity
+        # (smoke_config clamps attn_chunk to 64); unified --token-budget
+        # engines read every K/V lane from the pool, so they keep the
+        # chunked core as-is
         cfg = cfg.with_overrides(attn_chunk=256)
     params = init_params(LM.param_specs(cfg), jax.random.PRNGKey(0))
     pol = ShardingPolicy(rules=base_rules(False), mesh=None)
@@ -79,7 +87,7 @@ def make_demo_engine(max_new_tokens: int = 16, paged: bool = False,
         ServeConfig(
             max_batch=max_batch, max_prompt_len=256, max_new_tokens=max_new_tokens,
             paged=paged, block_size=block_size, n_pool_blocks=pool_blocks,
-            prefix_cache=prefix_cache,
+            prefix_cache=prefix_cache, token_budget=token_budget,
         ),
     )
     return engine_generator(engine)
@@ -130,6 +138,14 @@ def main(argv=None):
         "skip their prefill (implies --paged --generate)",
     )
     ap.add_argument(
+        "--token-budget", type=int, default=None, metavar="N",
+        help="unified chunked prefill: one mixed prefill+decode dispatch "
+        "per engine step, advancing at most N prompt tokens plus every "
+        "live decode row — long prompts are spread across steps instead "
+        "of stalling in-flight decodes, and dispatches stay O(1)/step "
+        "(implies --paged --generate; composes with --prefix-cache)",
+    )
+    ap.add_argument(
         "--repeat", type=int, default=1,
         help="serve the query set N times (the repeat/retry traffic a "
         "prefix cache de-duplicates; watch the hit-rate gauge climb)",
@@ -157,7 +173,7 @@ def main(argv=None):
         "calibration + outlier-round quarantine",
     )
     args = ap.parse_args(argv)
-    if args.prefix_cache:
+    if args.prefix_cache or args.token_budget is not None:
         args.paged = args.generate = True
     if args.stream:
         args.generate = True
@@ -182,7 +198,7 @@ def main(argv=None):
         generator=make_demo_engine(
             args.max_new_tokens, paged=args.paged, block_size=args.block_size,
             pool_blocks=args.pool_blocks, max_batch=args.max_batch,
-            prefix_cache=args.prefix_cache,
+            prefix_cache=args.prefix_cache, token_budget=args.token_budget,
         ) if args.generate else None,
     )
     if args.kill_provider is not None:
@@ -265,6 +281,13 @@ def main(argv=None):
                     f"{st['min_free_blocks']} at peak ({args.block_size} tok/block)"
                 )
             print(line)
+        if "engine_steps" in st and st["engine_steps"]:
+            print(
+                f"dispatches: {st['admit_dispatches']} admit + "
+                f"{st['decode_dispatches']} decode + "
+                f"{st['mixed_dispatches']} mixed over {st['engine_steps']} "
+                f"engine steps ({st['dispatches_per_step']:.2f}/step)"
+            )
         if "prefix_lookups" in st:
             print(
                 f"prefix cache: {st['prefix_hits']}/{st['prefix_lookups']} hits "

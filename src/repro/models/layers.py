@@ -324,6 +324,85 @@ def attn_prefill_paged(cfg: ModelConfig, pol: ShardingPolicy, p, x, k_pool, v_po
     return out, k_new, v_new
 
 
+def attn_mixed_paged(cfg: ModelConfig, pol: ShardingPolicy, p, x, k_pool, v_pool,
+                     positions, block_tables, block_size: int, q_len):
+    """UNIFIED mixed prefill+decode attention against a paged KV cache:
+    one dispatch serves any mix of cold prefill chunks, warm suffix
+    chunks riding shared prefix blocks, and 1-token decode rows.
+
+    ``x``: ``(B, W, d)`` — W query lanes per row, of which the first
+    ``q_len[b]`` are live (a decode row is ``q_len == 1``; an idle slot
+    is ``q_len == 0``).  ``positions``: ``(B, W)`` absolute positions
+    ``q_start[b] + lane``.  Write-then-attend: the live lanes' fresh K/V
+    scatter into ``pool[table[pos // bs], pos % bs]`` FIRST (dead lanes
+    target the trash block, never a neighbor's), then attention reads
+    the pool alone — no fresh-K/V overlay, no HBM gather of a prefix
+    view.  For a decode row this is exactly ``attn_decode_paged``'s
+    scatter + mask arithmetic; for prefill lanes the pool round-trip is
+    lossless at pool dtype == activation dtype, so chunked fill equals
+    the dense prefill per token.  Because every row reads pool-dtype
+    K/V for prefix AND fresh lanes alike, hit-vs-miss consistency holds
+    at any pool dtype (the restriction the overlay path had to impose).
+
+    Attention impl follows ``cfg.attn_impl``:
+      * default (XLA): gather the padded view, mask each lane to its
+        causal span ``kpos <= position`` within ``kv_len``, re-zero
+        probs under the mask (exact identity for live lanes; makes dead
+        lanes output exactly 0).
+      * ``attn_impl="pallas"``: ``kernels/chunked_prefill``'s unified
+        kernel — descriptors + block table ride scalar prefetch, pool
+        blocks stream straight into VMEM (interpret mode off-TPU).
+
+    Returns ``(o, k_pool, v_pool)`` with the fresh K/V already resident.
+    """
+    b, w = x.shape[0], x.shape[1]
+    q, k_new, v_new = attn_qkv(cfg, pol, p, x, positions)
+    s_pad = block_tables.shape[1] * block_size
+    lane = jnp.arange(w)
+    live = lane[None, :] < q_len[:, None]  # (B, W)
+    pos_c = jnp.minimum(positions, s_pad - 1)
+    bid = jnp.where(
+        live,
+        block_tables[jnp.arange(b)[:, None], pos_c // block_size],
+        k_pool.shape[0] - 1,  # trash block
+    )
+    off = pos_c % block_size
+    # live lanes hit disjoint (bid, off) slots across rows (the allocator
+    # guarantees block ownership); dead-lane collisions land in trash
+    k_pool = k_pool.at[bid, off].set(k_new.astype(k_pool.dtype))
+    v_pool = v_pool.at[bid, off].set(v_new.astype(v_pool.dtype))
+    q_start = positions[:, 0]
+    kv_len = q_start + q_len
+    if cfg.attn_impl == "pallas":
+        from repro.kernels.chunked_prefill import ops as cp_ops
+
+        desc = jnp.stack(
+            [jnp.arange(b), q_start, q_len, kv_len], axis=1
+        ).astype(jnp.int32)
+        out = cp_ops.mixed_prefill_attention(
+            q, k_pool, v_pool, block_tables, desc, use_pallas=True
+        )  # (B,W,H,hd)
+    else:
+        k_view = k_pool[block_tables].reshape(b, s_pad, *k_pool.shape[2:])
+        v_view = v_pool[block_tables].reshape(b, s_pad, *v_pool.shape[2:])
+        scale = 1.0 / np.sqrt(q.shape[-1])
+        logits = _gqa_logits(q, k_view.astype(q.dtype)) * scale  # (B,KV,G,W,S_pad)
+        kpos = jnp.arange(s_pad)
+        valid = (
+            (kpos[None, None, :] <= positions[..., None])
+            & (kpos[None, None, :] < kv_len[:, None, None])
+            & live[..., None]
+        )  # (B, W, S_pad)
+        logits = jnp.where(valid[:, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        probs = jnp.where(valid[:, None, None], probs, 0.0)
+        out = _gqa_out(probs, v_view.astype(q.dtype), q.dtype)  # (B,W,H,hd)
+    out = pol.shard(out, "act_batch", "act_seq", "act_heads", None)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    out = pol.shard(out, "act_batch", "act_seq", "act_embed")
+    return out, k_pool, v_pool
+
+
 # --------------------------------------------------------------------- #
 # SwiGLU MLP
 # --------------------------------------------------------------------- #

@@ -105,6 +105,13 @@ def _run_position(cfg, pol, i, pp, h, positions, mode, cache_in, pos, paged=None
                 positions, tables, bs, attend_len,
             )
             cache_out = {"k": k_s, "v": v_s}
+        elif mode == "mixed":
+            tables, bs, q_len = paged
+            o, k_c, v_c = L.attn_mixed_paged(
+                cfg, pol, pp["attn"], x, cache_in["k"], cache_in["v"],
+                positions, tables, bs, q_len,
+            )
+            cache_out = {"k": k_c, "v": v_c}
         elif mode == "decode":
             o, k_c, v_c = L.attn_decode(cfg, pol, pp["attn"], x, cache_in["k"], cache_in["v"], pos)
             cache_out = {"k": k_c, "v": v_c}
@@ -124,10 +131,11 @@ def _run_position(cfg, pol, i, pp, h, positions, mode, cache_in, pos, paged=None
         else:
             o = L.attn_apply(cfg, pol, pp["attn"], x, positions)
     else:
-        if mode == "prefill_paged":
+        if mode in ("prefill_paged", "mixed"):
             raise NotImplementedError(
-                "prefix-cached suffix prefill needs every mixer to be attention: "
-                "SSM/conv state folds the whole sequence and cannot restart mid-prompt"
+                "prefix-cached suffix prefill / unified mixed dispatch needs every "
+                "mixer to be attention: SSM/conv state folds the whole sequence "
+                "and cannot restart mid-prompt"
             )
         if mode == "decode":
             o, conv, ssm = M.mamba_decode(cfg, pol, pp["mamba"], x, cache_in["conv"], cache_in["ssm"])
@@ -388,6 +396,36 @@ def paged_prefill_suffix(cfg: ModelConfig, pol: ShardingPolicy, params, batch, c
     )
     h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
     return L.head_apply(cfg, pol, params, h), suf_cache
+
+
+def mixed_step(cfg: ModelConfig, pol: ShardingPolicy, params, tokens, cache,
+               block_tables, q_start, q_len, block_size: int):
+    """UNIFIED engine step: one layer-stack pass over a mixed batch of
+    prefill chunks and decode rows against the paged cache — replaces
+    the separate ``prefill`` / ``paged_prefill_suffix`` / ``decode_step``
+    dispatches on the unified serving path.
+
+    ``tokens``: ``(B, W)`` — each row carries ``q_len[b]`` live tokens
+    starting at absolute position ``q_start[b]`` (a decode row is
+    ``q_len == 1``; an idle slot is ``q_len == 0``).  Prefix positions
+    below ``q_start`` must already sit in pool blocks reachable through
+    ``block_tables``; each layer scatters its fresh K/V into the pool
+    BEFORE attending (see ``layers.attn_mixed_paged``), so prompts may
+    be chunked across steps at any boundary.  Returns ``(logits
+    (B, W, V), cache)`` — the caller reads row ``b``'s next token off
+    ``logits[b, q_len[b] - 1]`` when its prompt completes this step.
+    """
+    b, w = tokens.shape
+    h = L.embed_apply(cfg, pol, params["embed"], tokens)
+    q_start = jnp.asarray(q_start, jnp.int32)
+    q_len = jnp.asarray(q_len, jnp.int32)
+    positions = q_start[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
+    h, cache, _ = _run_blocks(
+        cfg, pol, params, h, positions, mode="mixed", cache=cache,
+        paged=(block_tables, block_size, q_len),
+    )
+    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
+    return L.head_apply(cfg, pol, params, h), cache
 
 
 def cache_pspecs(cfg: ModelConfig, pol: ShardingPolicy):

@@ -21,6 +21,28 @@ Two serving modes share the slot-state contract:
     most ``sched_chunk`` steps between scheduler interventions with ONE
     host sync per chunk.
 
+Setting ``ServeConfig.token_budget`` switches the continuous path to
+**unified chunked prefill** (``_serve_unified``, paged-only): instead of
+separate admit-prefill and decode dispatches, every engine step issues
+ONE ``_mixed_rows`` call over per-row ``(q_start, q_len)`` descriptors —
+prompt tokens are chunked across steps (at most ``token_budget`` query
+lanes per step, shared with the 1-lane decode rows), so a long prompt
+arrival never stalls in-flight decodes behind a monolithic prefill, and
+the dispatch count per step is O(1) regardless of how many requests are
+admitting.  The kernel underneath
+(``kernels/chunked_prefill``) reads prefix K/V straight from the block
+pool, which removes the dense+suffix pipeline's restrictions: the
+prefix cache works with ``attn_impl="pallas"``, prompts longer than
+``attn_chunk``, and non-f32 caches (hit-vs-miss parity is structural —
+cold and warm rows both attend through the pool — rather than relying
+on the dense prefill reproducing pool dtype round-trips).  Such
+configurations auto-route to the unified path even when
+``token_budget`` is unset.  Admissions whose shared prefix chunks are
+still being filled by an in-flight row simply wait (host-side
+``pending_blocks`` map); a wait that can never resolve is broken by
+force-retiring the stuck rows with an empty, ``deadlocked``-flagged
+result (see ``AdmissionDeadlock``) instead of hanging the loop.
+
 Cache layouts (``ServeConfig.paged`` selects; both bit-identical for the
 same admission order):
 
@@ -66,6 +88,52 @@ from repro.serving.kv_cache import BlockPool, BlockTable, PrefixIndex, blocks_fo
 from repro.serving.scheduler import Request, Scheduler
 
 
+class AdmissionDeadlock(RuntimeError):
+    """Prefix-cache admission dependency resolution stalled: some admitted
+    rows wait on cached chunks that no dispatched same-pass row is going
+    to materialize.  With deps derived from ``PrefixIndex.commit`` order
+    this is unreachable (an admit can only depend on chunks registered by
+    an EARLIER admit, so the wait graph is acyclic), but a hang here would
+    wedge the whole serve loop — so instead of asserting, the resolver
+    raises with the waves that DID resolve plus the stuck records, and the
+    engine dispatches the former and force-retires the latter with an
+    empty, ``deadlocked``-flagged result."""
+
+    def __init__(self, waves: list, stuck: list):
+        super().__init__(
+            f"admission dependency wave stalled: {len(stuck)} row(s) wait on "
+            f"cached chunks no dispatched row writes (cyclic prefix deps?)"
+        )
+        self.waves = waves
+        self.stuck = stuck
+
+
+def resolve_admission_waves(pre_admits: list[dict]) -> list[list[dict]]:
+    """Order warm prefix-cache admits into dependency waves.
+
+    Each record carries ``deps`` (blocks its shared chain / COW source
+    reads) and ``writes`` (cached chunk blocks its suffix prefill will
+    materialize).  A record joins a wave once none of its deps are still
+    pending writes of an undispatched record; cache dataflow then orders
+    the device work so every gather reads materialized blocks.  Raises
+    :class:`AdmissionDeadlock` (carrying the resolved prefix of waves and
+    the stuck remainder) if no progress can be made."""
+    waves: list[list[dict]] = []
+    pre_admits = list(pre_admits)
+    pending = (
+        frozenset().union(*(a["writes"] for a in pre_admits))
+        if pre_admits else frozenset()
+    )
+    while pre_admits:
+        warm = [a for a in pre_admits if not (a["deps"] & pending)]
+        pre_admits = [a for a in pre_admits if a["deps"] & pending]
+        if not warm:
+            raise AdmissionDeadlock(waves, pre_admits)
+        pending = pending.difference(*(a["writes"] for a in warm))
+        waves.append(warm)
+    return waves
+
+
 @dataclasses.dataclass
 class ServeConfig:
     max_batch: int = 8  # decode slots (continuous) / chunk size (lock-step)
@@ -83,6 +151,13 @@ class ServeConfig:
     # those blocks into the new request's table, and prefills only the
     # suffix; retired prompt blocks park in an LRU index for reuse
     prefix_cache: bool = False
+    # unified chunked prefill (paged-only): cap the query lanes per engine
+    # step; prompt tokens chunk across steps alongside 1-lane decode rows
+    # in a single mixed dispatch.  None keeps the dedicated admit-prefill
+    # path (but prefix-cache configs the dense+suffix pipeline cannot
+    # serve — pallas attention, prompts > attn_chunk, non-f32 caches —
+    # auto-route to the unified path with a max_prompt_len budget)
+    token_budget: int | None = None
 
 
 class ServeEngine:
@@ -110,6 +185,7 @@ class ServeEngine:
                 )
             self._n_pool_blocks = n_pool
             self._trash_block = n_pool  # extra pool index for masked writes
+        unified = scfg.token_budget is not None
         if scfg.prefix_cache:
             if not scfg.paged:
                 raise ValueError(
@@ -121,33 +197,46 @@ class ServeEngine:
                     "prefix_cache requires an all-attention model: SSM/conv "
                     "state folds the whole sequence and cannot restart mid-prompt"
                 )
-            if cfg.attn_impl == "pallas":
+            if (
+                cfg.attn_impl == "pallas"
+                or scfg.max_prompt_len > cfg.attn_chunk
+                or jnp.dtype(cfg.dtype) != jnp.float32
+            ):
+                # configurations the dense+suffix pipeline cannot serve
+                # with hit-vs-miss bit-parity (the cold dense prefill would
+                # attend full-precision activations / a different softmax
+                # core than the warm pool gather) route to the unified
+                # mixed-dispatch path, where cold AND warm rows read every
+                # K/V lane from the pool — parity becomes structural
+                # instead of dtype/kernel-dependent
+                unified = True
+        if unified:
+            if scfg.token_budget is not None and scfg.token_budget < 1:
+                raise ValueError(f"token_budget={scfg.token_budget} must be >= 1")
+            if not scfg.paged:
                 raise ValueError(
-                    "prefix_cache is incompatible with attn_impl='pallas': the "
-                    "cold (dense) prefill would run the flash kernel while the "
-                    "warm suffix path runs the inline XLA softmax, breaking "
-                    "hit-vs-miss bit-parity (a paged suffix-prefill kernel is a "
-                    "ROADMAP item)"
+                    "token_budget (unified chunked prefill) requires "
+                    "paged=True: mixed dispatches read and write K/V "
+                    "through the shared block pool"
                 )
-            if scfg.max_prompt_len > cfg.attn_chunk:
+            if any(cfg.mixer_kind(i) != "attn" for i in range(cfg.n_layers)):
                 raise ValueError(
-                    f"prefix_cache suffix prefill needs the naive attention core "
-                    f"for bit-parity with the dense prefill: max_prompt_len="
-                    f"{scfg.max_prompt_len} must be <= attn_chunk={cfg.attn_chunk}"
+                    "token_budget (unified chunked prefill) requires an "
+                    "all-attention model: SSM/conv state folds the whole "
+                    "sequence and cannot resume a chunked prompt"
                 )
-            if jnp.dtype(cfg.dtype) != jnp.float32:
-                raise ValueError(
-                    f"prefix_cache requires a float32 cache (cfg.dtype="
-                    f"{cfg.dtype}): a cold prefill attends to full-precision "
-                    f"activation K/V while a warm admit gathers pool lanes that "
-                    f"round-tripped through the cache dtype — hit-vs-miss "
-                    f"bit-parity would silently break (relaxing this to a "
-                    f"tolerance knob is future work)"
-                )
+        self._unified = unified
+        self._token_budget = (
+            scfg.token_budget if scfg.token_budget is not None else scfg.max_prompt_len
+        )
         t_cap = scfg.max_new_tokens
-        # admit-dispatch observability (bucketed admission benchmark)
+        # dispatch observability: fused admit prefills (bucketed admission
+        # benchmark), fused decode chunks, and unified mixed steps — the
+        # O(1)-dispatch-per-step regression gauges
         self.admit_dispatches = 0
         self.admit_rows_total = 0
+        self.decode_dispatches = 0
+        self.mixed_dispatches = 0
         # prefix-cache observability (engine lifetime; serve passes report
         # them into Scheduler.record_prefix_stats each pass)
         self.prefix_lookups = 0
@@ -255,6 +344,51 @@ class ServeEngine:
         def cow_copy(cache, src, dst):
             return LM.paged_copy_block(cfg, cache, src, dst)
 
+        def mixed_rows(params, cache, cur, lengths, emitted, done, budget, out,
+                       tok, q_start_h, q_len, is_decode, row_len, b_new, tables):
+            """ONE unified engine step: every row — mid-prompt fill, fill
+            completion, or 1-token decode — advances through a single
+            ``LM.mixed_step`` dispatch driven by per-row ``(q_start,
+            q_len)`` descriptors.  Decode rows (``is_decode``) read their
+            token from ``cur`` at position ``lengths + emitted - 1`` —
+            exactly the ``decode_chunk`` hot loop for one step, so the
+            emitted/done/out updates below are bit-compatible with it.
+            Fill rows write their prompt chunk's K/V into the pool and
+            only touch slot state on the chunk that REACHES ``row_len``
+            (``completes``): the final logits lane seeds the slot exactly
+            like ``admit_rows``.  Rows with ``q_len == 0`` (budget-starved
+            this step) are inert: their lanes score into the trash block
+            and no state updates."""
+            b = scfg.max_batch
+            rows = jnp.arange(b)
+            q_start = jnp.where(is_decode, lengths + emitted - 1, q_start_h)
+            tok = tok.at[:, 0].set(jnp.where(is_decode, cur, tok[:, 0]))
+            logits, cache = LM.mixed_step(
+                cfg, pol, params, tok, cache, tables, q_start, q_len, bs
+            )
+            last = jnp.take_along_axis(
+                logits, jnp.maximum(q_len - 1, 0)[:, None, None], axis=1
+            )[:, 0, :]
+            nxt = jnp.argmax(last, -1).astype(jnp.int32)
+            completes = (~is_decode) & (q_len > 0) & (q_start + q_len >= row_len)
+            emit_dec = is_decode & (q_len > 0) & ~done
+            # decode lane: token lands at the row's own emitted offset
+            idx = jnp.minimum(emitted, t_cap)
+            out = out.at[rows, idx].set(jnp.where(emit_dec, nxt, out[rows, idx]))
+            # fill completion: seed the slot like admit_rows does
+            seeded = jnp.zeros((b, t_cap + 1), jnp.int32).at[:, 0].set(nxt)
+            out = jnp.where(completes[:, None], seeded, out)
+            cur = jnp.where(completes | emit_dec, nxt, cur)
+            lengths = jnp.where(completes, row_len, lengths)
+            budget = jnp.where(completes, b_new, budget)
+            emitted = jnp.where(completes, 1, emitted + emit_dec)
+            done = jnp.where(
+                completes,
+                (nxt == EOS) | (b_new <= 1),
+                done | (emit_dec & ((nxt == EOS) | (emitted >= budget))),
+            )
+            return cache, cur, lengths, emitted, done, budget, out
+
         def make_decode_chunk(paged: bool):
             def decode_chunk(params, cache, cur, lengths, emitted, done, budget, out,
                              n_steps, tables=None):
@@ -315,6 +449,7 @@ class ServeEngine:
         self._admit_rows = jax.jit(admit_rows)
         self._suffix_admit_rows = jax.jit(suffix_admit_rows)
         self._cow_copy = jax.jit(cow_copy)
+        self._mixed_rows = jax.jit(mixed_rows)
         self._decode_chunk = jax.jit(make_decode_chunk(scfg.paged))
         self.queue: list[np.ndarray] = []
 
@@ -389,6 +524,9 @@ class ServeEngine:
         the stream drains the remaining work and ends.  ``drain=True``
         restores the one-shot ``serve`` behavior: exit as soon as the
         queue is empty and every slot has retired, closed or not."""
+        if self._unified:
+            yield from self._serve_unified(scheduler, drain)
+            return
         scfg = self.scfg
         B, t_cap, width = scfg.max_batch, scfg.max_new_tokens, scfg.max_prompt_len
         bs, paged = scfg.block_size, scfg.paged
@@ -424,6 +562,10 @@ class ServeEngine:
         bu_h = np.ones((B,), np.int64)
         ln_h = np.ones((B,), np.int64)
         oom_slots: set[int] = set()  # force-done by pool OOM, not yet retired
+        empty = np.zeros((0,), np.int32)
+        steps = 0  # engine scheduler steps (dispatch-rate denominator)
+        a0, d0 = self.admit_dispatches, self.decode_dispatches
+        m0 = self.mixed_dispatches
 
         planned: dict[int, object] = {}  # rid -> gate's plan (consumed at admit)
 
@@ -550,13 +692,16 @@ class ServeEngine:
             # about to compute defers a wave (cache dataflow then orders
             # the device work, so its gather reads materialized blocks).
             # Each wave dispatches COW copies, then warm rows grouped
-            # pow-2 with a pow-2 suffix width (bounded trace count)
-            pending = frozenset().union(*(a["writes"] for a in pre_admits)) if pre_admits else frozenset()
-            while pre_admits:
-                warm = [a for a in pre_admits if not (a["deps"] & pending)]
-                pre_admits = [a for a in pre_admits if a["deps"] & pending]
-                assert warm, "dependency wave stalled (cyclic prefix deps?)"
-                pending = pending.difference(*(a["writes"] for a in warm))
+            # pow-2 with a pow-2 suffix width (bounded trace count).  A
+            # stall (impossible with commit-ordered deps, but fatal if it
+            # ever happened) force-retires the stuck rows instead of
+            # wedging the loop
+            try:
+                waves = resolve_admission_waves(pre_admits)
+                stuck: list[dict] = []
+            except AdmissionDeadlock as exc:
+                waves, stuck = exc.waves, exc.stuck
+            for warm in waves:
                 for a in warm:
                     if a["cow_dst"] is not None:
                         cache = self._cow_copy(
@@ -586,6 +731,26 @@ class ServeEngine:
                     )
                     self.admit_dispatches += 1
                     self.admit_rows_total += g
+            if stuck:
+                # force-retire rows whose prefill can never dispatch: roll
+                # back their cached-chunk registrations (one call, leaf-
+                # first across rows whose chains extend each other), drop
+                # COW pins, release their tables, and finish them with an
+                # empty deadlocked-flagged answer.  Device state was never
+                # touched for these slots (done stayed True), so neighbors
+                # are unaffected
+                index.invalidate([b for a in stuck for b in a["writes"]])
+                for a in stuck:
+                    slot = a["slot"]
+                    req = slots[slot]
+                    if a["cow_dst"] is not None:
+                        pool.free([a["cow_src"]])  # drop commit's pin
+                    row_tables[slot].release()
+                    tables_h[slot, :] = self._trash_block
+                    scheduler.finish(req, empty, deadlocked=True)
+                    slots[slot] = None
+                    em_h[slot], dn_h[slot] = 1, True
+                    yield req.rid, empty
             active = [i for i in range(B) if slots[i] is not None]
             scheduler.record_occupancy(
                 free_slots=B - len(active),
@@ -601,6 +766,12 @@ class ServeEngine:
                     shared_blocks=self.prefix_shared_total - sh0,
                     cached_blocks=index.n_cached_blocks,
                 )
+            scheduler.record_dispatch_stats(
+                admit_dispatches=self.admit_dispatches - a0,
+                decode_dispatches=self.decode_dispatches - d0,
+                mixed_dispatches=self.mixed_dispatches - m0,
+                steps=steps,
+            )
             if not active:
                 if drain or scheduler.closed:
                     if scheduler.has_pending:
@@ -652,6 +823,8 @@ class ServeEngine:
                         self.params, cache, cur, lengths, emitted, done, budget, out,
                         jnp.int32(n),
                     )
+                self.decode_dispatches += 1
+                steps += 1
             # np.array (not asarray): device views are read-only and the
             # mirrors are written at the next admit
             em_h, dn_h = np.array(emitted), np.array(done)
@@ -668,6 +841,306 @@ class ServeEngine:
                     if paged:
                         row_tables[i].release()
                         tables_h[i, :] = self._trash_block
+                    yield req.rid, ans
+
+    def _serve_unified(self, scheduler: Scheduler, drain: bool):
+        """Unified chunked-prefill serve loop (paged-only).
+
+        Replaces the legacy admit-prefill / dependency-wave / pow-2
+        suffix-bucket machinery with ONE ``_mixed_rows`` dispatch per
+        engine step: each admitted request becomes a host-side *fill*
+        record whose prompt is streamed into the pool ``token_budget``
+        query lanes at a time, sharing the step with the 1-lane decode
+        rows.  Decode lanes are assigned first (a long prompt arrival
+        chunks across steps instead of stalling in-flight decodes), fills
+        consume the remaining lanes FIFO.  When no fill is in flight the
+        loop falls back to the fused multi-step ``_decode_chunk`` — still
+        one dispatch per step.  The jit trace count is O(1): every mixed
+        step has the same static ``(max_batch, token_budget)`` shape.
+
+        Prefix-cache admissions share cached chunks exactly like the
+        legacy path (same ``PrefixIndex`` plan/commit), but cross-request
+        ordering is host-side: chunks an in-flight fill has registered
+        but not yet materialized sit in ``pending_blocks``; a later
+        admission matching them waits (its fill stays unscheduled) until
+        the owner's fill passes their last token.  Deps always point at
+        earlier-admitted rows, so the wait graph is acyclic; if it ever
+        stalled anyway, every blocked fill is force-retired with an
+        empty ``deadlocked``-flagged answer rather than wedging the loop.
+        """
+        scfg = self.scfg
+        B, t_cap, width = scfg.max_batch, scfg.max_new_tokens, scfg.max_prompt_len
+        bs, W = scfg.block_size, self._token_budget
+        cache = self._init_serve_cache()
+        pool = BlockPool(self._n_pool_blocks, bs)
+        row_tables = [BlockTable(pool) for _ in range(B)]
+        index: PrefixIndex | None = None
+        if scfg.prefix_cache:
+            index = PrefixIndex(pool)
+            lk0, ht0 = self.prefix_lookups, self.prefix_hits
+            pt0, ps0 = self.prefill_tokens_total, self.prefill_tokens_saved
+            sh0 = self.prefix_shared_total
+        tables_h = np.full((B, self._blocks_per_slot), self._trash_block, np.int32)
+        cur = jnp.zeros((B,), jnp.int32)
+        lengths = jnp.ones((B,), jnp.int32)
+        emitted = jnp.ones((B,), jnp.int32)
+        done = jnp.ones((B,), bool)  # free slots read as done
+        budget = jnp.ones((B,), jnp.int32)
+        out = jnp.zeros((B, t_cap + 1), jnp.int32)
+        slots: list[Request | None] = [None] * B
+        em_h = np.ones((B,), np.int64)
+        dn_h = np.ones((B,), bool)
+        bu_h = np.ones((B,), np.int64)
+        ln_h = np.ones((B,), np.int64)
+        oom_slots: set[int] = set()
+        empty = np.zeros((0,), np.int32)
+        steps = 0
+        a0, d0 = self.admit_dispatches, self.decode_dispatches
+        m0 = self.mixed_dispatches
+        # fills[slot]: in-flight prompt stream (p/length/b_new/pos/cow/deps);
+        # None once the prompt has fully dispatched.  pending_blocks maps a
+        # cached-chunk block an in-flight fill will write -> (owner slot,
+        # token position at which its content exists on device)
+        fills: list[dict | None] = [None] * B
+        pending_blocks: dict[int, tuple[int, int]] = {}
+        planned: dict[int, object] = {}
+
+        def admit_gate(req: Request) -> bool:
+            if index is not None:
+                plan = index.plan(req.tokens[-width:])
+                if plan is not None:
+                    planned[req.rid] = plan
+                return plan is not None
+            n_tok = min(len(req.tokens), width) + 1
+            return pool.can_alloc(blocks_for(n_tok, bs))
+
+        while True:
+            # ---- admit queued requests into free slots ----
+            # each admit is pure host bookkeeping (pool commit + fill
+            # record); NO device dispatch happens here — prompt tokens
+            # enter the device through the shared mixed step below
+            for slot in range(B):
+                if slots[slot] is not None:
+                    continue
+                req = scheduler.pop_ready(admit_if=admit_gate)
+                if req is None:
+                    break
+                p = req.tokens[-width:]
+                length = len(p)
+                b_new = t_cap if req.max_new_tokens is None else req.max_new_tokens
+                b_new = max(1, min(int(b_new), t_cap))
+                start, cow, deps = 0, None, set()
+                if index is not None:
+                    plan = planned.pop(req.rid, None) or index.plan(p)
+                    if plan is None:
+                        raise RuntimeError("prefix admit raced the block pool")
+                    table_ids, cow_dst = index.commit(plan)
+                    row_tables[slot].adopt(table_ids)
+                    tables_h[slot, :] = self._trash_block
+                    tables_h[slot, : len(table_ids)] = table_ids
+                    self.prefix_lookups += 1
+                    self.prefill_tokens_total += length
+                    start = plan.start
+                    if start:
+                        self.prefix_hits += 1
+                        self.prefill_tokens_saved += start
+                        self.prefix_shared_total += len(plan.shared) + (cow_dst is not None)
+                    if cow_dst is not None:
+                        cow = (plan.cow_src, cow_dst)
+                    # wait on shared/COW-source chunks another in-flight
+                    # fill has registered but not yet computed
+                    deps = {
+                        b for b in (set(plan.shared) | ({plan.cow_src} if cow else set()))
+                        if b in pending_blocks
+                    }
+                    for c in range(len(plan.nodes), length // bs):
+                        pending_blocks[table_ids[c]] = (slot, (c + 1) * bs)
+                else:
+                    tb = row_tables[slot]
+                    if not tb.extend_to(length + 1):
+                        raise RuntimeError("paged admit raced the block pool")
+                    tables_h[slot, :] = self._trash_block
+                    tables_h[slot, : tb.n_blocks] = tb.ids
+                slots[slot] = req
+                fills[slot] = dict(
+                    p=p, length=length, b_new=b_new, pos=start, cow=cow, deps=deps
+                )
+                # inert on device until the fill's last chunk seeds the
+                # slot (mixed_rows `completes`); done=True keeps any
+                # decode lane from touching it meanwhile
+                em_h[slot], dn_h[slot] = 0, True
+                bu_h[slot], ln_h[slot] = b_new, length
+
+            active = [i for i in range(B) if slots[i] is not None]
+            scheduler.record_occupancy(
+                free_slots=B - len(active),
+                free_blocks=pool.free_blocks,
+                reclaimable_blocks=pool.reclaimable_blocks if index is not None else None,
+            )
+            if index is not None:
+                scheduler.record_prefix_stats(
+                    lookups=self.prefix_lookups - lk0,
+                    hits=self.prefix_hits - ht0,
+                    prefill_tokens=self.prefill_tokens_total - pt0,
+                    prefill_tokens_saved=self.prefill_tokens_saved - ps0,
+                    shared_blocks=self.prefix_shared_total - sh0,
+                    cached_blocks=index.n_cached_blocks,
+                )
+            scheduler.record_dispatch_stats(
+                admit_dispatches=self.admit_dispatches - a0,
+                decode_dispatches=self.decode_dispatches - d0,
+                mixed_dispatches=self.mixed_dispatches - m0,
+                steps=steps,
+            )
+            if not active:
+                if drain or scheduler.closed:
+                    if scheduler.has_pending:
+                        continue
+                    return
+                scheduler.wait_for_work()
+                continue
+
+            fill_rows = [i for i in range(B) if fills[i] is not None]
+            runnable = [
+                i for i in fill_rows if not (fills[i]["deps"] & pending_blocks.keys())
+            ]
+            dec_rows = [i for i in active if fills[i] is None and not dn_h[i]]
+
+            if fill_rows and not runnable:
+                # every in-flight fill waits on a chunk nobody will write:
+                # unreachable with commit-ordered deps, but wedging the
+                # loop would be worse than degrading — roll back their
+                # cached-chunk registrations (one leaf-first call), drop
+                # COW pins, and retire them empty + deadlocked
+                doomed = set(fill_rows)
+                inv = [b for b, (s, _) in pending_blocks.items() if s in doomed]
+                if index is not None and inv:
+                    index.invalidate(inv)
+                for b in inv:
+                    del pending_blocks[b]
+                for i in fill_rows:
+                    fl, req = fills[i], slots[i]
+                    if fl["cow"] is not None:
+                        pool.free([fl["cow"][0]])
+                    row_tables[i].release()
+                    tables_h[i, :] = self._trash_block
+                    scheduler.finish(req, empty, deadlocked=True)
+                    slots[i], fills[i] = None, None
+                    em_h[i], dn_h[i] = 1, True
+                    yield req.rid, empty
+                continue
+
+            if runnable:
+                # ---- ONE mixed dispatch: decode lanes + fill chunks ----
+                tok = np.zeros((B, W), np.int32)
+                q_start_h = np.zeros((B,), np.int32)
+                q_len_h = np.zeros((B,), np.int32)
+                is_dec = np.zeros((B,), bool)
+                row_len_h = np.zeros((B,), np.int32)
+                b_new_h = np.ones((B,), np.int32)
+                oom = np.zeros((B,), bool)
+                lanes = W
+                for i in dec_rows:  # decode first: fills absorb the wait
+                    if lanes <= 0:
+                        break
+                    need_tok = min(
+                        ln_h[i] + min(em_h[i] + 1, bu_h[i]) - 1,
+                        self._cache_len_padded,
+                    )
+                    tb = row_tables[i]
+                    if tb.n_tokens_capacity < need_tok:
+                        n0 = tb.n_blocks
+                        if tb.extend_to(int(need_tok)):
+                            tables_h[i, n0 : tb.n_blocks] = tb.ids[n0:]
+                        else:
+                            oom[i] = True
+                            dn_h[i] = True
+                            oom_slots.add(i)
+                            continue
+                    is_dec[i] = True
+                    q_len_h[i] = 1
+                    lanes -= 1
+                for i in runnable:
+                    if lanes <= 0:
+                        break
+                    fl = fills[i]
+                    if fl["cow"] is not None:
+                        # boundary copy must precede this fill's writes;
+                        # the copy consumes the source's cache VALUE, so
+                        # commit's pin drops immediately after dispatch
+                        src, dst = fl["cow"]
+                        cache = self._cow_copy(cache, jnp.int32(src), jnp.int32(dst))
+                        pool.free([src])
+                        fl["cow"] = None
+                    take = min(fl["length"] - fl["pos"], lanes)
+                    tok[i, :take] = fl["p"][fl["pos"] : fl["pos"] + take]
+                    q_start_h[i] = fl["pos"]
+                    q_len_h[i] = take
+                    row_len_h[i] = fl["length"]
+                    b_new_h[i] = fl["b_new"]
+                    lanes -= take
+                    fl["pos"] += take
+                    # chunks this dispatch materializes become matchable
+                    mine = [
+                        b for b, (s, e) in pending_blocks.items()
+                        if s == i and e <= fl["pos"]
+                    ]
+                    for b in mine:
+                        del pending_blocks[b]
+                    if fl["pos"] >= fl["length"]:
+                        fills[i] = None  # completes in this dispatch
+                if oom.any():
+                    done = jnp.logical_or(done, jnp.asarray(oom))
+                cache, cur, lengths, emitted, done, budget, out = self._mixed_rows(
+                    self.params, cache, cur, lengths, emitted, done, budget, out,
+                    jnp.asarray(tok), jnp.asarray(q_start_h), jnp.asarray(q_len_h),
+                    jnp.asarray(is_dec), jnp.asarray(row_len_h),
+                    jnp.asarray(b_new_h), jnp.asarray(tables_h),
+                )
+                self.mixed_dispatches += 1
+                steps += 1
+                em_h, dn_h = np.array(emitted), np.array(done)
+            elif dec_rows:
+                # no fill in flight: fused multi-step decode, one dispatch
+                remaining = [int(bu_h[i] - em_h[i]) for i in dec_rows]
+                n = max(1, min(max(remaining), scfg.sched_chunk))
+                oom = np.zeros((B,), bool)
+                for i in dec_rows:
+                    need_tok = min(
+                        ln_h[i] + min(em_h[i] + n, bu_h[i]) - 1,
+                        self._cache_len_padded,
+                    )
+                    tb = row_tables[i]
+                    if tb.n_tokens_capacity >= need_tok:
+                        continue
+                    n0 = tb.n_blocks
+                    if tb.extend_to(int(need_tok)):
+                        tables_h[i, n0 : tb.n_blocks] = tb.ids[n0:]
+                    else:
+                        oom[i] = True
+                        dn_h[i] = True
+                        oom_slots.add(i)
+                if oom.any():
+                    done = jnp.logical_or(done, jnp.asarray(oom))
+                cache, cur, emitted, done, out = self._decode_chunk(
+                    self.params, cache, cur, lengths, emitted, done, budget, out,
+                    jnp.int32(n), jnp.asarray(tables_h),
+                )
+                self.decode_dispatches += 1
+                steps += 1
+                em_h, dn_h = np.array(emitted), np.array(done)
+
+            retired = [i for i in active if dn_h[i] and fills[i] is None and slots[i] is not None]
+            if retired:
+                out_h = np.asarray(out)
+                for i in retired:
+                    req = slots[i]
+                    ans = out_h[i, : int(em_h[i])].copy()
+                    scheduler.finish(req, ans, truncated=i in oom_slots)
+                    oom_slots.discard(i)
+                    slots[i] = None
+                    row_tables[i].release()
+                    tables_h[i, :] = self._trash_block
                     yield req.rid, ans
 
     def serve_prompts(

@@ -218,6 +218,17 @@ class BlockPool:
         self._cached.discard(b)
         self._free.append(b)
 
+    def unmark_cached(self, b: int) -> None:
+        """Drop the prefix-index claim on a block whose cached chunk was
+        never (or will never be) materialized — the rollback half of
+        ``PrefixIndex.invalidate``.  An owned block simply loses its
+        park-on-free destiny; a block already parked has no owner left to
+        reach it, so it returns straight to the free list."""
+        self._cached.discard(b)
+        if b in self._parked:
+            self._parked.remove(b)
+            self._free.append(b)
+
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return (
             f"BlockPool(n_blocks={self.n_blocks}, block_size={self.block_size}, "
@@ -458,6 +469,34 @@ class PrefixIndex:
         self._node_of_block[block] = node
         self.pool.mark_cached(block)
         return node
+
+    def invalidate(self, block_ids) -> None:
+        """Unregister chunks that were committed but never materialized —
+        the rollback path when an admission is force-done (dependency
+        deadlock) before its prefill ran.  Leaf-first, like eviction, so
+        every surviving chain stays root-reachable; a chunk whose children
+        are NOT in the same invalidation set would orphan a live chain
+        and raises instead (callers force-done whole dependent groups, so
+        descendants of an invalidated chunk are always invalidated too).
+        Blocks stay owned by the caller's table — ``unmark_cached`` only
+        removes the park-on-free claim, so the subsequent table release
+        recycles them as plain blocks."""
+        todo = [b for b in block_ids if b in self._node_of_block]
+        while todo:
+            progressed = False
+            for b in list(todo):
+                node = self._node_of_block[b]
+                if node.children:
+                    continue  # interior: wait for its chunks to go first
+                del node.parent.children[node.chunk]
+                del self._node_of_block[b]
+                self.pool.unmark_cached(b)
+                todo.remove(b)
+                progressed = True
+            if not progressed:
+                raise ValueError(
+                    f"invalidate of chunk(s) with live cached children: {todo}"
+                )
 
     # ---- eviction (BlockPool.evictor protocol) ----
     def evict_one(self) -> bool:

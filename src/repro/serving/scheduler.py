@@ -56,6 +56,7 @@ class Request:
     answer: np.ndarray | None = None
     status: str = "queued"  # queued | active | done | expired
     truncated: bool = False  # done, but cut short by KV-pool OOM
+    deadlocked: bool = False  # done empty: admission dependency deadlock
     tag: Any = None  # caller-side routing key (e.g. query index)
 
     @property
@@ -101,6 +102,7 @@ class Scheduler:
         self._peak_backlog = 0
         self._occupancy: dict[str, int] = {}
         self._prefix: dict[str, int] | None = None
+        self._dispatch: dict[str, int] | None = None
 
     def submit(
         self,
@@ -246,13 +248,19 @@ class Scheduler:
                 return req
             return None
 
-    def finish(self, req: Request, answer: np.ndarray, truncated: bool = False):
+    def finish(self, req: Request, answer: np.ndarray, truncated: bool = False,
+               deadlocked: bool = False):
         """``truncated=True`` marks a request the engine force-retired on
         KV-pool OOM: terminal and answered, but the answer is a prefix of
         what the budget allowed — callers watching degradation under
-        memory pressure read it off the request / ``n_truncated``."""
+        memory pressure read it off the request / ``n_truncated``.
+        ``deadlocked=True`` marks a request force-done (empty answer) when
+        its admission hit a prefix-dependency deadlock — the graceful
+        degradation of ``AdmissionDeadlock``, same contract as truncation:
+        terminal, flagged, neighbors unharmed."""
         req.status = "done"
         req.truncated = truncated
+        req.deadlocked = deadlocked
         req.finished_at = time.monotonic()
         req.answer = np.asarray(answer)
         with self._cond:
@@ -302,16 +310,42 @@ class Scheduler:
                 "prefix_cached_blocks": int(cached_blocks),
             }
 
+    def record_dispatch_stats(self, *, admit_dispatches: int, decode_dispatches: int,
+                              mixed_dispatches: int, steps: int):
+        """Dispatch counters for THIS serve pass (engine deltas,
+        overwritten each pass): fused admit prefills, fused decode
+        chunks, and unified mixed prefill+decode dispatches, plus the
+        number of engine scheduler steps — ``latency_stats`` derives
+        ``dispatches_per_step`` from them (the O(1)-per-step regression
+        gauge of the unified path)."""
+        with self._lock:
+            self._dispatch = {
+                "admit_dispatches": int(admit_dispatches),
+                "decode_dispatches": int(decode_dispatches),
+                "mixed_dispatches": int(mixed_dispatches),
+                "engine_steps": int(steps),
+            }
+
     def latency_stats(self) -> dict:
         """p50/p95/mean submit->finish latency over completed requests,
         plus occupancy gauges (peak backlog; free/min-free slots and KV
-        blocks when an engine reported them via ``record_occupancy``) and
-        prefix-cache hit-rate gauges (``record_prefix_stats``)."""
+        blocks when an engine reported them via ``record_occupancy``),
+        prefix-cache hit-rate gauges (``record_prefix_stats``), and
+        dispatch-count gauges (``record_dispatch_stats``)."""
         with self._lock:
             done = [r for r in self.results.values() if r.status == "done"]
             n_expired = sum(1 for r in self.results.values() if r.status == "expired")
             n_truncated = sum(1 for r in done if r.truncated)
+            n_deadlocked = sum(1 for r in done if r.deadlocked)
             gauges = {"peak_backlog": self._peak_backlog, **self._occupancy}
+            if self._dispatch is not None:
+                gauges.update(self._dispatch)
+                if self._dispatch["engine_steps"]:
+                    gauges["dispatches_per_step"] = (
+                        self._dispatch["admit_dispatches"]
+                        + self._dispatch["decode_dispatches"]
+                        + self._dispatch["mixed_dispatches"]
+                    ) / self._dispatch["engine_steps"]
             if self._prefix is not None:
                 gauges.update(self._prefix)
                 if self._prefix["prefix_lookups"]:
@@ -330,6 +364,7 @@ class Scheduler:
             "n_done": len(lats),
             "n_expired": n_expired,
             "n_truncated": n_truncated,
+            "n_deadlocked": n_deadlocked,
             "p50_s": float(np.percentile(arr, 50)),
             "p95_s": float(np.percentile(arr, 95)),
             "mean_s": float(arr.mean()),

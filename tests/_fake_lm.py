@@ -63,6 +63,13 @@ class FakeLM:
     def paged_copy_block(cfg, cache, src, dst):
         return cache  # no pooled K/V to copy
 
+    @staticmethod
+    def mixed_step(cfg, pol, params, tokens, cache, block_tables, q_start, q_len,
+                   block_size):
+        # stateless next-token rule: per-lane logits are all the unified
+        # engine reads (it takes lane q_len - 1), so no pool K/V needed
+        return FakeLM._logits(tokens), cache
+
 
 def expected_answer(end_token: int, budget: int) -> list[int]:
     """Closed-form answer of the FakeLM for a prompt ending in end_token."""

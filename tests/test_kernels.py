@@ -150,6 +150,130 @@ def test_decode_partials_combine_equals_monolithic():
     assert_allclose(np.asarray(combined), np.asarray(full, np.float32), rtol=2e-5, atol=2e-5)
 
 
+# ---------------- chunked prefill (mixed prefill+decode) ----------------
+def _mixed_oracle_np(q, kp, vp, tables, desc):
+    """Independent float64 numpy oracle for the descriptor contract: lane
+    ``j`` of row ``r`` attends positions ``<= q_start + j`` and ``<
+    kv_len`` of its slot's gathered pool view; dead lanes are exactly 0."""
+    q, kp, vp = (np.asarray(a, np.float64) for a in (q, kp, vp))
+    tables = np.asarray(tables)
+    r, w, h, dh = q.shape
+    bs, kv = kp.shape[1], kp.shape[2]
+    g = h // kv
+    out = np.zeros_like(q)
+    for i in range(r):
+        slot, q0, ql, kl = (int(x) for x in np.asarray(desc)[i])
+        kview = kp[tables[slot]].reshape(-1, kv, dh)
+        vview = vp[tables[slot]].reshape(-1, kv, dh)
+        for j in range(ql):
+            n = min(q0 + j + 1, kl)
+            for hh in range(h):
+                s = kview[:n, hh // g] @ q[i, j, hh] / np.sqrt(dh)
+                p = np.exp(s - s.max())
+                out[i, j, hh] = (p / p.sum()) @ vview[:n, hh // g]
+    return out
+
+
+def _rand_mixed_case(rng, b, w, h, kv, dh, bs, n_t):
+    """Random pool + disjoint shuffled tables + a descriptor mix covering
+    decode rows, cold/warm fill chunks, a COW-style boundary row, and a
+    zero-length row when b allows."""
+    n_pool = b * n_t + 1
+    kk = jax.random.PRNGKey(rng.integers(2**31))
+    q = jax.random.normal(kk, (b, w, h, dh))
+    kp = jax.random.normal(jax.random.fold_in(kk, 1), (n_pool, bs, kv, dh))
+    vp = jax.random.normal(jax.random.fold_in(kk, 2), (n_pool, bs, kv, dh))
+    tables = jnp.asarray(
+        rng.permutation(n_pool - 1)[: b * n_t].reshape(b, n_t), jnp.int32
+    )
+    cap = n_t * bs
+    desc = np.zeros((b, 4), np.int32)
+    for i in range(b):
+        kind = ["decode", "cold", "warm", "boundary", "dead"][i % 5]
+        if kind == "decode":  # 1 fresh token at the tip of a live cache
+            q0 = int(rng.integers(0, cap))
+            desc[i] = (i, q0, 1, q0 + 1)
+        elif kind == "cold":  # prompt chunk from position 0
+            ql = int(rng.integers(1, w + 1))
+            desc[i] = (i, 0, ql, ql)
+        elif kind == "warm":  # suffix chunk riding resident prefix K/V
+            q0 = int(rng.integers(1, cap - 1))
+            ql = int(rng.integers(1, min(w, cap - q0) + 1))
+            desc[i] = (i, q0, ql, q0 + ql)
+        elif kind == "boundary":  # full-prefix COW hit: single suffix lane
+            kl = int(rng.integers(1, cap + 1))
+            desc[i] = (i, kl - 1, 1, kl)
+        else:  # zero-length suffix: inert row, must output exact 0
+            desc[i] = (i, int(rng.integers(0, cap)), 0, int(rng.integers(1, cap)))
+    return q, kp, vp, tables, jnp.asarray(desc)
+
+
+@pytest.mark.parametrize(
+    "b,w,h,kv,dh,bs,n_t", [(5, 6, 8, 4, 32, 16, 4), (6, 4, 4, 4, 16, 4, 3), (3, 8, 16, 2, 64, 8, 2)]
+)
+def test_mixed_prefill_attention_sweep(b, w, h, kv, dh, bs, n_t):
+    """Unified kernel vs the jnp ref vs an independent float64 numpy
+    oracle on a batch mixing every descriptor kind the engine emits."""
+    from repro.kernels.chunked_prefill.kernel import mixed_prefill_attention_pallas
+    from repro.kernels.chunked_prefill.ref import mixed_prefill_attention_ref
+
+    rng = np.random.default_rng(b * w + n_t)
+    q, kp, vp, tables, desc = _rand_mixed_case(rng, b, w, h, kv, dh, bs, n_t)
+    o_p = mixed_prefill_attention_pallas(q, kp, vp, tables, desc)
+    o_r = mixed_prefill_attention_ref(q, kp, vp, tables, desc)
+    assert_allclose(np.asarray(o_p), np.asarray(o_r), rtol=2e-5, atol=2e-5)
+    o_n = _mixed_oracle_np(q, kp, vp, tables, desc)
+    assert_allclose(np.asarray(o_r), o_n, rtol=1e-5, atol=1e-5)
+    # dead lanes (j >= q_len) must be exactly zero in both implementations
+    lanes = np.arange(w)[None, :] >= np.asarray(desc)[:, 2][:, None]
+    assert (np.asarray(o_p)[lanes] == 0).all() and (np.asarray(o_r)[lanes] == 0).all()
+
+
+@given(
+    b=st.integers(1, 6),
+    w=st.integers(1, 7),
+    bs=st.sampled_from([4, 8]),
+    n_t=st.integers(1, 4),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=15, deadline=None)
+def test_mixed_prefill_attention_property(b, w, bs, n_t, seed):
+    """Ragged descriptor mixes under hypothesis: pallas == ref for any
+    (decode / cold / warm / boundary / zero-length) row combination."""
+    from repro.kernels.chunked_prefill.kernel import mixed_prefill_attention_pallas
+    from repro.kernels.chunked_prefill.ref import mixed_prefill_attention_ref
+
+    rng = np.random.default_rng(seed)
+    q, kp, vp, tables, desc = _rand_mixed_case(rng, b, w, 4, 2, 16, bs, n_t)
+    o_p = mixed_prefill_attention_pallas(q, kp, vp, tables, desc)
+    o_r = mixed_prefill_attention_ref(q, kp, vp, tables, desc)
+    assert_allclose(np.asarray(o_p), np.asarray(o_r), rtol=2e-5, atol=2e-5)
+    lanes = np.arange(w)[None, :] >= np.asarray(desc)[:, 2][:, None]
+    assert (np.asarray(o_p)[lanes] == 0).all()
+
+
+def test_mixed_prefill_trash_blocks_never_leak():
+    """Positions past ``kv_len`` — including whole table entries pointing
+    at a garbage trash block (how the engine pads dead lanes' K/V
+    scatter) — must contribute exactly nothing to any live lane."""
+    from repro.kernels.chunked_prefill.ref import mixed_prefill_attention_ref
+
+    b, w, h, kv, dh, bs = 2, 4, 4, 2, 16, 8
+    kk = jax.random.PRNGKey(3)
+    q = jax.random.normal(kk, (b, w, h, dh))
+    kp = jax.random.normal(jax.random.fold_in(kk, 1), (7, bs, kv, dh))
+    vp = jax.random.normal(jax.random.fold_in(kk, 2), (7, bs, kv, dh))
+    trash = 6
+    tables = jnp.asarray([[0, 1, trash], [2, 3, trash]], jnp.int32)
+    # row 0: warm fill ending mid-block-1; row 1: decode at the tip
+    desc = jnp.asarray([[0, 8, 4, 12], [1, 10, 1, 11]], jnp.int32)
+    base = mixed_prefill_attention_ref(q, kp, vp, tables, desc)
+    kp2 = kp.at[trash].set(1e4).at[1, 4:].set(-1e4).at[3, 3:].set(-1e4)
+    vp2 = vp.at[trash].set(1e4).at[1, 4:].set(-1e4).at[3, 3:].set(-1e4)
+    poisoned = mixed_prefill_attention_ref(q, kp2, vp2, tables, desc)
+    assert_allclose(np.asarray(base), np.asarray(poisoned), rtol=0, atol=0)
+
+
 # ---------------- ssd scan ----------------
 @pytest.mark.parametrize("b,l,h,hd,ds", [(1, 16, 2, 8, 8), (2, 32, 4, 16, 8), (2, 64, 2, 32, 16)])
 def test_ssd_chunk_sweep(b, l, h, hd, ds):

@@ -318,28 +318,32 @@ def test_prefix_cache_config_validation(small_lm):
     cfg, params = small_lm
     with pytest.raises(ValueError, match="requires paged"):
         ServeEngine(cfg, POL, params, ServeConfig(prefix_cache=True, paged=False))
-    with pytest.raises(ValueError, match="attn_chunk"):
-        ServeEngine(
-            cfg.with_overrides(attn_chunk=8), POL, params,
-            ServeConfig(prefix_cache=True, paged=True, max_prompt_len=16),
-        )
     ssm = smoke_config(get_config("mamba2-1.3b")).with_overrides(dtype="float32")
     with pytest.raises(ValueError, match="all-attention"):
         ServeEngine(ssm, POL, {}, ServeConfig(prefix_cache=True, paged=True))
-    # pallas prefill would make cold (flash-kernel) and warm (XLA) rows
-    # numerically diverge — hit-vs-miss parity must reject it
-    with pytest.raises(ValueError, match="pallas"):
-        ServeEngine(
-            cfg.with_overrides(attn_impl="pallas"), POL, params,
-            ServeConfig(prefix_cache=True, paged=True),
-        )
-    # a bf16 pool rounds the shared prefix K/V that a cold prefill would
-    # attend to in f32 — same hit-vs-miss divergence, same rejection
-    with pytest.raises(ValueError, match="float32"):
-        ServeEngine(
-            cfg.with_overrides(dtype="bfloat16"), POL, params,
-            ServeConfig(prefix_cache=True, paged=True, max_prompt_len=16),
-        )
+    # configs the dense+suffix pipeline cannot serve bit-consistently —
+    # pallas attention, prompts longer than attn_chunk, non-f32 caches —
+    # are no longer rejected: they auto-route to the unified chunked-
+    # prefill path, where cold and warm rows both attend through the pool
+    for c, kw in [
+        (cfg.with_overrides(attn_chunk=8), dict(max_prompt_len=16)),
+        (cfg.with_overrides(attn_impl="pallas"), {}),
+        (cfg.with_overrides(dtype="bfloat16"), dict(max_prompt_len=16)),
+    ]:
+        eng = ServeEngine(c, POL, params, ServeConfig(prefix_cache=True, paged=True, **kw))
+        assert eng._unified, "restricted prefix config must auto-route to unified"
+    # a conforming config (f32, naive attn, prompts within attn_chunk)
+    # keeps the legacy dense+suffix pipeline
+    assert not ServeEngine(
+        cfg, POL, params, ServeConfig(prefix_cache=True, paged=True, max_prompt_len=16)
+    )._unified
+    # explicit token_budget has its own preconditions
+    with pytest.raises(ValueError, match="requires.*paged"):
+        ServeEngine(cfg, POL, params, ServeConfig(token_budget=8, paged=False))
+    with pytest.raises(ValueError, match="all-attention"):
+        ServeEngine(ssm, POL, {}, ServeConfig(token_budget=8, paged=True))
+    with pytest.raises(ValueError, match="token_budget"):
+        ServeEngine(cfg, POL, params, ServeConfig(token_budget=0, paged=True))
 
 
 # ------------------------------------------------------------------ #
@@ -361,3 +365,186 @@ def test_bucketed_admission_dispatch_count(monkeypatch):
     eng2.serve_prompts([prompt_ending(e) for e in (250, 0, 10)])
     # 3 waiting -> pow2 buckets 2 + 1
     assert eng2.admit_rows_total == 3 and eng2.admit_dispatches == 2
+
+
+# ------------------------------------------------------------------ #
+# unified chunked prefill: one mixed dispatch per engine step
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("block_size", [4, 8, 16])
+def test_unified_matches_legacy_paged_bitwise(small_lm, block_size):
+    """Acceptance: for the same admission order, the unified token-budget
+    engine must produce the PR-5 pipeline's tokens BIT-IDENTICALLY on a
+    ragged prompt/budget workload — prompts chunk across steps (budget 3
+    splits every prompt) and decode rides the same dispatches, yet every
+    emitted token matches the dedicated admit-prefill path."""
+    cfg, params = small_lm
+    base_kw = dict(max_batch=2, max_prompt_len=11, max_new_tokens=5, sched_chunk=2)
+    rng = np.random.default_rng(42)
+    prompts = [
+        rng.integers(8, cfg.vocab_size, size=n).astype(np.int32)
+        for n in (9, 11, 6, 3, 11, 7)
+    ]
+    budgets = [5, 1, 4, 5, 2, 5]
+    legacy = ServeEngine(
+        cfg, POL, params, ServeConfig(paged=True, block_size=block_size, **base_kw)
+    )
+    want = legacy.serve_prompts(prompts, max_new_tokens=budgets)
+    for tb in (3, 11):
+        uni = ServeEngine(
+            cfg, POL, params,
+            ServeConfig(paged=True, block_size=block_size, token_budget=tb, **base_kw),
+        )
+        got = uni.serve_prompts(prompts, max_new_tokens=budgets)
+        for i, (w, g) in enumerate(zip(want, got)):
+            assert np.array_equal(w, g), (
+                f"tb={tb} prompt {i}: unified {list(g)} != legacy {list(w)}"
+            )
+        assert uni.admit_dispatches == 0 and uni.mixed_dispatches > 0
+
+
+@pytest.mark.parametrize("block_size", [4, 8, 16])
+def test_unified_prefix_shared_matches_dense_pipeline_bitwise(small_lm, block_size):
+    """Prefix sharing through the unified path (host-ordered pending
+    chunks instead of dependency waves) must reproduce the dense+suffix
+    pipeline bit-for-bit on the same COW + sibling workload, and still
+    actually share (hits, tokens saved)."""
+    cfg, params = small_lm
+    base_kw = dict(max_batch=2, max_prompt_len=20, max_new_tokens=5, sched_chunk=2)
+    rng = np.random.default_rng(42)
+    pre = rng.integers(8, cfg.vocab_size, size=16).astype(np.int32)
+    tails = [rng.integers(8, cfg.vocab_size, size=n).astype(np.int32) for n in (1, 3, 2)]
+    prompts = [
+        np.concatenate([pre, tails[0]]),
+        np.concatenate([pre, tails[1]]),  # same-pass sibling: waits on pending chunks
+        pre.copy(),                        # full-prefix hit -> COW boundary block
+        rng.integers(8, cfg.vocab_size, size=9).astype(np.int32),
+        pre.copy(),
+        np.concatenate([pre, tails[2]]),
+    ]
+    budgets = [5, 1, 4, 5, 2, 3]
+    legacy = ServeEngine(
+        cfg, POL, params,
+        ServeConfig(paged=True, prefix_cache=True, block_size=block_size, **base_kw),
+    )
+    want = legacy.serve_prompts(prompts, max_new_tokens=budgets)
+    uni = ServeEngine(
+        cfg, POL, params,
+        ServeConfig(paged=True, prefix_cache=True, block_size=block_size,
+                    token_budget=7, **base_kw),
+    )
+    got = uni.serve_prompts(prompts, max_new_tokens=budgets)
+    for i, (w, g) in enumerate(zip(want, got)):
+        assert np.array_equal(w, g), f"prompt {i}: unified {list(g)} != dense {list(w)}"
+    assert uni.prefix_hits >= 3 and uni.prefill_tokens_saved > 0
+
+
+def test_unified_lifts_dense_pipeline_restrictions(small_lm):
+    """The configs the dense+suffix pipeline rejected — pallas attention
+    and prompts longer than attn_chunk — must now SERVE through the
+    auto-routed unified path with hit-vs-miss bit-parity (cold and warm
+    rows both attend through the pool, so sharing cannot change tokens)."""
+    cfg, params = small_lm
+    base_kw = dict(max_batch=2, max_prompt_len=20, max_new_tokens=4, sched_chunk=2,
+                   paged=True, block_size=8)
+    rng = np.random.default_rng(11)
+    pre = rng.integers(8, cfg.vocab_size, size=16).astype(np.int32)
+    prompts = [np.concatenate([pre, rng.integers(8, cfg.vocab_size, size=n).astype(np.int32)])
+               for n in (2, 3, 1)]
+    for c in (cfg.with_overrides(attn_impl="pallas"), cfg.with_overrides(attn_chunk=8)):
+        hit_eng = ServeEngine(c, POL, params, ServeConfig(prefix_cache=True, **base_kw))
+        assert hit_eng._unified
+        hit = hit_eng.serve_prompts(prompts, max_new_tokens=4)
+        miss = ServeEngine(
+            c, POL, params,
+            ServeConfig(token_budget=hit_eng._token_budget, **base_kw),
+        ).serve_prompts(prompts, max_new_tokens=4)
+        for i, (h, m) in enumerate(zip(hit, miss)):
+            assert np.array_equal(h, m), f"prompt {i}: hit {list(h)} != miss {list(m)}"
+        assert hit_eng.prefix_hits >= 2
+
+
+def test_unified_dispatch_count_o1_per_step(monkeypatch):
+    """Regression: the unified engine must issue exactly ONE device
+    dispatch per engine step — no per-admit prefill calls (k admits in a
+    pass cost 0 admit dispatches, vs O(log k) legacy) — and the mixed
+    step must compile to a single jit trace (static shapes)."""
+    eng = make_fake_engine(
+        monkeypatch, max_batch=8, max_new_tokens=4, sched_chunk=2,
+        paged=True, block_size=4, token_budget=4,
+    )
+    ends = [250, 0, 10, 253, 99, 1, 200, 30]
+    sched = Scheduler()
+    rids = sched.submit_many([prompt_ending(e) for e in ends], 4)
+    res = eng.serve(sched)
+    for e, rid in zip(ends, rids):
+        assert list(res[rid]) == expected_answer(e, 4)
+    assert eng.admit_dispatches == 0, "unified path must not dispatch admit prefills"
+    assert eng.mixed_dispatches > 0
+    st = sched.latency_stats()
+    assert st["engine_steps"] == st["mixed_dispatches"] + st["decode_dispatches"]
+    assert st["dispatches_per_step"] == 1.0
+    cache_size = getattr(eng._mixed_rows, "_cache_size", None)
+    if cache_size is not None:  # jax-version-dependent introspection
+        assert cache_size() == 1, "mixed step must retrace O(1), not per shape"
+
+
+# ------------------------------------------------------------------ #
+# admission deadlock: typed error + graceful force-done
+# ------------------------------------------------------------------ #
+def test_resolve_admission_waves_orders_and_raises():
+    from repro.serving.engine import AdmissionDeadlock, resolve_admission_waves
+
+    def rec(slot, deps, writes):
+        return dict(slot=slot, deps=frozenset(deps), writes=frozenset(writes))
+
+    # a well-formed chain resolves in dependency order
+    a, b, c = rec(0, [], [1]), rec(1, [1], [2]), rec(2, [2], [])
+    waves = resolve_admission_waves([c, b, a])
+    assert [sorted(r["slot"] for r in w) for w in waves] == [[0], [1], [2]]
+    # a cycle raises a typed error carrying the resolved prefix + stuck rows
+    x, y = rec(3, [20], [21]), rec(4, [21], [20])
+    with pytest.raises(AdmissionDeadlock) as ei:
+        resolve_admission_waves([a, x, y])
+    assert [r["slot"] for w in ei.value.waves for r in w] == [0]
+    assert sorted(r["slot"] for r in ei.value.stuck) == [3, 4]
+    assert "stalled" in str(ei.value)
+
+
+def test_admission_deadlock_force_dones_stuck_row(monkeypatch):
+    """Regression for the former ``assert warm`` crash: a stuck warm
+    admission must retire with an EMPTY, deadlocked-flagged result (like
+    OOM truncation: degrade, never wedge or corrupt), its pool blocks and
+    cached-chunk registrations rolled back so later requests — including
+    an identical resubmission — still serve exactly."""
+    import repro.serving.engine as engine_mod
+    from repro.serving.engine import AdmissionDeadlock
+
+    eng = make_fake_engine(
+        monkeypatch, max_batch=2, max_new_tokens=4, sched_chunk=2,
+        paged=True, block_size=4, n_pool_blocks=8, prefix_cache=True,
+    )
+    real = engine_mod.resolve_admission_waves
+    tripped = []
+
+    def sabotage(pre_admits):
+        if pre_admits and not tripped:  # wedge only the first warm wave
+            tripped.append(True)
+            raise AdmissionDeadlock([], list(pre_admits))
+        return real(pre_admits)
+
+    monkeypatch.setattr(engine_mod, "resolve_admission_waves", sabotage)
+    pre = np.full((4,), 7, np.int32)  # one full block -> shareable chunk
+    prompts = [
+        np.concatenate([pre, np.array([10], np.int32)]),  # cold
+        np.concatenate([pre, np.array([20], np.int32)]),  # warm sibling: sabotaged
+        np.concatenate([pre, np.array([20], np.int32)]),  # resubmission: must work
+    ]
+    sched = Scheduler()
+    rids = sched.submit_many(prompts, 4)
+    res = eng.serve(sched)
+    assert list(res[rids[0]]) == expected_answer(10, 4)
+    assert len(res[rids[1]]) == 0, "stuck admission must retire empty, not hang"
+    assert sched.results[rids[1]].status == "done" and sched.results[rids[1]].deadlocked
+    assert list(res[rids[2]]) == expected_answer(20, 4), "pool state corrupted by rollback"
+    st = sched.latency_stats()
+    assert st["n_deadlocked"] == 1 and st["n_truncated"] == 0
