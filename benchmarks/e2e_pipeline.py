@@ -21,8 +21,12 @@ Six views of the serving cost picture:
     HBM on a short-prompt-heavy workload: concurrent slots, qps, and the
     bucketed-admission dispatch amortization
   * chunked prefill — short-decode traffic with periodic long-prompt
-    arrivals: dense single-dispatch admission vs the unified
-    token-budget mixed dispatch (short-request p95, dispatches/step)
+    arrivals: unbudgeted whole-prompt mixed dispatch vs the token-budget
+    mixed dispatch (short-request p95, dispatches/step)
+  * tenant SLO — interactive + batch classes through one resident
+    engine under saturation: weighted-fair/priority admission vs the
+    FIFO baseline (interactive p95), plus the repeated-session
+    warm-start arm (persistent prefix cache across serve calls)
 
 ``main(["--json"])`` (or benchmarks/run.py --json) writes BENCH_e2e.json
 rows with the stable ``{name, us, derived}`` schema so the perf
@@ -354,10 +358,10 @@ def run_paged_capacity(n_requests=64):
     (the designed degradation mode; its arm emits fewer tokens, which is
     why throughput is reported as generated tokens/s with the truncation
     count disclosed).  Also reported: peak concurrent slots (from the
-    scheduler's min_free_slots gauge), cache bytes, and the
-    bucketed-admission amortization (rows prefilled per fused admit
-    dispatch; power-of-2 grouping turns k waiting requests into O(log k)
-    dispatches)."""
+    scheduler's min_free_slots gauge), cache bytes, and the dispatch
+    shape — the contiguous arm's bucketed-admission amortization (rows
+    prefilled per fused admit dispatch) vs the paged arms' single mixed
+    dispatch per engine step."""
     from repro.serving.scheduler import Scheduler
 
     short_new = 8
@@ -394,14 +398,19 @@ def run_paged_capacity(n_requests=64):
         n_tokens = sum(len(r.answer) for r in sched.results.values())
         tps[name] = n_tokens / dt
         peak[name] = eng.scfg.max_batch - st["min_free_slots"]
-        amort = eng.admit_rows_total / max(eng.admit_dispatches, 1)
+        if name == "contiguous":
+            amort = eng.admit_rows_total / max(eng.admit_dispatches, 1)
+            dispatch_txt = (
+                f"admit {eng.admit_rows_total} rows/{eng.admit_dispatches} "
+                f"dispatches ({amort:.1f}x amortized)"
+            )
+        else:
+            dispatch_txt = f"{st['dispatches_per_step']:.2f} dispatch/step unified"
         derived = (
             f"{tps[name]:.0f} tok/s ({n_tokens} tokens, "
             f"{st['n_truncated']} OOM-truncated), "
             f"peak {peak[name]}/{eng.scfg.max_batch} slots, "
-            f"cache {eng.cache_nbytes() / 1e6:.2f}MB, "
-            f"admit {eng.admit_rows_total} rows/{eng.admit_dispatches} dispatches "
-            f"({amort:.1f}x amortized)"
+            f"cache {eng.cache_nbytes() / 1e6:.2f}MB, {dispatch_txt}"
         )
         if name != "contiguous":
             derived += (
@@ -445,15 +454,12 @@ def run_prefix_reuse(n_batches=6, batch=8, preamble_len=128, max_new=8):
 
     common = dict(max_batch=batch, max_prompt_len=192, max_new_tokens=max_new,
                   sched_chunk=8, paged=True, block_size=16)
-    # suffix-prefill bit-parity needs the naive attention core across the
-    # whole prompt width (smoke_config clamps attn_chunk to 64)
-    cfg_ov = dict(attn_chunk=256)
-    eng_off, cfg = _smoke_engine(cfg_ov, **common)
-    eng_on, _ = _smoke_engine(cfg_ov, prefix_cache=True, **common)
+    eng_off, cfg = _smoke_engine(**common)
+    eng_on, _ = _smoke_engine(prefix_cache=True, **common)
     full_pool = eng_off._n_pool_blocks
     half_pool = full_pool // 2
-    eng_off_h, _ = _smoke_engine(cfg_ov, n_pool_blocks=half_pool, **common)
-    eng_on_h, _ = _smoke_engine(cfg_ov, n_pool_blocks=half_pool, prefix_cache=True, **common)
+    eng_off_h, _ = _smoke_engine(n_pool_blocks=half_pool, **common)
+    eng_on_h, _ = _smoke_engine(n_pool_blocks=half_pool, prefix_cache=True, **common)
 
     rng = np.random.default_rng(7)
     prompts = []
@@ -472,9 +478,12 @@ def run_prefix_reuse(n_batches=6, batch=8, preamble_len=128, max_new=8):
 
     engines = {"off": eng_off, "on": eng_on, "off_half": eng_off_h, "on_half": eng_on_h}
     for eng in engines.values():
-        serve_all(eng)  # warm every admit/suffix/decode jit path
+        serve_all(eng)  # warm every mixed/decode jit path
     stats, times, results = {}, {}, {}
     for name, eng in engines.items():
+        # the engine is RESIDENT now: drop the warm pass's cached chains
+        # so every timed arm starts from a cold prefix index
+        eng.reset_cache()
         eng.prefix_lookups = eng.prefix_hits = 0
         eng.prefill_tokens_total = eng.prefill_tokens_saved = eng.prefix_shared_total = 0
         t0 = time.monotonic()
@@ -531,24 +540,24 @@ def run_mixed_prefill(n_requests=24, long_every=6, long_len=256, short_new=24,
     ``long_len``-token prompt.
 
     Two paged engines at identical geometry, differing ONLY in
-    ``token_budget``:
-      * ``off`` — the dense admission pipeline: a long arrival prefills
-        its whole prompt in one dispatch, so every in-flight decode row
-        stalls for the full prefill (plus the admission pass costs
-        O(log k) extra dispatches per wave of k waiting rows).
-      * ``on``  — unified chunked prefill: one mixed dispatch per engine
-        step advances at most ``token_budget`` prefill lanes AND every
-        decode row together, so the long prompt's cost is spread across
-        steps that short requests keep streaming through.  (The mixed
-        dispatch pads to ``token_budget`` query lanes every step, so on
-        the toy CPU model — where compute, not dispatch, is nearly free —
-        small budgets win; real deployments size the budget to the
-        accelerator's prefill/decode roofline instead.)
+    ``token_budget`` (both run the unified mixed dispatch — the legacy
+    dense admission pipeline is retired):
+      * ``off`` — unbudgeted: the lane cap defaults to the full prompt
+        window, so a long arrival's prefill lands in ONE whole-prompt-
+        width dispatch and every in-flight decode row stalls behind it.
+      * ``on``  — token-budget chunking: each step's mixed dispatch
+        advances at most ``token_budget`` prefill lanes AND every decode
+        row together, so the long prompt's cost is spread across steps
+        that short requests keep streaming through.  (The mixed dispatch
+        pads to its lane cap every step, so on the toy CPU model — where
+        compute, not dispatch, is nearly free — small budgets win; real
+        deployments size the budget to the accelerator's prefill/decode
+        roofline instead.)
 
     Reported: short-request (decode-traffic) p50/p95 submit->finish
     latency for both arms, plus the dispatch-count gauges.  Asserted
-    (deterministic, not timing): answers token-identical across arms, the
-    unified arm runs exactly 1 dispatch per engine step, and neither arm
+    (deterministic, not timing): answers token-identical across arms,
+    BOTH arms run exactly 1 dispatch per engine step, and neither arm
     truncates or deadlocks."""
     from repro.serving.scheduler import Scheduler
 
@@ -600,17 +609,19 @@ def run_mixed_prefill(n_requests=24, long_every=6, long_len=256, short_new=24,
     assert stats["on"]["dispatches_per_step"] == 1.0, (
         "unified serving must stay at exactly one dispatch per engine step"
     )
+    assert stats["off"]["dispatches_per_step"] == 1.0, (
+        "the unbudgeted arm runs the same unified path: 1 dispatch/step"
+    )
     off, on = stats["off"], stats["on"]
     return [
         (
             "e2e_chunked_off",
             times["off"] / n_requests * 1e6,
-            f"dense admission, {n_long}x {long_len}-tok arrivals stall decode: "
-            f"short-request p50={off['short_p50_s'] * 1e3:.0f}ms "
+            f"unbudgeted lanes: {n_long}x {long_len}-tok arrivals land whole-"
+            f"prompt dispatches that stall decode: short-request "
+            f"p50={off['short_p50_s'] * 1e3:.0f}ms "
             f"p95={off['short_p95_s'] * 1e3:.0f}ms, "
-            f"{off['admit_dispatches']} admit + {off['decode_dispatches']} decode "
-            f"dispatches over {off['engine_steps']} steps "
-            f"({off['dispatches_per_step']:.2f}/step)",
+            f"1.00 dispatch/step over {off['engine_steps']} steps",
         ),
         (
             "e2e_chunked_on",
@@ -618,9 +629,122 @@ def run_mixed_prefill(n_requests=24, long_every=6, long_len=256, short_new=24,
             f"token_budget={token_budget}: short-request "
             f"p50={on['short_p50_s'] * 1e3:.0f}ms "
             f"p95={on['short_p95_s'] * 1e3:.0f}ms "
-            f"({off['short_p95_s'] / on['short_p95_s']:.2f}x vs dense), "
-            f"1.00 dispatch/step over {on['engine_steps']} steps "
-            f"vs {off['dispatches_per_step']:.2f} dense; answers token-identical",
+            f"({off['short_p95_s'] / on['short_p95_s']:.2f}x vs unbudgeted), "
+            f"1.00 dispatch/step over {on['engine_steps']} steps; "
+            f"answers token-identical",
+        ),
+    ]
+
+
+def run_tenant_slo(n_batchjobs=12, n_interactive=6, batch_new=24, inter_new=4):
+    """Per-tenant SLO classes through ONE resident engine under
+    saturation (the headline of the multi-tenant serving core).
+
+    Workload: a flood of ``n_batchjobs`` long-budget "batch" requests
+    submitted ahead of ``n_interactive`` short "interactive" requests, at
+    ``max_batch=2`` so the queue is the contended resource.  Three arms:
+      * ``fifo`` — global arrival order: every interactive request waits
+        behind the whole batch flood, so its p95 collapses to roughly the
+        flood's makespan.
+      * ``fair`` — class priority + stride weighted-fair admission: the
+        interactive class preempts the QUEUE (never a running slot — at
+        most one in-flight batch decode of ``batch_new`` tokens bounds
+        its wait) and holds its p95; the batch class's added wait is
+        disclosed, not hidden.
+      * ``warm`` — the repeated-session arm: the same resident engine
+        serves one session's shared-preamble prompts twice; the second
+        call rides the persistent prefix cache (hit rate, prefill tokens
+        saved, wall-clock ratio — state survives across ``serve()``
+        calls, the thing a per-call engine cannot do).
+
+    Asserted: interactive p95 under weighted-fair beats FIFO; the warm
+    pass hits the cache on every prompt and its answers are bit-identical
+    to the cold pass."""
+    from repro.serving.scheduler import Scheduler
+
+    common = dict(max_batch=2, max_prompt_len=128, max_new_tokens=batch_new,
+                  sched_chunk=4, paged=True, prefix_cache=True, block_size=16)
+    eng, cfg = _smoke_engine(**common)
+    rng = np.random.default_rng(13)
+    batch_prompts = [
+        rng.integers(8, cfg.vocab_size, size=int(rng.integers(24, 48))).astype(np.int32)
+        for _ in range(n_batchjobs)
+    ]
+    inter_prompts = [
+        rng.integers(8, cfg.vocab_size, size=int(rng.integers(8, 16))).astype(np.int32)
+        for _ in range(n_interactive)
+    ]
+    n_total = n_batchjobs + n_interactive
+    weights = {"batch": 1.0, "interactive": 4.0}
+
+    def serve_arm(fifo):
+        eng.reset_cache()
+        sched = Scheduler(tenant_weights=weights, fifo=fifo)
+        sched.submit_many(batch_prompts, batch_new, tenants="batch")
+        sched.submit_many(inter_prompts, inter_new, tenants="interactive", priorities=1)
+        t0 = time.monotonic()
+        eng.serve(sched)
+        return sched.latency_stats(), time.monotonic() - t0
+
+    serve_arm(True)  # warm every mixed/decode jit path
+    st_fifo, dt_fifo = serve_arm(fifo=True)
+    st_fair, dt_fair = serve_arm(fifo=False)
+    i_fifo = st_fifo["tenants"]["interactive"]
+    i_fair = st_fair["tenants"]["interactive"]
+    b_fair = st_fair["tenants"]["batch"]
+    assert i_fair["p95_s"] < i_fifo["p95_s"], (
+        "weighted-fair admission must beat FIFO on interactive p95 "
+        f"({i_fair['p95_s']:.3f}s vs {i_fifo['p95_s']:.3f}s)"
+    )
+
+    # repeated-session warm start: same resident engine, same session
+    pre = rng.integers(8, cfg.vocab_size, size=96).astype(np.int32)
+    session = [
+        np.concatenate([pre, rng.integers(8, cfg.vocab_size, size=8).astype(np.int32)])
+        for _ in range(n_interactive)
+    ]
+
+    def serve_session():
+        sched = Scheduler()
+        rids = sched.submit_many(session, inter_new, tenants="interactive")
+        t0 = time.monotonic()
+        res = eng.serve(sched)
+        return sched.latency_stats(), time.monotonic() - t0, [res[r] for r in rids]
+
+    eng.reset_cache()
+    st_cold, dt_cold, ans_cold = serve_session()
+    st_warm, dt_warm, ans_warm = serve_session()
+    assert st_warm["prefix_hit_rate"] == 1.0 and st_warm["prefill_tokens_saved"] > 0, (
+        "the resident prefix cache must survive into the second serve call"
+    )
+    for a, b in zip(ans_cold, ans_warm):
+        assert np.array_equal(a, b), "warm restart changed tokens"
+    return [
+        (
+            "e2e_tenant_fifo",
+            dt_fifo / n_total * 1e6,
+            f"FIFO baseline: interactive p50={i_fifo['p50_s'] * 1e3:.0f}ms "
+            f"p95={i_fifo['p95_s'] * 1e3:.0f}ms behind a {n_batchjobs}-job "
+            f"batch flood at 2 slots",
+        ),
+        (
+            "e2e_tenant_fair",
+            dt_fair / n_total * 1e6,
+            f"priority + weighted-fair: interactive "
+            f"p50={i_fair['p50_s'] * 1e3:.0f}ms p95={i_fair['p95_s'] * 1e3:.0f}ms "
+            f"({i_fifo['p95_s'] / i_fair['p95_s']:.1f}x better than FIFO); "
+            f"batch p95={b_fair['p95_s'] * 1e3:.0f}ms "
+            f"({b_fair['n_done']}/{n_batchjobs} done — queue preemption only, "
+            f"running slots never preempted)",
+        ),
+        (
+            "e2e_tenant_warm",
+            dt_warm / n_interactive * 1e6,
+            f"2nd serve() on the resident engine: hit rate "
+            f"{st_warm['prefix_hit_rate']:.0%}, "
+            f"{st_warm['prefill_tokens_saved']} prefill tokens saved, "
+            f"{dt_cold / dt_warm:.2f}x wall-clock vs cold session; "
+            f"answers bit-identical",
         ),
     ]
 
@@ -643,6 +767,7 @@ def main(argv=None):
         + run_paged_capacity()
         + run_prefix_reuse()
         + run_mixed_prefill()
+        + run_tenant_slo()
     )
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

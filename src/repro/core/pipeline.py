@@ -163,6 +163,10 @@ class CFedRAGSystem:
         *,
         max_new_tokens: int | list[int] | None = None,
         gen_deadline_s: float | list[float | None] | None = None,
+        tenants: str | list[str] | None = None,
+        priorities: int | list[int] | None = None,
+        tenant_weights: dict[str, float] | None = None,
+        fifo: bool = False,
     ) -> list[dict]:
         """Scheduler-driven Algorithm 1: concurrent provider fan-out for
         collect, one batched aggregation pass, then generation through the
@@ -170,9 +174,15 @@ class CFedRAGSystem:
         ``engine_generator``) so ragged generations retire early and free
         their slot.  Per-request generation budgets/deadlines flow through
         to the scheduler; each result carries its ``latency_s``
-        (submit -> finish) so callers can report p50/p95.  Falls back to
-        ``answer_batch`` semantics when no engine-backed generator is
-        wired."""
+        (submit -> finish) so callers can report p50/p95.
+
+        Tenant SLO classes: ``tenants``/``priorities`` tag each query with
+        its tenant and admission class (scalar or per-query list), and
+        ``tenant_weights`` sets the weighted-fair admission shares
+        (``fifo=True`` forces the global-arrival-order baseline).
+        Per-tenant latency/prefix gauges land in
+        ``last_serve_stats["tenants"]``.  Falls back to ``answer_batch``
+        semantics when no engine-backed generator is wired."""
         queries = list(query_texts)
         if not queries:
             return []
@@ -204,10 +214,13 @@ class CFedRAGSystem:
         # their preamble KV blocks instead of re-prefilling them
         width = engine.scfg.max_prompt_len
         prompts = [orch.build_prompt(q, c, max_len=width) for q, c in zip(queries, contexts)]
-        sched = Scheduler()
+        sched = Scheduler(tenant_weights=tenant_weights, fifo=fifo)
         # scalar-or-list broadcast (with length validation) lives in
         # submit_many, shared by every serve entry point
-        rids = sched.submit_many(prompts, max_new_tokens, gen_deadline_s)
+        rids = sched.submit_many(
+            prompts, max_new_tokens, gen_deadline_s,
+            tenants=tenants, priorities=priorities,
+        )
         answers = engine.serve(sched)
         # latency percentiles + engine occupancy gauges (free slots / free
         # KV blocks) + the federation health ledger for callers that
@@ -226,6 +239,10 @@ class CFedRAGSystem:
         max_new_tokens: int | list[int] | None = None,
         gen_deadline_s: float | list[float | None] | None = None,
         collect_batch: int = 8,
+        tenants: str | list[str] | None = None,
+        priorities: int | list[int] | None = None,
+        tenant_weights: dict[str, float] | None = None,
+        fifo: bool = False,
     ):
         """Pipelined (double-buffered) front door: a collector thread runs
         ``collect_contexts_batch``/``aggregate_batch`` for micro-batch N+1
@@ -254,7 +271,12 @@ class CFedRAGSystem:
         continuous = getattr(orch.generator, "mode", "continuous") == "continuous"
         if orch.generator is None or engine is None or not continuous:
             for i, out in enumerate(
-                self.serve(queries, max_new_tokens=max_new_tokens, gen_deadline_s=gen_deadline_s)
+                self.serve(
+                    queries, max_new_tokens=max_new_tokens,
+                    gen_deadline_s=gen_deadline_s, tenants=tenants,
+                    priorities=priorities, tenant_weights=tenant_weights,
+                    fifo=fifo,
+                )
             ):
                 yield i, out
             return
@@ -263,9 +285,11 @@ class CFedRAGSystem:
         n = len(queries)
         budgets = _broadcast(max_new_tokens, n, "max_new_tokens")
         deadlines = _broadcast(gen_deadline_s, n, "gen_deadline_s")
+        tenant_l = _broadcast(tenants if tenants is not None else "default", n, "tenants")
+        prio_l = _broadcast(priorities if priorities is not None else 0, n, "priorities")
         collect_batch = max(1, int(collect_batch))
         width = engine.scfg.max_prompt_len
-        sched = Scheduler()
+        sched = Scheduler(tenant_weights=tenant_weights, fifo=fifo)
         info: dict[int, tuple] = {}  # qidx -> (prompt, context, n_providers)
         degraded: dict[int, dict] = {}  # qidx -> quorum-degraded result
         collect_err: list[BaseException] = []
@@ -312,6 +336,8 @@ class CFedRAGSystem:
                         [deadlines[i] for i in idxs],
                         tags=idxs,
                         t0=t0,
+                        tenants=[tenant_l[i] for i in idxs],
+                        priorities=[prio_l[i] for i in idxs],
                     )
             except BaseException as e:  # surfaced to the consumer below
                 collect_err.append(e)

@@ -269,61 +269,6 @@ def attn_decode_paged(cfg: ModelConfig, pol: ShardingPolicy, p, x, k_pool, v_poo
     return out, k_pool, v_pool
 
 
-def attn_prefill_paged(cfg: ModelConfig, pol: ShardingPolicy, p, x, k_pool, v_pool,
-                       positions, block_tables, block_size: int, attend_len: int):
-    """SUFFIX prefill against a paged KV cache: the prompt's first
-    ``start`` positions already sit in (shared) pool blocks; only the
-    suffix rides in ``x``.
-
-    ``x``: ``(B, S_w, d)`` suffix activations; ``positions``: ``(B,
-    S_w)`` absolute positions ``start[b] + j`` (RoPE and causal masking
-    both key off it).  Attention runs over a dense ``attend_len``-lane
-    view: lanes ``< start`` gather the shared prefix K/V from the pool,
-    lanes ``[start, start + S_w)`` take the freshly projected suffix K/V
-    (activation dtype — exactly what the dense prefill attends to), and
-    every lane ``> position`` is masked to ``-1e30`` so its content
-    contributes exactly 0.  With ``attend_len`` equal to the dense
-    prefill's packed width, per-row softmax lane counts match and the
-    suffix outputs are BIT-identical to a full prefill of the same
-    prompt (asserted in tests/test_serving.py) while spending only
-    ``S_w / width`` of the FLOPs.
-
-    Returns ``(o, k_suffix, v_suffix)`` — the suffix K/V is handed back
-    for ``models/lm.paged_scatter_prefill(start_pos=...)`` to write into
-    the pool after the forward; shared prefix blocks are never written.
-    """
-    b, s_w = x.shape[0], x.shape[1]
-    q, k_new, v_new = attn_qkv(cfg, pol, p, x, positions)
-    s_pad = block_tables.shape[1] * block_size
-    k_view = k_pool[block_tables].reshape(b, s_pad, *k_pool.shape[2:])[:, :attend_len]
-    v_view = v_pool[block_tables].reshape(b, s_pad, *v_pool.shape[2:])[:, :attend_len]
-    # place the fresh suffix K/V over its lanes of the gathered view
-    lane = jnp.arange(attend_len)
-    j = lane[None, :] - positions[:, :1]  # (B, W): suffix index of each lane
-    place = (j >= 0) & (j < s_w)
-    jc = jnp.clip(j, 0, s_w - 1)[..., None, None]
-    k_att = jnp.where(
-        place[..., None, None],
-        jnp.take_along_axis(k_new, jc, axis=1),
-        k_view.astype(q.dtype),
-    )
-    v_att = jnp.where(
-        place[..., None, None],
-        jnp.take_along_axis(v_new, jc, axis=1),
-        v_view.astype(q.dtype),
-    )
-    scale = 1.0 / np.sqrt(q.shape[-1])
-    logits = _gqa_logits(q, k_att) * scale  # (B,KV,G,S_w,W)
-    valid = (lane[None, :] <= positions[..., None])[:, None, None]  # (B,1,1,S_w,W)
-    logits = jnp.where(valid, logits, -1e30)
-    probs = jax.nn.softmax(logits, axis=-1)
-    out = _gqa_out(probs, v_att, q.dtype)  # (B,S_w,H,hd)
-    out = pol.shard(out, "act_batch", "act_seq", "act_heads", None)
-    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
-    out = pol.shard(out, "act_batch", "act_seq", "act_embed")
-    return out, k_new, v_new
-
-
 def attn_mixed_paged(cfg: ModelConfig, pol: ShardingPolicy, p, x, k_pool, v_pool,
                      positions, block_tables, block_size: int, q_len):
     """UNIFIED mixed prefill+decode attention against a paged KV cache:

@@ -81,13 +81,12 @@ def param_specs(cfg: ModelConfig) -> dict:
 def _run_position(cfg, pol, i, pp, h, positions, mode, cache_in, pos, paged=None):
     """One layer (mixer + ffn).  cache_in: per-position cache pytree or None.
     ``paged``: None (contiguous cache) or ``(block_tables, block_size)``
-    (+ ``attend_len`` in ``prefill_paged`` mode) — attention then
-    reads/writes K/V through the block table (non-attention state is
-    per-slot in both layouts).  ``prefill_paged`` is the suffix-prefill
-    mode of the prefix cache: the pool already holds positions below the
-    row's start, ``h`` carries only suffix positions, and the returned
-    cache_out is the suffix K/V (scattered into the pool by the caller).
-    Returns (h, cache_out, aux)."""
+    (+ ``q_len`` in ``mixed`` mode) — attention then reads/writes K/V
+    through the block table (non-attention state is per-slot in both
+    layouts).  ``mixed`` is the unified serving mode: each row carries a
+    prompt chunk or a single decode token, and the layer scatters fresh
+    K/V into the pool before attending, so prompts may resume at any
+    chunk boundary.  Returns (h, cache_out, aux)."""
     aux = jnp.zeros((), f32)
     x = L.rmsnorm(h, pp["mixer_norm"], cfg.norm_eps)
     cache_out = None
@@ -98,13 +97,6 @@ def _run_position(cfg, pol, i, pp, h, positions, mode, cache_in, pos, paged=None
                 cfg, pol, pp["attn"], x, cache_in["k"], cache_in["v"], pos, tables, bs
             )
             cache_out = {"k": k_c, "v": v_c}
-        elif mode == "prefill_paged":
-            tables, bs, attend_len = paged
-            o, k_s, v_s = L.attn_prefill_paged(
-                cfg, pol, pp["attn"], x, cache_in["k"], cache_in["v"],
-                positions, tables, bs, attend_len,
-            )
-            cache_out = {"k": k_s, "v": v_s}
         elif mode == "mixed":
             tables, bs, q_len = paged
             o, k_c, v_c = L.attn_mixed_paged(
@@ -131,11 +123,11 @@ def _run_position(cfg, pol, i, pp, h, positions, mode, cache_in, pos, paged=None
         else:
             o = L.attn_apply(cfg, pol, pp["attn"], x, positions)
     else:
-        if mode in ("prefill_paged", "mixed"):
+        if mode == "mixed":
             raise NotImplementedError(
-                "prefix-cached suffix prefill / unified mixed dispatch needs every "
-                "mixer to be attention: SSM/conv state folds the whole sequence "
-                "and cannot restart mid-prompt"
+                "unified mixed dispatch needs every mixer to be attention: "
+                "SSM/conv state folds the whole sequence and cannot restart "
+                "mid-prompt"
             )
         if mode == "decode":
             o, conv, ssm = M.mamba_decode(cfg, pol, pp["mamba"], x, cache_in["conv"], cache_in["ssm"])
@@ -294,61 +286,6 @@ def init_paged_cache(cfg: ModelConfig, n_pool_blocks: int, block_size: int, n_sl
     return blk
 
 
-def paged_scatter_prefill(cfg: ModelConfig, cache, row_cache, block_ids, slots, block_size: int,
-                          start_pos=None, suffix_lens=None):
-    """Scatter a ``g``-row contiguous prefill cache into a paged cache.
-
-    Default (``start_pos=None``): ``row_cache`` comes straight from
-    ``prefill`` with ``cache_len`` a block multiple — attention leaves
-    ``(n_layers, g, n_max_blocks * bs, kv, hd)`` are re-chunked to
-    ``(n_layers, g, n_max_blocks, bs, ...)`` and scattered to pool blocks
-    ``block_ids[r, i]`` (``(g, n_max_blocks)`` int32; entries past a
-    row's allocation point at the trash block, so short prompts never
-    touch live pool blocks).
-
-    Suffix mode (``start_pos``: ``(g,)`` per-row first prompt position to
-    write): ``row_cache`` holds only SUFFIX positions — attention leaves
-    ``(n_layers, g, S_w, kv, hd)`` from ``paged_prefill_suffix`` — and
-    lane ``j`` of row ``r`` lands at pool position ``start_pos[r] + j``
-    through the row's block table.  Lanes at or past ``suffix_lens[r]``
-    (packing pad) are redirected to the trash block (last pool index), so
-    a shared prefix block — refcount > 1, positions below ``start_pos``
-    — is NEVER written; copy-on-write of a boundary block is the
-    engine's job before this scatter runs.
-    Per-slot (SSM/conv) leaves scatter by ``slots`` exactly like the
-    contiguous admit path in both modes."""
-    out = {}
-    for key, sub in cache.items():
-        rsub = row_cache[key]
-        if "k" in sub:  # attention: pooled K/V
-            if start_pos is None:
-
-                def put(pool, rows):
-                    n_l, g, s_row = rows.shape[0], rows.shape[1], rows.shape[2]
-                    rows = rows.reshape(n_l, g, s_row // block_size, block_size, *rows.shape[3:])
-                    return pool.at[:, block_ids].set(rows.astype(pool.dtype))
-
-            else:
-
-                def put(pool, rows):
-                    g, s_w = rows.shape[1], rows.shape[2]
-                    trash = pool.shape[1] - 1
-                    s_pad = block_ids.shape[1] * block_size
-                    pos = start_pos[:, None] + jnp.arange(s_w)[None, :]  # (g, S_w)
-                    pos = jnp.minimum(pos, s_pad - 1)
-                    valid = jnp.arange(s_w)[None, :] < suffix_lens[:, None]
-                    bid = block_ids[jnp.arange(g)[:, None], pos // block_size]
-                    bid = jnp.where(valid, bid, trash)
-                    return pool.at[:, bid, pos % block_size].set(rows.astype(pool.dtype))
-
-            out[key] = {"k": put(sub["k"], rsub["k"]), "v": put(sub["v"], rsub["v"])}
-        else:  # per-slot state: same scatter as the contiguous path
-            out[key] = jax.tree.map(
-                lambda c, rc: c.at[:, slots].set(rc.astype(c.dtype)), sub, rsub
-            )
-    return out
-
-
 def paged_copy_block(cfg: ModelConfig, cache, src, dst):
     """Copy one pool block's K/V across every attention layer — the
     copy-on-write half of prefix sharing.  ``src`` holds a cached chunk
@@ -356,8 +293,8 @@ def paged_copy_block(cfg: ModelConfig, cache, src, dst):
     overwrite (full-prefix hit ending on a block boundary: the last
     prompt token's K/V write lands in it); the engine allocates ``dst``
     privately, copies, and repoints the request's table before the
-    suffix prefill scatter runs.  Per-slot (SSM/conv) leaves have no
-    block axis and pass through untouched."""
+    row's first mixed-dispatch write runs.  Per-slot (SSM/conv) leaves
+    have no block axis and pass through untouched."""
     out = {}
     for key, sub in cache.items():
         if "k" in sub:
@@ -370,40 +307,12 @@ def paged_copy_block(cfg: ModelConfig, cache, src, dst):
     return out
 
 
-def paged_prefill_suffix(cfg: ModelConfig, pol: ShardingPolicy, params, batch, cache,
-                         block_tables, start, block_size: int, attend_len: int):
-    """Prefill ONLY the suffix of prompts whose prefix K/V is already in
-    the paged pool (prefix-cache hit).
-
-    ``batch["tokens"]``: ``(g, S_w)`` suffix tokens (PAD tail);
-    ``start``: ``(g,)`` absolute position of each row's first suffix
-    token — positions below it ride in shared pool blocks reachable
-    through ``block_tables``.  Runs the full layer stack over the S_w
-    suffix lanes only (that is the FLOP saving), attending through the
-    gathered pool view via ``layers.attn_prefill_paged`` with
-    ``attend_len`` softmax lanes so results stay bit-identical to a
-    dense prefill of the whole prompt.  Returns ``(logits (g, S_w, V),
-    suffix_row_cache)`` — the caller scatters the suffix K/V into the
-    pool with ``paged_scatter_prefill(start_pos=start)`` and reads the
-    first decode token off ``logits[r, suffix_len_r - 1]``."""
-    tokens = batch["tokens"]
-    s_w = tokens.shape[1]
-    h = _embed_inputs(cfg, pol, params, batch)
-    positions = start[:, None] + jnp.arange(s_w)[None, :]
-    h, suf_cache, _ = _run_blocks(
-        cfg, pol, params, h, positions, mode="prefill_paged", cache=cache,
-        paged=(block_tables, block_size, attend_len),
-    )
-    h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
-    return L.head_apply(cfg, pol, params, h), suf_cache
-
-
 def mixed_step(cfg: ModelConfig, pol: ShardingPolicy, params, tokens, cache,
                block_tables, q_start, q_len, block_size: int):
     """UNIFIED engine step: one layer-stack pass over a mixed batch of
-    prefill chunks and decode rows against the paged cache — replaces
-    the separate ``prefill`` / ``paged_prefill_suffix`` / ``decode_step``
-    dispatches on the unified serving path.
+    prefill chunks and decode rows against the paged cache — the ONE
+    dispatch the unified serving path issues per engine step, replacing
+    separate prefill / decode calls.
 
     ``tokens``: ``(B, W)`` — each row carries ``q_len[b]`` live tokens
     starting at absolute position ``q_start[b]`` (a decode row is

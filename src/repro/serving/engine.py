@@ -1,49 +1,72 @@
-"""RAG serving engine: continuous batching over a slot pool with a
-contiguous- or paged-KV cache.
+"""RAG serving engine: a resident, multi-tenant continuous-batching core
+over a slot pool with a contiguous- or paged-KV cache.
 
 Request flow (paper Fig. 2/3 in serving form):
   query -> federated retrieval (core.retrieval / orchestrator)
         -> enclave re-rank -> prompt build -> slot prefill -> decode chunks
 
-Two serving modes share the slot-state contract:
+Serving modes (all share the slot-state contract):
 
   * **Lock-step** (``step_batch``): drain the queue in fixed ``max_batch``
     chunks, one packed prefill + one fused decode ``while_loop`` per
     chunk.  Kept as the deterministic baseline the continuous path is
     parity-tested (and benchmarked) against.  Always contiguous.
-  * **Continuous** (``serve_stream`` / ``serve`` / ``serve_prompts``): a
-    fixed pool of ``max_batch`` decode slots.  Finished rows (EOS or
-    per-request budget) retire and free their slot; the ``Scheduler``
-    admits queued requests into free slots — bucketed into power-of-2
-    groups so ``k`` waiting requests cost ``O(log k)`` fused
-    prefill+scatter dispatches (``_admit_rows``) instead of ``k`` — while
-    the other slots keep decoding.  Decode runs in fused chunks of at
-    most ``sched_chunk`` steps between scheduler interventions with ONE
-    host sync per chunk.
+  * **Continuous, contiguous** (``serve_stream`` with ``paged=False``): a
+    fixed pool of ``max_batch`` decode slots over per-slot cache stripes.
+    Finished rows (EOS or per-request budget) retire and free their slot;
+    the ``Scheduler`` admits queued requests into free slots — bucketed
+    into power-of-2 groups so ``k`` waiting requests cost ``O(log k)``
+    fused prefill+scatter dispatches instead of ``k`` — while the other
+    slots keep decoding.  Decode runs in fused chunks of at most
+    ``sched_chunk`` steps with ONE host sync per chunk.  This path is the
+    second parity oracle next to lock-step.
+  * **Continuous, paged** (``paged=True``): ALWAYS the **unified chunked
+    prefill** loop (``_serve_unified``).  Every engine step issues ONE
+    ``_mixed_rows`` call over per-row ``(q_start, q_len)`` descriptors —
+    prompt tokens are chunked across steps (at most ``token_budget``
+    query lanes per step, shared with the 1-lane decode rows), so a long
+    prompt arrival never stalls in-flight decodes behind a monolithic
+    prefill, and the dispatch count per step is O(1) regardless of how
+    many requests are admitting.  The kernel underneath
+    (``kernels/chunked_prefill``) reads prefix K/V straight from the
+    block pool, so the prefix cache works with ``attn_impl="pallas"``,
+    prompts longer than ``attn_chunk``, and non-f32 caches — cold and
+    warm rows both attend through the pool, making hit-vs-miss parity
+    structural.  (The legacy dense+suffix admission pipeline and its
+    dependency-wave machinery were retired once this path reached
+    bit-parity everywhere; the lock-step and contiguous engines are the
+    surviving oracles.)
 
-Setting ``ServeConfig.token_budget`` switches the continuous path to
-**unified chunked prefill** (``_serve_unified``, paged-only): instead of
-separate admit-prefill and decode dispatches, every engine step issues
-ONE ``_mixed_rows`` call over per-row ``(q_start, q_len)`` descriptors —
-prompt tokens are chunked across steps (at most ``token_budget`` query
-lanes per step, shared with the 1-lane decode rows), so a long prompt
-arrival never stalls in-flight decodes behind a monolithic prefill, and
-the dispatch count per step is O(1) regardless of how many requests are
-admitting.  The kernel underneath
-(``kernels/chunked_prefill``) reads prefix K/V straight from the block
-pool, which removes the dense+suffix pipeline's restrictions: the
-prefix cache works with ``attn_impl="pallas"``, prompts longer than
-``attn_chunk``, and non-f32 caches (hit-vs-miss parity is structural —
-cold and warm rows both attend through the pool — rather than relying
-on the dense prefill reproducing pool dtype round-trips).  Such
-configurations auto-route to the unified path even when
-``token_budget`` is unset.  Admissions whose shared prefix chunks are
-still being filled by an in-flight row simply wait (host-side
-``pending_blocks`` map); a wait that can never resolve is broken by
-force-retiring the stuck rows with an empty, ``deadlocked``-flagged
-result (see ``AdmissionDeadlock``) instead of hanging the loop.
+**Resident state.**  A paged engine is a long-lived service: the device
+cache, ``BlockPool``, per-slot ``BlockTable``s, and the ``PrefixIndex``
+are created lazily on first use and survive across ``serve`` /
+``serve_stream`` calls, so a repeated system preamble is a prefix HIT on
+the second call — no re-prefill.  ``reset_cache()`` drops everything for
+an explicitly cold start.  With ``ServeConfig.spill_bytes`` set the
+prefix cache is **tiered**: parked chains evicted under pool pressure
+*demote* their K/V to a bounded host-RAM ``HostBlockStore`` and come
+back via ``device_put`` + table repoint instead of re-prefill (see
+``serving/kv_cache``).
 
-Cache layouts (``ServeConfig.paged`` selects; both bit-identical for the
+**Tenants.**  Admission order is the scheduler's: per-tenant SLO classes
+(priority preempts the *queue*, weighted-fair within a class, FIFO
+within a tenant).  The engine never preempts a running slot — an
+admitted request decodes to EOS/budget/OOM on its own terms — and
+reports per-tenant admission + prefix gauges back through
+``Scheduler.record_tenant_admit``.
+
+Degradation contract (terminal, flagged, neighbors unharmed):
+  * ``truncated`` — force-retired on KV-pool OOM at a growth boundary;
+    the answer is a prefix of what the budget allowed.
+  * ``deadlocked`` — force-retired empty when an admission waits on
+    cached chunks no in-flight fill will materialize
+    (``AdmissionDeadlock`` from the ``pending_blocks`` resolver;
+    unreachable with commit-ordered deps, but degrading beats wedging).
+  * ``expired`` — dropped by the scheduler at its admission deadline.
+  * ``degraded`` (pipeline-level, ``core/pipeline``) — a federation
+    round that missed quorum; the serving layers above still answer.
+
+Cache layouts (``ServeConfig.paged`` selects; bit-identical for the
 same admission order):
 
   * **Contiguous** (default): every cache leaf is ``(n_layer_blocks, B,
@@ -63,8 +86,8 @@ same admission order):
     contiguous stripe count for short-prompt traffic at the same HBM; a
     request that cannot get a block at a chunk boundary is force-retired
     with what it already emitted (its neighbors are never corrupted).
-    Non-attention (SSM/conv) state has no sequence axis and stays
-    per-slot in both layouts.
+    Requires an all-attention model (SSM/conv state folds the whole
+    sequence and cannot resume a chunked prompt).
 
 Both paths pack prompts left-aligned (PAD tail) and decode each row from
 its OWN cache position (per-row ``lengths``), so ragged batches never
@@ -84,54 +107,51 @@ from repro.configs.base import ModelConfig
 from repro.data.tokenizer import EOS, PAD
 from repro.models import lm as LM
 from repro.runtime.sharding import ShardingPolicy
-from repro.serving.kv_cache import BlockPool, BlockTable, PrefixIndex, blocks_for
+from repro.serving.kv_cache import (
+    BlockPool,
+    BlockTable,
+    HostBlockStore,
+    PrefixIndex,
+    blocks_for,
+)
 from repro.serving.scheduler import Request, Scheduler
 
 
 class AdmissionDeadlock(RuntimeError):
     """Prefix-cache admission dependency resolution stalled: some admitted
-    rows wait on cached chunks that no dispatched same-pass row is going
-    to materialize.  With deps derived from ``PrefixIndex.commit`` order
-    this is unreachable (an admit can only depend on chunks registered by
-    an EARLIER admit, so the wait graph is acyclic), but a hang here would
+    rows wait on cached chunks that no in-flight fill is going to
+    materialize.  With deps derived from ``PrefixIndex.commit`` order this
+    is unreachable (an admit can only depend on chunks registered by an
+    EARLIER admit, so the wait graph is acyclic), but a hang here would
     wedge the whole serve loop — so instead of asserting, the resolver
-    raises with the waves that DID resolve plus the stuck records, and the
-    engine dispatches the former and force-retires the latter with an
-    empty, ``deadlocked``-flagged result."""
+    raises with whatever DID resolve plus the stuck slots, and the engine
+    force-retires the latter with an empty, ``deadlocked``-flagged
+    result."""
 
     def __init__(self, waves: list, stuck: list):
         super().__init__(
-            f"admission dependency wave stalled: {len(stuck)} row(s) wait on "
-            f"cached chunks no dispatched row writes (cyclic prefix deps?)"
+            f"admission dependency resolution stalled: {len(stuck)} row(s) wait "
+            f"on cached chunks no in-flight fill writes (cyclic prefix deps?)"
         )
         self.waves = waves
         self.stuck = stuck
 
 
-def resolve_admission_waves(pre_admits: list[dict]) -> list[list[dict]]:
-    """Order warm prefix-cache admits into dependency waves.
+def resolve_fill_deps(fill_deps: dict[int, frozenset], pending) -> list[int]:
+    """Runnable in-flight fills given the ``pending_blocks`` key set.
 
-    Each record carries ``deps`` (blocks its shared chain / COW source
-    reads) and ``writes`` (cached chunk blocks its suffix prefill will
-    materialize).  A record joins a wave once none of its deps are still
-    pending writes of an undispatched record; cache dataflow then orders
-    the device work so every gather reads materialized blocks.  Raises
-    :class:`AdmissionDeadlock` (carrying the resolved prefix of waves and
-    the stuck remainder) if no progress can be made."""
-    waves: list[list[dict]] = []
-    pre_admits = list(pre_admits)
-    pending = (
-        frozenset().union(*(a["writes"] for a in pre_admits))
-        if pre_admits else frozenset()
-    )
-    while pre_admits:
-        warm = [a for a in pre_admits if not (a["deps"] & pending)]
-        pre_admits = [a for a in pre_admits if a["deps"] & pending]
-        if not warm:
-            raise AdmissionDeadlock(waves, pre_admits)
-        pending = pending.difference(*(a["writes"] for a in warm))
-        waves.append(warm)
-    return waves
+    ``fill_deps`` maps slot -> the cached-chunk blocks its shared chain /
+    COW source reads; ``pending`` is the set of blocks some in-flight
+    fill has registered but not yet materialized.  A fill is runnable
+    once none of its deps are still pending.  Raises
+    :class:`AdmissionDeadlock` (carrying the stuck slots) when fills
+    exist but none can run — the engine's cue to force-retire them as
+    ``deadlocked`` instead of spinning forever."""
+    pending = set(pending)
+    runnable = [i for i, deps in sorted(fill_deps.items()) if not (deps & pending)]
+    if fill_deps and not runnable:
+        raise AdmissionDeadlock([], sorted(fill_deps))
+    return runnable
 
 
 @dataclasses.dataclass
@@ -149,15 +169,20 @@ class ServeConfig:
     # refcounted prefix cache on the paged pool: admission looks up the
     # longest cached prompt prefix (block-granular hash-chain), shares
     # those blocks into the new request's table, and prefills only the
-    # suffix; retired prompt blocks park in an LRU index for reuse
+    # suffix; retired prompt blocks park in an LRU index for reuse.  The
+    # index is RESIDENT: it survives across serve calls on this engine
     prefix_cache: bool = False
-    # unified chunked prefill (paged-only): cap the query lanes per engine
-    # step; prompt tokens chunk across steps alongside 1-lane decode rows
-    # in a single mixed dispatch.  None keeps the dedicated admit-prefill
-    # path (but prefix-cache configs the dense+suffix pipeline cannot
-    # serve — pallas attention, prompts > attn_chunk, non-f32 caches —
-    # auto-route to the unified path with a max_prompt_len budget)
+    # unified chunked prefill query-lane cap per engine step (paged-only;
+    # paged engines always run the unified mixed-dispatch loop).  None
+    # defaults to max_prompt_len — i.e. a whole prompt may prefill in one
+    # step; smaller budgets chunk prompts across steps so arrivals never
+    # stall in-flight decodes
     token_budget: int | None = None
+    # host-RAM spill tier for the prefix cache, in bytes (requires
+    # prefix_cache): parked chains evicted under pool pressure demote
+    # their K/V to host memory and re-admit by upload instead of
+    # re-prefill.  None disables tiering (eviction discards)
+    spill_bytes: int | None = None
 
 
 class ServeEngine:
@@ -185,33 +210,21 @@ class ServeEngine:
                 )
             self._n_pool_blocks = n_pool
             self._trash_block = n_pool  # extra pool index for masked writes
-        unified = scfg.token_budget is not None
-        if scfg.prefix_cache:
-            if not scfg.paged:
+        if scfg.prefix_cache and not scfg.paged:
+            raise ValueError(
+                "prefix_cache=True requires paged=True: block tables are "
+                "what make prompt prefixes shareable"
+            )
+        if scfg.spill_bytes is not None:
+            if not scfg.prefix_cache:
                 raise ValueError(
-                    "prefix_cache=True requires paged=True: block tables are "
-                    "what make prompt prefixes shareable"
+                    "spill_bytes (host spill tier) requires prefix_cache=True: "
+                    "only cached prefix chains are demotable"
                 )
-            if any(cfg.mixer_kind(i) != "attn" for i in range(cfg.n_layers)):
-                raise ValueError(
-                    "prefix_cache requires an all-attention model: SSM/conv "
-                    "state folds the whole sequence and cannot restart mid-prompt"
-                )
-            if (
-                cfg.attn_impl == "pallas"
-                or scfg.max_prompt_len > cfg.attn_chunk
-                or jnp.dtype(cfg.dtype) != jnp.float32
-            ):
-                # configurations the dense+suffix pipeline cannot serve
-                # with hit-vs-miss bit-parity (the cold dense prefill would
-                # attend full-precision activations / a different softmax
-                # core than the warm pool gather) route to the unified
-                # mixed-dispatch path, where cold AND warm rows read every
-                # K/V lane from the pool — parity becomes structural
-                # instead of dtype/kernel-dependent
-                unified = True
-        if unified:
-            if scfg.token_budget is not None and scfg.token_budget < 1:
+            if scfg.spill_bytes < 1:
+                raise ValueError(f"spill_bytes={scfg.spill_bytes} must be >= 1")
+        if scfg.token_budget is not None:
+            if scfg.token_budget < 1:
                 raise ValueError(f"token_budget={scfg.token_budget} must be >= 1")
             if not scfg.paged:
                 raise ValueError(
@@ -219,13 +232,14 @@ class ServeEngine:
                     "paged=True: mixed dispatches read and write K/V "
                     "through the shared block pool"
                 )
-            if any(cfg.mixer_kind(i) != "attn" for i in range(cfg.n_layers)):
-                raise ValueError(
-                    "token_budget (unified chunked prefill) requires an "
-                    "all-attention model: SSM/conv state folds the whole "
-                    "sequence and cannot resume a chunked prompt"
-                )
-        self._unified = unified
+        if scfg.paged and any(cfg.mixer_kind(i) != "attn" for i in range(cfg.n_layers)):
+            raise ValueError(
+                "paged serving runs the unified chunked-prefill path, which "
+                "requires an all-attention model: SSM/conv state folds the "
+                "whole sequence and cannot resume a chunked prompt"
+            )
+        # paged -> unified: the mixed-dispatch loop is the only paged path
+        self._unified = scfg.paged
         self._token_budget = (
             scfg.token_budget if scfg.token_budget is not None else scfg.max_prompt_len
         )
@@ -238,12 +252,21 @@ class ServeEngine:
         self.decode_dispatches = 0
         self.mixed_dispatches = 0
         # prefix-cache observability (engine lifetime; serve passes report
-        # them into Scheduler.record_prefix_stats each pass)
+        # window deltas AND these totals into the scheduler each pass)
         self.prefix_lookups = 0
         self.prefix_hits = 0
         self.prefill_tokens_total = 0
         self.prefill_tokens_saved = 0
         self.prefix_shared_total = 0  # blocks adopted by reference (cumulative)
+        # resident paged state: created lazily on first paged serve and
+        # reused by every later call (reset_cache() drops it)
+        self._pool: BlockPool | None = None
+        self._row_tables: list[BlockTable] | None = None
+        self._tables_h: np.ndarray | None = None
+        self._cache = None
+        self._index: PrefixIndex | None = None
+        self._spill_store: HostBlockStore | None = None
+        self._serving = False
 
         def prefill_fn(params, tokens, lengths, cache_len=cache_len):
             logits, cache = LM.prefill(cfg, pol, params, {"tokens": tokens}, cache_len=cache_len)
@@ -278,59 +301,18 @@ class ServeEngine:
             return out, t
 
         def admit_rows(params, cache, cur, lengths, emitted, done, budget, out,
-                       rows_tokens, slot_ids, row_lens, b_new, block_ids=None):
-            """Prefill ``g`` requests and scatter them into slots
-            ``slot_ids`` in a single fused call.  The bucketed admission
-            path dispatches waiting requests in power-of-2 groups, so the
-            jit trace count is bounded at log2(max_batch) group shapes and
-            ``k`` queued requests cost O(log k) dispatches, not k.
-            ``block_ids`` (paged mode): (g, blocks_per_slot) pool blocks
-            per row, trash-padded past each row's allocation."""
-            first, row_cache = prefill_fn(
-                params, rows_tokens, row_lens,
-                cache_len=self._cache_len_padded if scfg.paged else cache_len,
+                       rows_tokens, slot_ids, row_lens, b_new):
+            """Prefill ``g`` requests and scatter them into contiguous
+            cache stripes ``slot_ids`` in a single fused call.  The
+            bucketed admission path dispatches waiting requests in
+            power-of-2 groups, so the jit trace count is bounded at
+            log2(max_batch) group shapes and ``k`` queued requests cost
+            O(log k) dispatches, not k."""
+            first, row_cache = prefill_fn(params, rows_tokens, row_lens)
+            cache = jax.tree.map(
+                lambda c, rc: c.at[:, slot_ids].set(rc), cache, row_cache
             )
-            if scfg.paged:
-                cache = LM.paged_scatter_prefill(
-                    cfg, cache, row_cache, block_ids, slot_ids, bs
-                )
-            else:
-                cache = jax.tree.map(
-                    lambda c, rc: c.at[:, slot_ids].set(rc), cache, row_cache
-                )
             g = rows_tokens.shape[0]
-            cur = cur.at[slot_ids].set(first)
-            lengths = lengths.at[slot_ids].set(row_lens)
-            emitted = emitted.at[slot_ids].set(1)
-            budget = budget.at[slot_ids].set(b_new)
-            out = out.at[slot_ids].set(
-                jnp.zeros((g, t_cap + 1), jnp.int32).at[:, 0].set(first)
-            )
-            done = done.at[slot_ids].set((first == EOS) | (b_new <= 1))
-            return cache, cur, lengths, emitted, done, budget, out
-
-        def suffix_admit_rows(params, cache, cur, lengths, emitted, done, budget, out,
-                              suf_tokens, slot_ids, row_lens, starts, b_new, tables_g):
-            """Prefix-cache admission: prefill ONLY the suffix of ``g``
-            requests whose first ``starts[r]`` positions already sit in
-            shared pool blocks (reachable through ``tables_g``), scatter
-            the suffix K/V into the pool (shared blocks are never
-            written; the COW boundary copy has already run), and seed the
-            slots exactly like ``admit_rows``.  ``suf_tokens`` is packed
-            to a power-of-2 suffix width, so the trace count stays
-            O(log(max_batch) * log(width))."""
-            suffix_lens = row_lens - starts
-            logits, suf_cache = LM.paged_prefill_suffix(
-                cfg, pol, params, {"tokens": suf_tokens}, cache, tables_g,
-                starts, bs, scfg.max_prompt_len,
-            )
-            cache = LM.paged_scatter_prefill(
-                cfg, cache, suf_cache, tables_g, slot_ids, bs,
-                start_pos=starts, suffix_lens=suffix_lens,
-            )
-            last = jnp.take_along_axis(logits, (suffix_lens - 1)[:, None, None], axis=1)[:, 0, :]
-            first = jnp.argmax(last, -1).astype(jnp.int32)
-            g = suf_tokens.shape[0]
             cur = cur.at[slot_ids].set(first)
             lengths = lengths.at[slot_ids].set(row_lens)
             emitted = emitted.at[slot_ids].set(1)
@@ -343,6 +325,31 @@ class ServeEngine:
 
         def cow_copy(cache, src, dst):
             return LM.paged_copy_block(cfg, cache, src, dst)
+
+        def is_pool_leaf(leaf):
+            # pool-indexed K/V leaves: (n_layer_blocks, n_pool + 1, bs, ...)
+            return (
+                scfg.paged
+                and leaf.ndim >= 3
+                and leaf.shape[1] == self._n_pool_blocks + 1
+                and leaf.shape[2] == bs
+            )
+
+        self._is_pool_leaf = is_pool_leaf
+
+        def upload_block(cache, payload, b):
+            """Re-admission upload: host-tier K/V payload (one array per
+            pool leaf, in ``jax.tree.leaves`` order) lands in pool block
+            ``b``.  One trace total — every block has the same shape."""
+            leaves, treedef = jax.tree.flatten(cache)
+            out, j = [], 0
+            for leaf in leaves:
+                if is_pool_leaf(leaf):
+                    out.append(leaf.at[:, b].set(payload[j].astype(leaf.dtype)))
+                    j += 1
+                else:
+                    out.append(leaf)
+            return jax.tree.unflatten(treedef, out)
 
         def mixed_rows(params, cache, cur, lengths, emitted, done, budget, out,
                        tok, q_start_h, q_len, is_decode, row_len, b_new, tables):
@@ -447,8 +454,8 @@ class ServeEngine:
         self._prefill = jax.jit(prefill_fn)
         self._decode_loop = jax.jit(decode_loop)
         self._admit_rows = jax.jit(admit_rows)
-        self._suffix_admit_rows = jax.jit(suffix_admit_rows)
         self._cow_copy = jax.jit(cow_copy)
+        self._upload_block = jax.jit(upload_block)
         self._mixed_rows = jax.jit(mixed_rows)
         self._decode_chunk = jax.jit(make_decode_chunk(scfg.paged))
         self.queue: list[np.ndarray] = []
@@ -484,6 +491,58 @@ class ServeEngine:
         return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(shapes))
 
     # ------------------------------------------------------------------ #
+    # resident paged state
+    # ------------------------------------------------------------------ #
+    def _fetch_block(self, b: int):
+        """Demotion callback for the tiered prefix cache: pull pool block
+        ``b``'s K/V to host (one array per pool leaf, ``jax.tree.leaves``
+        order) and return ``(payload, nbytes)``."""
+        payload = [
+            np.asarray(leaf[:, b])
+            for leaf in jax.tree.leaves(self._cache)
+            if self._is_pool_leaf(leaf)
+        ]
+        return payload, int(sum(p.nbytes for p in payload))
+
+    def _ensure_paged_state(self):
+        """Create the resident pool / tables / cache / index on first
+        paged use; later serve calls reuse them (warm prefix cache)."""
+        if self._pool is not None:
+            return
+        scfg = self.scfg
+        self._pool = BlockPool(self._n_pool_blocks, scfg.block_size)
+        self._row_tables = [BlockTable(self._pool) for _ in range(scfg.max_batch)]
+        # every unallocated (or free-slot) table entry points at the
+        # trash block, so masked writes can never land in live blocks
+        self._tables_h = np.full(
+            (scfg.max_batch, self._blocks_per_slot), self._trash_block, np.int32
+        )
+        self._cache = self._init_serve_cache()
+        if scfg.prefix_cache:
+            store = (
+                HostBlockStore(scfg.spill_bytes)
+                if scfg.spill_bytes is not None
+                else None
+            )
+            self._spill_store = store
+            self._index = PrefixIndex(
+                self._pool, spill_store=store, fetch_block=self._fetch_block
+            )
+
+    def reset_cache(self):
+        """Drop ALL resident paged state — device cache, block pool, prefix
+        index, host spill tier.  The next serve call starts cold (used by
+        benchmarks to compare cold vs warm arms on one engine)."""
+        if self._serving:
+            raise RuntimeError("reset_cache() during an active serve loop")
+        self._pool = None
+        self._row_tables = None
+        self._tables_h = None
+        self._cache = None
+        self._index = None
+        self._spill_store = None
+
+    # ------------------------------------------------------------------ #
     # lock-step path (deterministic baseline)
     # ------------------------------------------------------------------ #
     def step_batch(self) -> list[np.ndarray]:
@@ -507,7 +566,9 @@ class ServeEngine:
         """Drive the slot pool until the scheduler's queue drains and every
         slot has retired (one-shot batch semantics: does NOT wait for more
         submissions).  Returns {rid: answer tokens}; per-request timestamps
-        land in ``scheduler.results`` for latency stats."""
+        land in ``scheduler.results`` for latency stats.  On a resident
+        paged engine, repeated calls reuse the prefix cache — the
+        scheduler's top-level stats window covers this call."""
         return dict(self.serve_stream(scheduler, drain=True))
 
     def serve_stream(self, scheduler: Scheduler, *, drain: bool = False):
@@ -527,25 +588,16 @@ class ServeEngine:
         if self._unified:
             yield from self._serve_unified(scheduler, drain)
             return
+        yield from self._serve_contiguous(scheduler, drain)
+
+    def _serve_contiguous(self, scheduler: Scheduler, drain: bool):
+        """Continuous batching over contiguous cache stripes: the parity
+        oracle for the unified paged path (same admission order, same
+        decode semantics, pow-2 bucketed admit prefills)."""
         scfg = self.scfg
         B, t_cap, width = scfg.max_batch, scfg.max_new_tokens, scfg.max_prompt_len
-        bs, paged = scfg.block_size, scfg.paged
+        scheduler.begin_window()
         cache = self._init_serve_cache()
-        index: PrefixIndex | None = None
-        if paged:
-            pool = BlockPool(self._n_pool_blocks, bs)
-            row_tables = [BlockTable(pool) for _ in range(B)]
-            if scfg.prefix_cache:
-                index = PrefixIndex(pool)  # registers itself as evictor
-                # engine counters are lifetime-cumulative; the scheduler's
-                # gauges must describe THIS run (the index starts cold
-                # each serve), so report deltas from these snapshots
-                lk0, ht0 = self.prefix_lookups, self.prefix_hits
-                pt0, ps0 = self.prefill_tokens_total, self.prefill_tokens_saved
-                sh0 = self.prefix_shared_total
-            # every unallocated (or free-slot) table entry points at the
-            # trash block, so masked writes can never land in live blocks
-            tables_h = np.full((B, self._blocks_per_slot), self._trash_block, np.int32)
         cur = jnp.zeros((B,), jnp.int32)
         lengths = jnp.ones((B,), jnp.int32)
         emitted = jnp.ones((B,), jnp.int32)
@@ -553,49 +605,24 @@ class ServeEngine:
         budget = jnp.ones((B,), jnp.int32)
         out = jnp.zeros((B, t_cap + 1), jnp.int32)
         slots: list[Request | None] = [None] * B
-        # host mirrors of emitted/done/budget/length keep the loop at ONE
-        # device sync per chunk; a just-admitted row's done flag is only
-        # known on-device (first token may be EOS), so mirror it as live —
-        # the worst case is one no-op chunk dispatch before the readback
+        # host mirrors of emitted/done/budget keep the loop at ONE device
+        # sync per chunk; a just-admitted row's done flag is only known
+        # on-device (first token may be EOS), so mirror it as live — the
+        # worst case is one no-op chunk dispatch before the readback
         em_h = np.ones((B,), np.int64)
         dn_h = np.ones((B,), bool)
         bu_h = np.ones((B,), np.int64)
-        ln_h = np.ones((B,), np.int64)
-        oom_slots: set[int] = set()  # force-done by pool OOM, not yet retired
-        empty = np.zeros((0,), np.int32)
         steps = 0  # engine scheduler steps (dispatch-rate denominator)
         a0, d0 = self.admit_dispatches, self.decode_dispatches
         m0 = self.mixed_dispatches
 
-        planned: dict[int, object] = {}  # rid -> gate's plan (consumed at admit)
-
-        def admit_gate(req: Request) -> bool:
-            # memory-aware admission: pop only if free blocks cover the
-            # prompt plus the first decode token (FIFO order preserved —
-            # a too-big head request blocks the line until retires free
-            # blocks rather than being skipped, so paged and contiguous
-            # admission orders are identical).  With the prefix cache the
-            # same reservation is planned against shared + free +
-            # reclaimable (evictable parked) blocks — a cached prefix
-            # shrinks what the head request actually needs.  The plan is
-            # memoized for the admit that follows: nothing touches the
-            # pool between this gate and the commit (single consumer)
-            if index is not None:
-                plan = index.plan(req.tokens[-width:])
-                if plan is not None:
-                    planned[req.rid] = plan
-                return plan is not None
-            n_tok = min(len(req.tokens), width) + 1
-            return pool.can_alloc(blocks_for(n_tok, bs))
-
         while True:
             # ---- admit queued requests into free slots (bucketed) ----
             admits: list[tuple[int, np.ndarray, int, int]] = []
-            pre_admits: list[dict] = []  # prefix-cache path records
             for slot in range(B):
                 if slots[slot] is not None:
                     continue
-                req = scheduler.pop_ready(admit_if=admit_gate if paged else None)
+                req = scheduler.pop_ready()
                 if req is None:
                     break
                 p = req.tokens[-width:]
@@ -604,64 +631,11 @@ class ServeEngine:
                 # floor is 1; None means "engine cap" (0 does not)
                 b_new = t_cap if req.max_new_tokens is None else req.max_new_tokens
                 b_new = max(1, min(int(b_new), t_cap))
-                if index is not None:
-                    # prefix-cache admission: longest cached prefix is
-                    # shared by reference (refcount +1 per block), a
-                    # full-prefix hit copy-on-writes its boundary block,
-                    # and only blocks_for(L+1) - shared fresh blocks are
-                    # allocated — the same prompt+1 reservation the gate
-                    # planned, so same-pass admits never starve each other
-                    plan = planned.pop(req.rid, None) or index.plan(p)
-                    if plan is None:
-                        raise RuntimeError("prefix admit raced the block pool")
-                    table_ids, cow_dst = index.commit(plan)
-                    row_tables[slot].adopt(table_ids)
-                    tables_h[slot, :] = self._trash_block
-                    tables_h[slot, : len(table_ids)] = table_ids
-                    self.prefix_lookups += 1
-                    self.prefill_tokens_total += length
-                    if plan.start:
-                        self.prefix_hits += 1
-                        self.prefill_tokens_saved += plan.start
-                        self.prefix_shared_total += len(plan.shared) + (cow_dst is not None)
-                    if plan.start == 0:
-                        # cold row (no shared chain, no COW): identical to
-                        # the PR-4 dense admit — ride the shared dispatch
-                        # block below, which runs before the warm waves,
-                        # so same-pass warm admits matching its chunks
-                        # read materialized blocks
-                        admits.append((slot, p, length, b_new))
-                    else:
-                        pre_admits.append(dict(
-                            slot=slot, p=p, length=length, start=plan.start, b_new=b_new,
-                            cow_src=plan.cow_src, cow_dst=cow_dst,
-                            # dispatch-ordering edges: blocks this admit
-                            # READS (shared chain + COW source) and the
-                            # cached chunks it WRITES (matchable by later
-                            # same-pass admits before their content exists)
-                            deps=frozenset(plan.shared) | (
-                                {plan.cow_src} if cow_dst is not None else set()
-                            ),
-                            writes=frozenset(table_ids[len(plan.nodes): length // bs]),
-                        ))
-                elif paged:
-                    tb = row_tables[slot]
-                    # allocate exactly what admit_gate checked — prompt
-                    # plus the first decode token.  Allocating less (just
-                    # the prompt) would let a later admit in this same
-                    # pass consume the unreserved +1 block and force-
-                    # truncate this request to its prefill token
-                    if not tb.extend_to(length + 1):
-                        # the gate just checked this exact amount and the
-                        # consumer is single-threaded, so it cannot fail
-                        raise RuntimeError("paged admit raced the block pool")
-                    tables_h[slot, :] = self._trash_block
-                    tables_h[slot, : tb.n_blocks] = tb.ids
-                if index is None:
-                    admits.append((slot, p, length, b_new))
+                admits.append((slot, p, length, b_new))
+                scheduler.record_tenant_admit(req.tenant, prefill_tokens=length)
                 slots[slot] = req
                 em_h[slot], dn_h[slot] = 1, b_new <= 1
-                bu_h[slot], ln_h[slot] = b_new, length
+                bu_h[slot] = b_new
             while admits:
                 # power-of-2 buckets: k waiting requests prefill in
                 # O(log k) fused dispatches, each a jit trace shared by
@@ -674,103 +648,21 @@ class ServeEngine:
                 slot_ids = np.array([s for s, _, _, _ in group], np.int32)
                 row_lens = np.array([ln for _, _, ln, _ in group], np.int32)
                 b_news = np.array([bn for _, _, _, bn in group], np.int32)
-                args = (
+                cache, cur, lengths, emitted, done, budget, out = self._admit_rows(
                     self.params, cache, cur, lengths, emitted, done, budget, out,
                     jnp.asarray(rows), jnp.asarray(slot_ids), jnp.asarray(row_lens),
                     jnp.asarray(b_news),
                 )
-                if paged:
-                    args += (jnp.asarray(tables_h[slot_ids]),)
-                cache, cur, lengths, emitted, done, budget, out = self._admit_rows(*args)
                 self.admit_dispatches += 1
                 self.admit_rows_total += g
-            # ---- prefix-cache dispatch: dependency waves ----
-            # cold rows rode the shared dense dispatch above, so every
-            # chunk a warm admit can match is either materialized or
-            # owned by another WARM admit of this pass: an admit whose
-            # matched chain includes chunks another same-pass admit is
-            # about to compute defers a wave (cache dataflow then orders
-            # the device work, so its gather reads materialized blocks).
-            # Each wave dispatches COW copies, then warm rows grouped
-            # pow-2 with a pow-2 suffix width (bounded trace count).  A
-            # stall (impossible with commit-ordered deps, but fatal if it
-            # ever happened) force-retires the stuck rows instead of
-            # wedging the loop
-            try:
-                waves = resolve_admission_waves(pre_admits)
-                stuck: list[dict] = []
-            except AdmissionDeadlock as exc:
-                waves, stuck = exc.waves, exc.stuck
-            for warm in waves:
-                for a in warm:
-                    if a["cow_dst"] is not None:
-                        cache = self._cow_copy(
-                            cache, jnp.int32(a["cow_src"]), jnp.int32(a["cow_dst"])
-                        )
-                        # the copy has consumed the source's cache VALUE
-                        # (functional dataflow), so commit's pin can drop:
-                        # even if pressure now recycles the block, later
-                        # dispatches write the post-copy array
-                        pool.free([a["cow_src"]])
-                while warm:
-                    g = 1 << (len(warm).bit_length() - 1)
-                    group, warm = warm[:g], warm[g:]
-                    s_max = max(a["length"] - a["start"] for a in group)
-                    s_w = min(width, 1 << max(0, s_max - 1).bit_length())
-                    rows = np.zeros((g, s_w), np.int32)
-                    for i, a in enumerate(group):
-                        rows[i, : a["length"] - a["start"]] = a["p"][a["start"]:]
-                    slot_ids = np.array([a["slot"] for a in group], np.int32)
-                    cache, cur, lengths, emitted, done, budget, out = self._suffix_admit_rows(
-                        self.params, cache, cur, lengths, emitted, done, budget, out,
-                        jnp.asarray(rows), jnp.asarray(slot_ids),
-                        jnp.asarray(np.array([a["length"] for a in group], np.int32)),
-                        jnp.asarray(np.array([a["start"] for a in group], np.int32)),
-                        jnp.asarray(np.array([a["b_new"] for a in group], np.int32)),
-                        jnp.asarray(tables_h[slot_ids]),
-                    )
-                    self.admit_dispatches += 1
-                    self.admit_rows_total += g
-            if stuck:
-                # force-retire rows whose prefill can never dispatch: roll
-                # back their cached-chunk registrations (one call, leaf-
-                # first across rows whose chains extend each other), drop
-                # COW pins, release their tables, and finish them with an
-                # empty deadlocked-flagged answer.  Device state was never
-                # touched for these slots (done stayed True), so neighbors
-                # are unaffected
-                index.invalidate([b for a in stuck for b in a["writes"]])
-                for a in stuck:
-                    slot = a["slot"]
-                    req = slots[slot]
-                    if a["cow_dst"] is not None:
-                        pool.free([a["cow_src"]])  # drop commit's pin
-                    row_tables[slot].release()
-                    tables_h[slot, :] = self._trash_block
-                    scheduler.finish(req, empty, deadlocked=True)
-                    slots[slot] = None
-                    em_h[slot], dn_h[slot] = 1, True
-                    yield req.rid, empty
             active = [i for i in range(B) if slots[i] is not None]
-            scheduler.record_occupancy(
-                free_slots=B - len(active),
-                free_blocks=pool.free_blocks if paged else None,
-                reclaimable_blocks=pool.reclaimable_blocks if index is not None else None,
-            )
-            if index is not None:
-                scheduler.record_prefix_stats(
-                    lookups=self.prefix_lookups - lk0,
-                    hits=self.prefix_hits - ht0,
-                    prefill_tokens=self.prefill_tokens_total - pt0,
-                    prefill_tokens_saved=self.prefill_tokens_saved - ps0,
-                    shared_blocks=self.prefix_shared_total - sh0,
-                    cached_blocks=index.n_cached_blocks,
-                )
+            scheduler.record_occupancy(free_slots=B - len(active))
             scheduler.record_dispatch_stats(
                 admit_dispatches=self.admit_dispatches - a0,
                 decode_dispatches=self.decode_dispatches - d0,
                 mixed_dispatches=self.mixed_dispatches - m0,
                 steps=steps,
+                lifetime=self._dispatch_lifetime(),
             )
             if not active:
                 if drain or scheduler.closed:
@@ -788,41 +680,10 @@ class ServeEngine:
                 # the largest live budget but at most sched_chunk steps, so
                 # freed slots wait at most sched_chunk for the next admit
                 n = max(1, min(max(remaining), scfg.sched_chunk))
-                if paged:
-                    # grow each live row's table to cover this chunk's
-                    # writes; a row the pool cannot grow is force-done on
-                    # device and retires at the chunk-end readback with
-                    # whatever it already emitted (its blocks stay valid
-                    # until then, so neighbors never see its failure)
-                    oom = np.zeros((B,), bool)
-                    for i in active:
-                        if dn_h[i]:
-                            continue
-                        need_tok = min(
-                            ln_h[i] + min(em_h[i] + n, bu_h[i]) - 1,
-                            self._cache_len_padded,
-                        )
-                        tb = row_tables[i]
-                        if tb.n_tokens_capacity >= need_tok:
-                            continue
-                        n0 = tb.n_blocks
-                        if tb.extend_to(int(need_tok)):
-                            tables_h[i, n0 : tb.n_blocks] = tb.ids[n0:]
-                        else:
-                            oom[i] = True
-                            dn_h[i] = True
-                            oom_slots.add(i)
-                    if oom.any():
-                        done = jnp.logical_or(done, jnp.asarray(oom))
-                    cache, cur, emitted, done, out = self._decode_chunk(
-                        self.params, cache, cur, lengths, emitted, done, budget, out,
-                        jnp.int32(n), jnp.asarray(tables_h),
-                    )
-                else:
-                    cache, cur, emitted, done, out = self._decode_chunk(
-                        self.params, cache, cur, lengths, emitted, done, budget, out,
-                        jnp.int32(n),
-                    )
+                cache, cur, emitted, done, out = self._decode_chunk(
+                    self.params, cache, cur, lengths, emitted, done, budget, out,
+                    jnp.int32(n),
+                )
                 self.decode_dispatches += 1
                 steps += 1
             # np.array (not asarray): device views are read-only and the
@@ -835,52 +696,66 @@ class ServeEngine:
                 for i in retired:
                     req = slots[i]
                     ans = out_h[i, : int(em_h[i])].copy()
-                    scheduler.finish(req, ans, truncated=i in oom_slots)
-                    oom_slots.discard(i)
+                    scheduler.finish(req, ans)
                     slots[i] = None  # retire: slot free for the next admit
-                    if paged:
-                        row_tables[i].release()
-                        tables_h[i, :] = self._trash_block
                     yield req.rid, ans
 
+    def _dispatch_lifetime(self) -> dict:
+        return {
+            "admit_dispatches": self.admit_dispatches,
+            "decode_dispatches": self.decode_dispatches,
+            "mixed_dispatches": self.mixed_dispatches,
+        }
+
     def _serve_unified(self, scheduler: Scheduler, drain: bool):
-        """Unified chunked-prefill serve loop (paged-only).
+        """Unified chunked-prefill serve loop — THE paged serving path.
 
-        Replaces the legacy admit-prefill / dependency-wave / pow-2
-        suffix-bucket machinery with ONE ``_mixed_rows`` dispatch per
-        engine step: each admitted request becomes a host-side *fill*
-        record whose prompt is streamed into the pool ``token_budget``
-        query lanes at a time, sharing the step with the 1-lane decode
-        rows.  Decode lanes are assigned first (a long prompt arrival
-        chunks across steps instead of stalling in-flight decodes), fills
-        consume the remaining lanes FIFO.  When no fill is in flight the
-        loop falls back to the fused multi-step ``_decode_chunk`` — still
-        one dispatch per step.  The jit trace count is O(1): every mixed
-        step has the same static ``(max_batch, token_budget)`` shape.
+        One ``_mixed_rows`` dispatch per engine step: each admitted
+        request becomes a host-side *fill* record whose prompt is
+        streamed into the pool ``token_budget`` query lanes at a time,
+        sharing the step with the 1-lane decode rows.  Decode lanes are
+        assigned first (a long prompt arrival chunks across steps instead
+        of stalling in-flight decodes), fills consume the remaining lanes
+        FIFO.  When no fill is in flight the loop falls back to the fused
+        multi-step ``_decode_chunk`` — still one dispatch per step.  The
+        jit trace count is O(1): every mixed step has the same static
+        ``(max_batch, token_budget)`` shape.
 
-        Prefix-cache admissions share cached chunks exactly like the
-        legacy path (same ``PrefixIndex`` plan/commit), but cross-request
-        ordering is host-side: chunks an in-flight fill has registered
-        but not yet materialized sit in ``pending_blocks``; a later
-        admission matching them waits (its fill stays unscheduled) until
-        the owner's fill passes their last token.  Deps always point at
+        The pool, device cache, block tables, and prefix index are
+        RESIDENT engine state (``_ensure_paged_state``): this loop picks
+        them up warm and leaves them warm — retired prompt chains stay
+        parked (or demoted to the host tier) for the next call.  A
+        re-admitted (spilled) chunk is materialized synchronously via
+        ``_upload_block`` before the row's first dispatch, so it never
+        enters ``pending_blocks``.
+
+        Prefix-cache cross-request ordering is host-side: chunks an
+        in-flight fill has registered but not yet materialized sit in
+        ``pending_blocks``; a later admission matching them waits (its
+        fill stays unscheduled, see ``resolve_fill_deps``) until the
+        owner's fill passes their last token.  Deps always point at
         earlier-admitted rows, so the wait graph is acyclic; if it ever
-        stalled anyway, every blocked fill is force-retired with an
-        empty ``deadlocked``-flagged answer rather than wedging the loop.
+        stalled anyway, every blocked fill is force-retired with an empty
+        ``deadlocked``-flagged answer rather than wedging the loop.
         """
+        if self._serving:
+            raise RuntimeError(
+                "engine is already inside a serve loop; a resident engine "
+                "serves one stream at a time"
+            )
         scfg = self.scfg
         B, t_cap, width = scfg.max_batch, scfg.max_new_tokens, scfg.max_prompt_len
         bs, W = scfg.block_size, self._token_budget
-        cache = self._init_serve_cache()
-        pool = BlockPool(self._n_pool_blocks, bs)
-        row_tables = [BlockTable(pool) for _ in range(B)]
-        index: PrefixIndex | None = None
-        if scfg.prefix_cache:
-            index = PrefixIndex(pool)
+        scheduler.begin_window()
+        self._ensure_paged_state()
+        pool, index = self._pool, self._index
+        row_tables, tables_h = self._row_tables, self._tables_h
+        store = self._spill_store
+        if index is not None:
             lk0, ht0 = self.prefix_lookups, self.prefix_hits
             pt0, ps0 = self.prefill_tokens_total, self.prefill_tokens_saved
             sh0 = self.prefix_shared_total
-        tables_h = np.full((B, self._blocks_per_slot), self._trash_block, np.int32)
+            dm0, rm0 = index.n_demotions, index.n_readmits
         cur = jnp.zeros((B,), jnp.int32)
         lengths = jnp.ones((B,), jnp.int32)
         emitted = jnp.ones((B,), jnp.int32)
@@ -904,6 +779,7 @@ class ServeEngine:
         fills: list[dict | None] = [None] * B
         pending_blocks: dict[int, tuple[int, int]] = {}
         planned: dict[int, object] = {}
+        self._serving = True
 
         def admit_gate(req: Request) -> bool:
             if index is not None:
@@ -914,141 +790,253 @@ class ServeEngine:
             n_tok = min(len(req.tokens), width) + 1
             return pool.can_alloc(blocks_for(n_tok, bs))
 
-        while True:
-            # ---- admit queued requests into free slots ----
-            # each admit is pure host bookkeeping (pool commit + fill
-            # record); NO device dispatch happens here — prompt tokens
-            # enter the device through the shared mixed step below
-            for slot in range(B):
-                if slots[slot] is not None:
-                    continue
-                req = scheduler.pop_ready(admit_if=admit_gate)
-                if req is None:
-                    break
-                p = req.tokens[-width:]
-                length = len(p)
-                b_new = t_cap if req.max_new_tokens is None else req.max_new_tokens
-                b_new = max(1, min(int(b_new), t_cap))
-                start, cow, deps = 0, None, set()
-                if index is not None:
-                    plan = planned.pop(req.rid, None) or index.plan(p)
-                    if plan is None:
-                        raise RuntimeError("prefix admit raced the block pool")
-                    table_ids, cow_dst = index.commit(plan)
-                    row_tables[slot].adopt(table_ids)
-                    tables_h[slot, :] = self._trash_block
-                    tables_h[slot, : len(table_ids)] = table_ids
-                    self.prefix_lookups += 1
-                    self.prefill_tokens_total += length
-                    start = plan.start
-                    if start:
-                        self.prefix_hits += 1
-                        self.prefill_tokens_saved += start
-                        self.prefix_shared_total += len(plan.shared) + (cow_dst is not None)
-                    if cow_dst is not None:
-                        cow = (plan.cow_src, cow_dst)
-                    # wait on shared/COW-source chunks another in-flight
-                    # fill has registered but not yet computed
-                    deps = {
-                        b for b in (set(plan.shared) | ({plan.cow_src} if cow else set()))
-                        if b in pending_blocks
-                    }
-                    for c in range(len(plan.nodes), length // bs):
-                        pending_blocks[table_ids[c]] = (slot, (c + 1) * bs)
-                else:
-                    tb = row_tables[slot]
-                    if not tb.extend_to(length + 1):
-                        raise RuntimeError("paged admit raced the block pool")
-                    tables_h[slot, :] = self._trash_block
-                    tables_h[slot, : tb.n_blocks] = tb.ids
-                slots[slot] = req
-                fills[slot] = dict(
-                    p=p, length=length, b_new=b_new, pos=start, cow=cow, deps=deps
+        def report_prefix():
+            if index is None:
+                return
+            window = {
+                "prefix_lookups": self.prefix_lookups - lk0,
+                "prefix_hits": self.prefix_hits - ht0,
+                "prefill_tokens": self.prefill_tokens_total - pt0,
+                "prefill_tokens_saved": self.prefill_tokens_saved - ps0,
+                "prefix_shared_blocks": self.prefix_shared_total - sh0,
+                "prefix_cached_blocks": index.n_cached_blocks,
+            }
+            lifetime = {
+                "prefix_lookups": self.prefix_lookups,
+                "prefix_hits": self.prefix_hits,
+                "prefill_tokens": self.prefill_tokens_total,
+                "prefill_tokens_saved": self.prefill_tokens_saved,
+                "prefix_shared_blocks": self.prefix_shared_total,
+                "prefix_cached_blocks": index.n_cached_blocks,
+            }
+            if store is not None:
+                window.update(
+                    spill_demotions=index.n_demotions - dm0,
+                    spill_readmits=index.n_readmits - rm0,
+                    spilled_blocks=index.n_spilled,
+                    spill_bytes_used=store.used_bytes,
                 )
-                # inert on device until the fill's last chunk seeds the
-                # slot (mixed_rows `completes`); done=True keeps any
-                # decode lane from touching it meanwhile
-                em_h[slot], dn_h[slot] = 0, True
-                bu_h[slot], ln_h[slot] = b_new, length
+                lifetime.update(
+                    spill_demotions=index.n_demotions,
+                    spill_readmits=index.n_readmits,
+                    spilled_blocks=index.n_spilled,
+                    spill_bytes_used=store.used_bytes,
+                )
+            scheduler.record_prefix_stats(window, lifetime)
 
-            active = [i for i in range(B) if slots[i] is not None]
-            scheduler.record_occupancy(
-                free_slots=B - len(active),
-                free_blocks=pool.free_blocks,
-                reclaimable_blocks=pool.reclaimable_blocks if index is not None else None,
-            )
-            if index is not None:
-                scheduler.record_prefix_stats(
-                    lookups=self.prefix_lookups - lk0,
-                    hits=self.prefix_hits - ht0,
-                    prefill_tokens=self.prefill_tokens_total - pt0,
-                    prefill_tokens_saved=self.prefill_tokens_saved - ps0,
-                    shared_blocks=self.prefix_shared_total - sh0,
-                    cached_blocks=index.n_cached_blocks,
-                )
-            scheduler.record_dispatch_stats(
-                admit_dispatches=self.admit_dispatches - a0,
-                decode_dispatches=self.decode_dispatches - d0,
-                mixed_dispatches=self.mixed_dispatches - m0,
-                steps=steps,
-            )
-            if not active:
-                if drain or scheduler.closed:
-                    if scheduler.has_pending:
+        try:
+            while True:
+                # ---- admit queued requests into free slots ----
+                # each admit is pure host bookkeeping (pool commit + fill
+                # record); NO device dispatch happens here — prompt tokens
+                # enter the device through the shared mixed step below
+                # (re-admitted spilled chunks are the one exception: their
+                # host payload uploads synchronously right here)
+                for slot in range(B):
+                    if slots[slot] is not None:
                         continue
-                    return
-                scheduler.wait_for_work()
-                continue
-
-            fill_rows = [i for i in range(B) if fills[i] is not None]
-            runnable = [
-                i for i in fill_rows if not (fills[i]["deps"] & pending_blocks.keys())
-            ]
-            dec_rows = [i for i in active if fills[i] is None and not dn_h[i]]
-
-            if fill_rows and not runnable:
-                # every in-flight fill waits on a chunk nobody will write:
-                # unreachable with commit-ordered deps, but wedging the
-                # loop would be worse than degrading — roll back their
-                # cached-chunk registrations (one leaf-first call), drop
-                # COW pins, and retire them empty + deadlocked
-                doomed = set(fill_rows)
-                inv = [b for b, (s, _) in pending_blocks.items() if s in doomed]
-                if index is not None and inv:
-                    index.invalidate(inv)
-                for b in inv:
-                    del pending_blocks[b]
-                for i in fill_rows:
-                    fl, req = fills[i], slots[i]
-                    if fl["cow"] is not None:
-                        pool.free([fl["cow"][0]])
-                    row_tables[i].release()
-                    tables_h[i, :] = self._trash_block
-                    scheduler.finish(req, empty, deadlocked=True)
-                    slots[i], fills[i] = None, None
-                    em_h[i], dn_h[i] = 1, True
-                    yield req.rid, empty
-                continue
-
-            if runnable:
-                # ---- ONE mixed dispatch: decode lanes + fill chunks ----
-                tok = np.zeros((B, W), np.int32)
-                q_start_h = np.zeros((B,), np.int32)
-                q_len_h = np.zeros((B,), np.int32)
-                is_dec = np.zeros((B,), bool)
-                row_len_h = np.zeros((B,), np.int32)
-                b_new_h = np.ones((B,), np.int32)
-                oom = np.zeros((B,), bool)
-                lanes = W
-                for i in dec_rows:  # decode first: fills absorb the wait
-                    if lanes <= 0:
+                    req = scheduler.pop_ready(admit_if=admit_gate)
+                    if req is None:
                         break
-                    need_tok = min(
-                        ln_h[i] + min(em_h[i] + 1, bu_h[i]) - 1,
-                        self._cache_len_padded,
+                    p = req.tokens[-width:]
+                    length = len(p)
+                    b_new = t_cap if req.max_new_tokens is None else req.max_new_tokens
+                    b_new = max(1, min(int(b_new), t_cap))
+                    start, cow, deps = 0, None, set()
+                    if index is not None:
+                        plan = planned.pop(req.rid, None) or index.plan(p)
+                        if plan is None:
+                            raise RuntimeError("prefix admit raced the block pool")
+                        table_ids, cow_dst = index.commit(plan)
+                        for payload, b in plan.uploads:
+                            # host-tier re-admission: K/V comes back by
+                            # upload, not re-prefill; materialized before
+                            # any dispatch reads it, so never "pending"
+                            if payload:
+                                self._cache = self._upload_block(
+                                    self._cache, payload, jnp.int32(b)
+                                )
+                        row_tables[slot].adopt(table_ids)
+                        tables_h[slot, :] = self._trash_block
+                        tables_h[slot, : len(table_ids)] = table_ids
+                        self.prefix_lookups += 1
+                        self.prefill_tokens_total += length
+                        start = plan.start
+                        if start:
+                            self.prefix_hits += 1
+                            self.prefill_tokens_saved += start
+                            self.prefix_shared_total += len(plan.shared) + (cow_dst is not None)
+                        if cow_dst is not None and plan.cow_src is not None:
+                            # device boundary copy still pending; a host
+                            # (spilled) boundary already uploaded above
+                            cow = (plan.cow_src, cow_dst)
+                        # wait on shared/COW-source chunks another in-flight
+                        # fill has registered but not yet computed
+                        deps = {
+                            b for b in (set(plan.shared) | ({plan.cow_src} if cow else set()))
+                            if b in pending_blocks
+                        }
+                        for c in range(len(plan.nodes), length // bs):
+                            pending_blocks[table_ids[c]] = (slot, (c + 1) * bs)
+                    else:
+                        tb = row_tables[slot]
+                        if not tb.extend_to(length + 1):
+                            raise RuntimeError("paged admit raced the block pool")
+                        tables_h[slot, :] = self._trash_block
+                        tables_h[slot, : tb.n_blocks] = tb.ids
+                    scheduler.record_tenant_admit(
+                        req.tenant, prefill_tokens=length,
+                        prefill_tokens_saved=start, hit=start > 0,
                     )
-                    tb = row_tables[i]
-                    if tb.n_tokens_capacity < need_tok:
+                    slots[slot] = req
+                    fills[slot] = dict(
+                        p=p, length=length, b_new=b_new, pos=start, cow=cow, deps=deps
+                    )
+                    # inert on device until the fill's last chunk seeds the
+                    # slot (mixed_rows `completes`); done=True keeps any
+                    # decode lane from touching it meanwhile
+                    em_h[slot], dn_h[slot] = 0, True
+                    bu_h[slot], ln_h[slot] = b_new, length
+
+                active = [i for i in range(B) if slots[i] is not None]
+                scheduler.record_occupancy(
+                    free_slots=B - len(active),
+                    free_blocks=pool.free_blocks,
+                    reclaimable_blocks=pool.reclaimable_blocks if index is not None else None,
+                )
+                report_prefix()
+                scheduler.record_dispatch_stats(
+                    admit_dispatches=self.admit_dispatches - a0,
+                    decode_dispatches=self.decode_dispatches - d0,
+                    mixed_dispatches=self.mixed_dispatches - m0,
+                    steps=steps,
+                    lifetime=self._dispatch_lifetime(),
+                )
+                if not active:
+                    if drain or scheduler.closed:
+                        if scheduler.has_pending:
+                            continue
+                        return
+                    scheduler.wait_for_work()
+                    continue
+
+                fill_rows = [i for i in range(B) if fills[i] is not None]
+                dec_rows = [i for i in active if fills[i] is None and not dn_h[i]]
+                try:
+                    runnable = resolve_fill_deps(
+                        {i: frozenset(fills[i]["deps"]) for i in fill_rows},
+                        pending_blocks.keys(),
+                    )
+                except AdmissionDeadlock as exc:
+                    # every in-flight fill waits on a chunk nobody will
+                    # write: unreachable with commit-ordered deps, but
+                    # wedging the loop would be worse than degrading —
+                    # roll back their cached-chunk registrations (one
+                    # leaf-first call), drop COW pins, and retire them
+                    # empty + deadlocked
+                    doomed = set(exc.stuck)
+                    inv = [b for b, (s, _) in pending_blocks.items() if s in doomed]
+                    if index is not None and inv:
+                        index.invalidate(inv)
+                    for b in inv:
+                        del pending_blocks[b]
+                    for i in sorted(doomed):
+                        fl, req = fills[i], slots[i]
+                        if fl["cow"] is not None:
+                            pool.free([fl["cow"][0]])
+                        row_tables[i].release()
+                        tables_h[i, :] = self._trash_block
+                        scheduler.finish(req, empty, deadlocked=True)
+                        slots[i], fills[i] = None, None
+                        em_h[i], dn_h[i] = 1, True
+                        yield req.rid, empty
+                    continue
+
+                if runnable:
+                    # ---- ONE mixed dispatch: decode lanes + fill chunks ----
+                    tok = np.zeros((B, W), np.int32)
+                    q_start_h = np.zeros((B,), np.int32)
+                    q_len_h = np.zeros((B,), np.int32)
+                    is_dec = np.zeros((B,), bool)
+                    row_len_h = np.zeros((B,), np.int32)
+                    b_new_h = np.ones((B,), np.int32)
+                    oom = np.zeros((B,), bool)
+                    lanes = W
+                    for i in dec_rows:  # decode first: fills absorb the wait
+                        if lanes <= 0:
+                            break
+                        need_tok = min(
+                            ln_h[i] + min(em_h[i] + 1, bu_h[i]) - 1,
+                            self._cache_len_padded,
+                        )
+                        tb = row_tables[i]
+                        if tb.n_tokens_capacity < need_tok:
+                            n0 = tb.n_blocks
+                            if tb.extend_to(int(need_tok)):
+                                tables_h[i, n0 : tb.n_blocks] = tb.ids[n0:]
+                            else:
+                                oom[i] = True
+                                dn_h[i] = True
+                                oom_slots.add(i)
+                                continue
+                        is_dec[i] = True
+                        q_len_h[i] = 1
+                        lanes -= 1
+                    for i in runnable:
+                        if lanes <= 0:
+                            break
+                        fl = fills[i]
+                        if fl["cow"] is not None:
+                            # boundary copy must precede this fill's writes;
+                            # the copy consumes the source's cache VALUE, so
+                            # commit's pin drops immediately after dispatch
+                            src, dst = fl["cow"]
+                            self._cache = self._cow_copy(
+                                self._cache, jnp.int32(src), jnp.int32(dst)
+                            )
+                            pool.free([src])
+                            fl["cow"] = None
+                        take = min(fl["length"] - fl["pos"], lanes)
+                        tok[i, :take] = fl["p"][fl["pos"] : fl["pos"] + take]
+                        q_start_h[i] = fl["pos"]
+                        q_len_h[i] = take
+                        row_len_h[i] = fl["length"]
+                        b_new_h[i] = fl["b_new"]
+                        lanes -= take
+                        fl["pos"] += take
+                        # chunks this dispatch materializes become matchable
+                        mine = [
+                            b for b, (s, e) in pending_blocks.items()
+                            if s == i and e <= fl["pos"]
+                        ]
+                        for b in mine:
+                            del pending_blocks[b]
+                        if fl["pos"] >= fl["length"]:
+                            fills[i] = None  # completes in this dispatch
+                    if oom.any():
+                        done = jnp.logical_or(done, jnp.asarray(oom))
+                    (self._cache, cur, lengths, emitted, done, budget, out) = self._mixed_rows(
+                        self.params, self._cache, cur, lengths, emitted, done, budget, out,
+                        jnp.asarray(tok), jnp.asarray(q_start_h), jnp.asarray(q_len_h),
+                        jnp.asarray(is_dec), jnp.asarray(row_len_h),
+                        jnp.asarray(b_new_h), jnp.asarray(tables_h),
+                    )
+                    self.mixed_dispatches += 1
+                    steps += 1
+                    em_h, dn_h = np.array(emitted), np.array(done)
+                elif dec_rows:
+                    # no fill in flight: fused multi-step decode, one dispatch
+                    remaining = [int(bu_h[i] - em_h[i]) for i in dec_rows]
+                    n = max(1, min(max(remaining), scfg.sched_chunk))
+                    oom = np.zeros((B,), bool)
+                    for i in dec_rows:
+                        need_tok = min(
+                            ln_h[i] + min(em_h[i] + n, bu_h[i]) - 1,
+                            self._cache_len_padded,
+                        )
+                        tb = row_tables[i]
+                        if tb.n_tokens_capacity >= need_tok:
+                            continue
                         n0 = tb.n_blocks
                         if tb.extend_to(int(need_tok)):
                             tables_h[i, n0 : tb.n_blocks] = tb.ids[n0:]
@@ -1056,92 +1044,48 @@ class ServeEngine:
                             oom[i] = True
                             dn_h[i] = True
                             oom_slots.add(i)
-                            continue
-                    is_dec[i] = True
-                    q_len_h[i] = 1
-                    lanes -= 1
-                for i in runnable:
-                    if lanes <= 0:
-                        break
-                    fl = fills[i]
-                    if fl["cow"] is not None:
-                        # boundary copy must precede this fill's writes;
-                        # the copy consumes the source's cache VALUE, so
-                        # commit's pin drops immediately after dispatch
-                        src, dst = fl["cow"]
-                        cache = self._cow_copy(cache, jnp.int32(src), jnp.int32(dst))
-                        pool.free([src])
-                        fl["cow"] = None
-                    take = min(fl["length"] - fl["pos"], lanes)
-                    tok[i, :take] = fl["p"][fl["pos"] : fl["pos"] + take]
-                    q_start_h[i] = fl["pos"]
-                    q_len_h[i] = take
-                    row_len_h[i] = fl["length"]
-                    b_new_h[i] = fl["b_new"]
-                    lanes -= take
-                    fl["pos"] += take
-                    # chunks this dispatch materializes become matchable
-                    mine = [
-                        b for b, (s, e) in pending_blocks.items()
-                        if s == i and e <= fl["pos"]
-                    ]
-                    for b in mine:
-                        del pending_blocks[b]
-                    if fl["pos"] >= fl["length"]:
-                        fills[i] = None  # completes in this dispatch
-                if oom.any():
-                    done = jnp.logical_or(done, jnp.asarray(oom))
-                cache, cur, lengths, emitted, done, budget, out = self._mixed_rows(
-                    self.params, cache, cur, lengths, emitted, done, budget, out,
-                    jnp.asarray(tok), jnp.asarray(q_start_h), jnp.asarray(q_len_h),
-                    jnp.asarray(is_dec), jnp.asarray(row_len_h),
-                    jnp.asarray(b_new_h), jnp.asarray(tables_h),
-                )
-                self.mixed_dispatches += 1
-                steps += 1
-                em_h, dn_h = np.array(emitted), np.array(done)
-            elif dec_rows:
-                # no fill in flight: fused multi-step decode, one dispatch
-                remaining = [int(bu_h[i] - em_h[i]) for i in dec_rows]
-                n = max(1, min(max(remaining), scfg.sched_chunk))
-                oom = np.zeros((B,), bool)
-                for i in dec_rows:
-                    need_tok = min(
-                        ln_h[i] + min(em_h[i] + n, bu_h[i]) - 1,
-                        self._cache_len_padded,
+                    if oom.any():
+                        done = jnp.logical_or(done, jnp.asarray(oom))
+                    self._cache, cur, emitted, done, out = self._decode_chunk(
+                        self.params, self._cache, cur, lengths, emitted, done, budget, out,
+                        jnp.int32(n), jnp.asarray(tables_h),
                     )
-                    tb = row_tables[i]
-                    if tb.n_tokens_capacity >= need_tok:
-                        continue
-                    n0 = tb.n_blocks
-                    if tb.extend_to(int(need_tok)):
-                        tables_h[i, n0 : tb.n_blocks] = tb.ids[n0:]
-                    else:
-                        oom[i] = True
-                        dn_h[i] = True
-                        oom_slots.add(i)
-                if oom.any():
-                    done = jnp.logical_or(done, jnp.asarray(oom))
-                cache, cur, emitted, done, out = self._decode_chunk(
-                    self.params, cache, cur, lengths, emitted, done, budget, out,
-                    jnp.int32(n), jnp.asarray(tables_h),
-                )
-                self.decode_dispatches += 1
-                steps += 1
-                em_h, dn_h = np.array(emitted), np.array(done)
+                    self.decode_dispatches += 1
+                    steps += 1
+                    em_h, dn_h = np.array(emitted), np.array(done)
 
-            retired = [i for i in active if dn_h[i] and fills[i] is None and slots[i] is not None]
-            if retired:
-                out_h = np.asarray(out)
-                for i in retired:
-                    req = slots[i]
-                    ans = out_h[i, : int(em_h[i])].copy()
-                    scheduler.finish(req, ans, truncated=i in oom_slots)
-                    oom_slots.discard(i)
-                    slots[i] = None
+                retired = [i for i in active if dn_h[i] and fills[i] is None and slots[i] is not None]
+                if retired:
+                    out_h = np.asarray(out)
+                    for i in retired:
+                        req = slots[i]
+                        ans = out_h[i, : int(em_h[i])].copy()
+                        scheduler.finish(req, ans, truncated=i in oom_slots)
+                        oom_slots.discard(i)
+                        slots[i] = None
+                        row_tables[i].release()
+                        tables_h[i, :] = self._trash_block
+                        yield req.rid, ans
+        finally:
+            # the pool/index outlive this call, so an abandoned stream must
+            # not leak owned blocks or half-materialized chunk registrations
+            # into the next serve.  Normal exit has already released
+            # everything and this is a no-op
+            if index is not None and pending_blocks:
+                index.invalidate(list(pending_blocks))
+            pending_blocks.clear()
+            for i in range(B):
+                if fills[i] is not None and fills[i].get("cow") is not None:
+                    pool.free([fills[i]["cow"][0]])
+                fills[i] = None
+                if slots[i] is not None and slots[i].status == "active":
+                    scheduler.finish(slots[i], empty, deadlocked=True)
+                slots[i] = None
+                if row_tables[i].ids:
                     row_tables[i].release()
-                    tables_h[i, :] = self._trash_block
-                    yield req.rid, ans
+                tables_h[i, :] = self._trash_block
+            report_prefix()
+            self._serving = False
 
     def serve_prompts(
         self,

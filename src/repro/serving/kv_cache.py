@@ -24,48 +24,72 @@ the HBM and the prefill FLOPs that computed it.
 
 ``PrefixIndex`` is the lookup structure on top: a hash-chain trie over
 ``block_size``-token chunks of prompt token ids.  Each cached chunk is
-one trie node keyed by ``(parent, chunk tokens)`` holding the pool block
-with that chunk's K/V.  ``lookup`` walks the trie for the longest cached
-prefix; when a request retires, its cached blocks drop to refcount zero
-and are **parked** — contents preserved, reclaimable — rather than
-recycled, and an LRU sweep evicts parked leaves when the pool is under
-pressure (``BlockPool.alloc`` asks its registered ``evictor`` to recycle
-parked blocks before declaring OOM).
+one trie node keyed by ``(parent, chunk tokens)``.  On a resident engine
+the index (and the pool) survive across serve calls, so the cache is
+**tiered**:
+
+  * **device tier**: the node holds a pool block (``node.block`` is an
+    int) with the chunk's K/V in HBM.  Zero-ref device blocks **park**
+    (contents preserved, reclaimable).
+  * **host tier** (optional, ``HostBlockStore``): under pool pressure a
+    parked chunk is *demoted* instead of discarded — its K/V payload is
+    fetched to host RAM (``fetch_block`` callback, engine-provided) and
+    the device block is recycled; the node stays in the trie with
+    ``node.block is None``.  A later prefix hit **re-admits** the chunk:
+    ``commit`` allocates a fresh device block, repoints the node, and
+    returns the host payload for the engine to ``device_put`` — the
+    chunk's K/V is never recomputed.  The store is byte-bounded; over
+    budget it drops LRU spilled *leaves* (then the chunk really is gone
+    and costs a re-prefill like a plain eviction).
+
+**Leaf-first chain integrity across the tier boundary**: demotion (like
+eviction) only takes a node whose children are all already spilled, and
+host-side drops only take spilled nodes with no children — so along any
+root-to-leaf chain the device-resident nodes form a prefix, the spilled
+nodes a contiguous middle, and nothing cached is ever orphaned from the
+root.  Re-admission restores whole matched chains in root-first order,
+preserving the same shape.
 
 This module is deliberately host-only and jax-free: the pool hands out
-integer block ids; the engine owns the device arrays those ids index
-(``models/lm.init_paged_cache`` leaves shaped ``(n_layers, n_pool,
-block_size, ...)``) and the device copy of the block tables.
+integer block ids and the store holds opaque payloads; the engine owns
+the device arrays those ids index (``models/lm.init_paged_cache`` leaves
+shaped ``(n_layers, n_pool, block_size, ...)``), performs the
+device->host fetch at demotion and the host->device upload at
+re-admission, and keeps the device copy of the block tables.
 
 Contracts / invariants (property-tested in tests/test_kv_cache.py):
   * ``alloc(n)`` is all-or-nothing: it returns ``n`` block ids or raises
     ``BlockPoolOOM`` without allocating anything (``try_alloc`` returns
     ``None`` instead) — a half-admitted request can never leak blocks.
-    Under pool pressure it first asks the registered evictor to recycle
-    parked (zero-ref cached) blocks, LRU-first.
+    Under pool pressure it first asks the registered evictor to demote
+    (or, with no spill store, recycle) parked blocks, LRU-first.
   * Refcounts are never negative: ``free`` of a block that is not owned
     (refcount >= 1) raises loudly — a double-free means two requests
     believe they own the same block, which is cache corruption, not a
     recoverable condition.  ``share`` requires an owned block.
-  * A block is in exactly one state: free, owned (refcount >= 1), or
-    parked (refcount == 0, cached contents preserved, reclaimable).
-    Zero-ref blocks are always reclaimable — either on the free list or
-    parked where the evictor can reach them.
-  * Eviction never touches a block with refcount > 0: only parked blocks
-    are recycled, and only trie leaves (a cached chunk is evicted before
-    the parent chunk its hash chains on, so every surviving chain stays
-    reachable from the root).
-  * Allocation order is deterministic (LIFO free list, FIFO eviction by
-    LRU stamp) so paged serving replays are reproducible run to run.
+  * A device block is in exactly one state: free, owned (refcount >= 1),
+    or parked (refcount == 0, cached contents preserved, reclaimable);
+    a cached *chunk* is in exactly one tier: device-backed (its node
+    holds a block in one of those states) or spilled (payload in the
+    host store, ``node.block is None``).  The store's ``used_bytes``
+    never exceeds ``max_bytes``.
+  * Eviction/demotion never touches a block with refcount > 0, and only
+    takes chunks whose children are already off-device (leaf-first), so
+    every surviving chain stays reachable from the root.
+  * Allocation order is deterministic (LIFO free list, FIFO
+    eviction/demotion by LRU stamp) so paged serving replays are
+    reproducible run to run.
   * Shared prompt blocks are immutable: the engine only writes positions
     ``>= start`` of a request whose blocks below ``start`` are shared,
     and copy-on-writes the boundary block when a full-prefix hit would
     otherwise write position ``L - 1`` into a block it does not own
-    exclusively (see ``PrefixIndex.plan``).
+    exclusively (see ``PrefixIndex.plan``).  A spilled boundary chunk
+    needs no device copy at all: its payload uploads straight into the
+    request's private block.
 """
 from __future__ import annotations
 
-from typing import Any
+from typing import Any, Callable
 
 
 class BlockPoolOOM(RuntimeError):
@@ -82,10 +106,10 @@ class BlockPool:
 
     States: **free** (on the LIFO free list), **owned** (refcount >= 1,
     at least one block table points at it), **parked** (refcount == 0
-    but contents preserved for prefix reuse; recycled by the registered
-    ``evictor`` under pressure).  Without a registered evictor (plain
-    paged serving, no prefix cache) blocks never park and the pool
-    degenerates to the PR-4 alloc/free manager.
+    but contents preserved for prefix reuse; demoted or recycled by the
+    registered ``evictor`` under pressure).  Without a registered
+    evictor (plain paged serving, no prefix cache) blocks never park and
+    the pool degenerates to the PR-4 alloc/free manager.
     """
 
     def __init__(self, n_blocks: int, block_size: int):
@@ -133,8 +157,9 @@ class BlockPool:
 
     def alloc(self, n: int) -> list[int]:
         """Take ``n`` blocks at refcount 1; all-or-nothing (raises
-        BlockPoolOOM).  Under pressure, parked prefix blocks are evicted
-        LRU-first before giving up."""
+        BlockPoolOOM).  Under pressure, parked prefix blocks are demoted
+        to the host tier (or evicted outright) LRU-first before giving
+        up."""
         if n < 0:
             raise ValueError(f"alloc({n})")
         self._make_room(n)
@@ -209,9 +234,9 @@ class BlockPool:
         self._cached.add(b)
 
     def recycle_parked(self, b: int) -> None:
-        """Eviction endpoint: a parked block loses its cached contents and
-        returns to the free list.  Refuses owned blocks — eviction must
-        never touch refcount > 0."""
+        """Eviction/demotion endpoint: a parked block's device contents
+        are released and the block returns to the free list.  Refuses
+        owned blocks — eviction must never touch refcount > 0."""
         if b not in self._parked:
             raise ValueError(f"recycle_parked of non-parked block {b}")
         self._parked.remove(b)
@@ -283,13 +308,85 @@ class BlockTable:
             self.ids = []
 
 
+class HostBlockStore:
+    """Bounded host-RAM tier for demoted prefix-cache chunks.
+
+    Holds opaque per-chunk payloads (whatever the engine's
+    ``fetch_block`` produced — this module never looks inside) under a
+    hard ``max_bytes`` budget.  ``put`` makes room by asking its
+    registered ``evictor`` (the ``PrefixIndex``) to drop LRU spilled
+    leaves; if the budget still cannot fit the payload, ``put`` returns
+    False and the caller falls back to a plain eviction.  Host-only and
+    jax-free, like the pool.
+    """
+
+    def __init__(self, max_bytes: int):
+        if max_bytes <= 0:
+            raise ValueError(f"HostBlockStore needs a positive byte budget, got {max_bytes}")
+        self.max_bytes = int(max_bytes)
+        self.used_bytes = 0
+        self._entries: dict[Any, tuple[Any, int]] = {}
+        self.evictor: Any = None  # PrefixIndex registers itself here
+        # lifetime counters (observability)
+        self.n_puts = 0
+        self.n_drops = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key) -> bool:
+        return key in self._entries
+
+    def put(self, key, payload, nbytes: int) -> bool:
+        """Store ``payload`` under ``key``; True on success.  Makes room
+        by dropping LRU spilled leaves via the evictor; refuses (False,
+        nothing stored) if the payload cannot fit the budget at all."""
+        nbytes = int(nbytes)
+        if key in self._entries:
+            raise ValueError(f"duplicate spill key {key!r}")
+        if nbytes > self.max_bytes:
+            return False
+        while self.used_bytes + nbytes > self.max_bytes:
+            if self.evictor is None or not self.evictor.drop_one_spilled():
+                return False
+        self._entries[key] = (payload, nbytes)
+        self.used_bytes += nbytes
+        self.n_puts += 1
+        return True
+
+    def peek(self, key):
+        """Payload for ``key`` without removing it (COW-from-host reads
+        the chunk's content but leaves the spilled entry authoritative)."""
+        return self._entries[key][0]
+
+    def pop(self, key):
+        """Remove and return the payload for ``key`` (re-admission moves
+        the chunk back to the device tier)."""
+        payload, nbytes = self._entries.pop(key)
+        self.used_bytes -= nbytes
+        return payload
+
+    def drop(self, key) -> None:
+        """Discard an entry (store-pressure eviction bookkeeping)."""
+        self.pop(key)
+        self.n_drops += 1
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (
+            f"HostBlockStore(entries={len(self._entries)}, "
+            f"used={self.used_bytes}/{self.max_bytes}B)"
+        )
+
+
 class _Node:
     """One cached chunk: trie node keyed by its chunk tokens under its
-    parent, holding the pool block with the chunk's K/V."""
+    parent.  Device-backed (``block`` is a pool id) or spilled
+    (``block is None``; payload lives in the host store keyed by this
+    node)."""
 
     __slots__ = ("chunk", "block", "parent", "children", "stamp")
 
-    def __init__(self, chunk: tuple, block: int, parent: "_Node | None", stamp: int):
+    def __init__(self, chunk: tuple, block: int | None, parent: "_Node | None", stamp: int):
         self.chunk = chunk
         self.block = block
         self.parent = parent
@@ -298,58 +395,96 @@ class _Node:
 
 
 class PrefixPlan:
-    """Admission plan for one prompt: what to share, copy, and allocate.
+    """Admission plan for one prompt: what to share, re-admit, copy, and
+    allocate.
 
-    ``shared``: cached blocks adopted by reference (refcount +1 each).
-    ``cow_src``: cached block to copy-on-write, or None.  Set exactly when
-    the cache holds the *entire* prompt and the prompt ends on a block
-    boundary: the suffix is then the single last prompt token (we still
-    need its logits for the first decode token) and its K/V write at
-    position ``L - 1`` would mutate the shared boundary block — so that
-    block is duplicated into a private copy first.
-    ``n_fresh``: private blocks to allocate beyond shared + COW copy
-    (suffix prompt blocks + the first decode block), i.e.
-    ``blocks_for(L + 1) - len(shared) - (1 if cow)``.
+    ``shared``: cached device blocks adopted by reference (refcount +1
+    each).
+    ``readmit``: spilled chain nodes to bring back to the device tier —
+    each gets a fresh block at ``commit`` and its host payload is
+    returned for the engine to upload.
+    ``cow_src``: cached device block to copy-on-write, or None.  Set
+    exactly when the cache holds the *entire* prompt on device and the
+    prompt ends on a block boundary: the suffix is then the single last
+    prompt token (we still need its logits for the first decode token)
+    and its K/V write at position ``L - 1`` would mutate the shared
+    boundary block — so that block is duplicated into a private copy
+    first.  When the boundary chunk is *spilled* instead
+    (``host_cow``), no device copy exists or is needed: the host payload
+    uploads straight into the request's private block and the spilled
+    entry stays authoritative.
+    ``n_fresh``: private blocks to allocate beyond shared + re-admitted +
+    COW copy (suffix prompt blocks + the first decode block).
     ``start``: first prompt position the engine must actually prefill;
-    positions ``< start`` ride in shared blocks.
+    positions ``< start`` ride in shared/re-admitted blocks.
+    ``uploads``: filled by ``commit`` — ``(payload, block)`` pairs the
+    engine must ``device_put`` before the row's first dispatch.
     """
 
-    __slots__ = ("tokens", "nodes", "shared", "cow_src", "n_fresh", "start", "n_tokens")
+    __slots__ = ("tokens", "nodes", "shared", "readmit", "cow_node", "cow_src",
+                 "host_cow", "n_fresh", "start", "n_tokens", "uploads")
 
-    def __init__(self, tokens, nodes, shared, cow_src, n_fresh, start, n_tokens):
+    def __init__(self, tokens, nodes, shared, readmit, cow_node, n_fresh, start, n_tokens):
         self.tokens = tokens
         self.nodes = nodes  # matched trie nodes, root-first
-        self.shared = shared  # block ids shared by reference
-        self.cow_src = cow_src  # block id to copy, or None
+        self.shared = shared  # device block ids shared by reference
+        self.readmit = readmit  # spilled chain nodes needing fresh blocks
+        self.cow_node = cow_node  # boundary node for a full-prefix hit, or None
+        self.cow_src = None if cow_node is None else cow_node.block  # device id or None
+        self.host_cow = cow_node is not None and cow_node.block is None
         self.n_fresh = n_fresh
         self.start = start
         self.n_tokens = n_tokens  # L (prompt length within the window)
+        self.uploads: list[tuple[Any, int]] = []
 
 
 class PrefixIndex:
     """Hash-chain trie over ``block_size``-token chunks of prompt ids.
 
     Registers itself as the pool's evictor: under allocation pressure the
-    least-recently-used parked *leaf* chunk is evicted (leaf-first keeps
-    every surviving chain reachable), its block recycled.  Lookup walks
-    the trie chunk by chunk for the longest cached prefix; ``plan`` turns
-    a lookup into an admission plan (shared chain, optional COW boundary
-    copy, fresh-block count) and checks feasibility against the pool
-    without mutating anything.
+    least-recently-used parked chunk whose children are already
+    off-device is *demoted* to the host tier (``spill_store`` +
+    ``fetch_block`` set) or evicted outright, its device block recycled.
+    Lookup walks the trie chunk by chunk for the longest cached prefix
+    across both tiers; ``plan`` turns a lookup into an admission plan
+    (shared device chain, spilled chunks to re-admit, optional COW
+    boundary copy, fresh-block count) and checks feasibility against the
+    pool without mutating anything.  The index survives the serve loop
+    that populated it — a resident engine re-uses it across calls.
     """
 
-    def __init__(self, pool: BlockPool):
+    def __init__(self, pool: BlockPool, spill_store: HostBlockStore | None = None,
+                 fetch_block: Callable[[int], tuple[Any, int]] | None = None):
         self.pool = pool
         self.block_size = pool.block_size
         self._root = _Node((), -1, None, 0)
         self._node_of_block: dict[int, _Node] = {}
+        self._spilled: set[_Node] = set()
         self._clock = 0
         pool.evictor = self
+        self.spill_store = spill_store
+        self.fetch_block = fetch_block
+        if spill_store is not None:
+            if fetch_block is None:
+                raise ValueError("spill_store needs a fetch_block callback to demote")
+            spill_store.evictor = self
+        # commit-in-progress protection: chain nodes about to re-admit
+        # must not be dropped by store pressure mid-commit
+        self._pinned_spilled: set[_Node] = set()
+        # lifetime tier-traffic counters (engine reports deltas per pass)
+        self.n_demotions = 0
+        self.n_readmits = 0
 
     # ---- observability ----
     @property
     def n_cached_blocks(self) -> int:
+        """Device-tier cached chunks."""
         return len(self._node_of_block)
+
+    @property
+    def n_spilled(self) -> int:
+        """Host-tier cached chunks."""
+        return len(self._spilled)
 
     def _tick(self) -> int:
         self._clock += 1
@@ -362,7 +497,10 @@ class PrefixIndex:
             yield tuple(int(t) for t in tokens[i * bs : (i + 1) * bs])
 
     def lookup(self, tokens) -> list[_Node]:
-        """Longest cached prefix: matched trie nodes, root-first."""
+        """Longest cached prefix: matched trie nodes, root-first.  The
+        chain may cross the tier boundary — device-backed nodes first,
+        then spilled ones (demotion is leaf-first, so device nodes always
+        form a prefix of the chain)."""
         node, out = self._root, []
         for chunk in self._chunks(tokens, self.block_size):
             nxt = node.children.get(chunk)
@@ -376,10 +514,10 @@ class PrefixIndex:
         """Admission plan for ``tokens`` (already window-truncated), or
         None when the pool cannot cover it even after evicting every
         parked block not needed by the plan itself.  Pure: nothing is
-        shared, allocated, or evicted until ``commit``.
+        shared, allocated, re-admitted, or evicted until ``commit``.
 
         ``n_reserve_tokens`` defaults to ``len(tokens) + 1`` — prompt
-        plus the first decode token, exactly what the PR-4 admission gate
+        plus the first decode token, exactly what the admission gate
         reserves so same-pass admits can never starve each other."""
         L = len(tokens)
         n_total = blocks_for(
@@ -391,48 +529,52 @@ class PrefixIndex:
             # full-prefix hit ending on a block boundary: recompute only
             # the last prompt token (its logits seed decode) and COW the
             # boundary block its K/V write would otherwise mutate
-            start, shared_nodes, cow = L - 1, nodes[:-1], nodes[-1]
+            start, chain, cow = L - 1, nodes[:-1], nodes[-1]
         else:
-            start, shared_nodes, cow = matched, nodes, None
-        shared = [n.block for n in shared_nodes]
-        n_fresh = n_total - len(shared) - (1 if cow is not None else 0)
-        # feasibility: fresh + COW copy must come from free blocks plus
-        # parked blocks OUTSIDE the plan's own chain (evicting a block we
-        # are about to share/copy would be self-defeating)
-        pinned = {n.block for n in nodes}
+            start, chain, cow = matched, nodes, None
+        shared = [n.block for n in chain if n.block is not None]
+        readmit = [n for n in chain if n.block is None]
+        n_fresh = n_total - len(chain) - (1 if cow is not None else 0)
+        # feasibility: fresh + re-admitted + COW copy must come from free
+        # blocks plus parked blocks OUTSIDE the plan's own device chain
+        # (evicting a block we are about to share/copy is self-defeating)
+        pinned = {n.block for n in nodes if n.block is not None}
         reclaimable = sum(1 for b in self.pool._parked if b not in pinned)
-        need = n_fresh + (1 if cow is not None else 0)
+        need = n_fresh + len(readmit) + (1 if cow is not None else 0)
         if need > self.pool.free_blocks + reclaimable:
             return None
-        return PrefixPlan(tokens, nodes, shared, None if cow is None else cow.block,
-                          n_fresh, start, L)
+        return PrefixPlan(tokens, nodes, shared, readmit, cow, n_fresh, start, L)
 
     def commit(self, plan: PrefixPlan) -> tuple[list[int], int | None]:
-        """Execute a plan: acquire the shared chain (share / reactivate),
-        allocate the COW copy and fresh blocks (evicting parked blocks
-        under pressure — the chain is pinned first, so eviction can never
-        touch it), and register the prompt chunks this request will
-        compute.  Returns ``(table_ids, cow_dst)``: the request's block
-        table in logical order, and the private copy destination the
-        engine must fill from ``plan.cow_src`` on device (None when no
-        COW).
+        """Execute a plan: acquire the shared device chain (share /
+        reactivate), re-admit spilled chain chunks (fresh block each,
+        host payload queued on ``plan.uploads`` for the engine's
+        device_put), allocate the COW copy and fresh blocks (demoting or
+        evicting parked blocks under pressure — the chain is pinned
+        first, so eviction can never touch it), and register the prompt
+        chunks this request will compute.  Returns ``(table_ids,
+        cow_dst)``: the request's block table in logical order, and the
+        private boundary-copy destination (None when no COW is needed).
 
-        When ``cow_dst`` is not None, ``plan.cow_src`` is returned STILL
-        PINNED (refcount +1): the caller must ``pool.free([cow_src])``
-        only after dispatching the device copy.  Unpinning earlier would
-        let a later same-pass commit under pool pressure evict and
-        re-allocate the source before the copy reads it."""
+        When ``cow_dst`` is not None AND ``plan.cow_src`` is a device
+        block, the source is returned STILL PINNED (refcount +1): the
+        caller must ``pool.free([cow_src])`` only after dispatching the
+        device copy.  A *spilled* boundary chunk (``plan.host_cow``)
+        needs no device copy — its payload rides ``plan.uploads`` into
+        the private block directly and nothing stays pinned."""
         pool, stamp = self.pool, self._tick()
         for n in plan.nodes:
-            n.stamp = stamp  # LRU touch on every matched chunk
-        # 1. pin the shared chain before any allocation can evict it
+            n.stamp = stamp  # LRU touch on every matched chunk, both tiers
+        # 1. pin the device chain before any allocation can evict it;
+        #    pin the spilled chain against store-pressure drops mid-commit
         for b in plan.shared:
             if pool.is_parked(b):
                 pool.reactivate([b])
             else:
                 pool.share([b])
-        cow = plan.cow_src is not None
-        if cow:
+        cow = plan.cow_node is not None
+        dev_cow = cow and not plan.host_cow
+        if dev_cow:
             # pin the source so allocation pressure cannot evict it before
             # the engine's device copy reads it (eviction never touches
             # refcount >= 1).  The pin survives commit — the caller
@@ -441,20 +583,49 @@ class PrefixIndex:
                 pool.reactivate([plan.cow_src])
             else:
                 pool.share([plan.cow_src])
+        self._pinned_spilled = set(plan.readmit)
+        if plan.host_cow:
+            self._pinned_spilled.add(plan.cow_node)
         try:
-            got = pool.alloc(plan.n_fresh + (1 if cow else 0))
+            got = pool.alloc(plan.n_fresh + len(plan.readmit) + (1 if cow else 0))
         except BlockPoolOOM:
             # plan() said feasible and the consumer is single-threaded,
             # so this means the caller raced the pool — unwind loudly
-            if cow:
+            if dev_cow:
                 pool.free([plan.cow_src])
             if plan.shared:
                 pool.free(plan.shared)
             raise
-        cow_dst = got[0] if cow else None
-        fresh = got[1:] if cow else got
-        table = plan.shared + ([cow_dst] if cow_dst is not None else []) + fresh
-        # 2. register the full prompt chunks this request computes (the
+        finally:
+            self._pinned_spilled = set()
+        k = 0
+        plan.uploads = []
+        # 2. re-admit spilled chain chunks in root-first order: fresh
+        #    device block, table repoint, payload queued for upload.  The
+        #    block is owned (refcount 1) by this request and cached — on
+        #    retire it parks again like any device-tier chunk
+        for node in plan.readmit:
+            b = got[k]
+            k += 1
+            node.block = b
+            self._spilled.discard(node)
+            self._node_of_block[b] = node
+            pool.mark_cached(b)
+            plan.uploads.append((self.spill_store.pop(node), b))
+            self.n_readmits += 1
+        cow_dst = None
+        if cow:
+            cow_dst = got[k]
+            k += 1
+            if plan.host_cow:
+                # boundary content comes from the host tier: upload into
+                # the private block, spilled entry stays authoritative
+                plan.uploads.append((self.spill_store.peek(plan.cow_node), cow_dst))
+                self.n_readmits += 1
+        fresh = got[k:]
+        chain = plan.nodes[:-1] if cow else plan.nodes
+        table = [n.block for n in chain] + ([cow_dst] if cow_dst is not None else []) + fresh
+        # 3. register the full prompt chunks this request computes (the
         # COW copy stays private: its original chunk is already cached)
         node = plan.nodes[-1] if plan.nodes else self._root
         chunks = list(self._chunks(plan.tokens, self.block_size))
@@ -473,14 +644,15 @@ class PrefixIndex:
     def invalidate(self, block_ids) -> None:
         """Unregister chunks that were committed but never materialized —
         the rollback path when an admission is force-done (dependency
-        deadlock) before its prefill ran.  Leaf-first, like eviction, so
-        every surviving chain stays root-reachable; a chunk whose children
-        are NOT in the same invalidation set would orphan a live chain
-        and raises instead (callers force-done whole dependent groups, so
-        descendants of an invalidated chunk are always invalidated too).
-        Blocks stay owned by the caller's table — ``unmark_cached`` only
-        removes the park-on-free claim, so the subsequent table release
-        recycles them as plain blocks."""
+        deadlock) or its serve loop is abandoned before its prefill ran.
+        Leaf-first, like eviction, so every surviving chain stays
+        root-reachable; a chunk whose children are NOT in the same
+        invalidation set would orphan a live chain and raises instead
+        (callers force-done whole dependent groups, so descendants of an
+        invalidated chunk are always invalidated too).  Blocks stay owned
+        by the caller's table — ``unmark_cached`` only removes the
+        park-on-free claim, so the subsequent table release recycles them
+        as plain blocks."""
         todo = [b for b in block_ids if b in self._node_of_block]
         while todo:
             progressed = False
@@ -498,21 +670,73 @@ class PrefixIndex:
                     f"invalidate of chunk(s) with live cached children: {todo}"
                 )
 
-    # ---- eviction (BlockPool.evictor protocol) ----
+    # ---- eviction / demotion (BlockPool.evictor protocol) ----
+    def _demotable(self, node: _Node) -> bool:
+        """Leaf-first across the tier boundary: a chunk may leave the
+        device tier only once every child is already off-device."""
+        return all(c.block is None for c in node.children.values())
+
+    def _drop_spilled_subtree(self, node: _Node) -> None:
+        """Remove every spilled descendant of ``node`` from the trie and
+        the store (deepest-first) — the hard-eviction path when a chunk
+        with spilled children must leave the trie entirely."""
+        for child in list(node.children.values()):
+            self._drop_spilled_subtree(child)
+            self.spill_store.drop(child)
+            self._spilled.discard(child)
+            del node.children[child.chunk]
+
     def evict_one(self) -> bool:
-        """Recycle the LRU parked leaf chunk.  Returns False when nothing
-        is evictable (every cached block is owned or has cached
-        children)."""
-        victim: _Node | None = None
+        """Free one device block from the cache, LRU-first among parked
+        chunks whose children are already off-device.  With a spill
+        store the chunk is *demoted* (payload fetched to host, node
+        repointed off-device); without one — or when the store cannot fit
+        it — the chunk (and any spilled subtree chaining on it) is
+        dropped outright.  Returns False when nothing is reclaimable."""
+        cands: list[_Node] = []
         for b in self.pool._parked:
             node = self._node_of_block.get(b)
-            if node is None or node.children:
-                continue  # not ours / interior chunk: children chain on it
+            if node is None or not self._demotable(node):
+                continue
+            cands.append(node)
+        cands.sort(key=lambda n: n.stamp)
+        for victim in cands:
+            b = victim.block
+            if self.spill_store is not None:
+                payload, nbytes = self.fetch_block(b)
+                if self.spill_store.put(victim, payload, nbytes):
+                    victim.block = None
+                    self._spilled.add(victim)
+                    del self._node_of_block[b]
+                    self.pool.recycle_parked(b)
+                    self.n_demotions += 1
+                    return True
+                # the store cannot hold this chunk: fall through to a
+                # plain eviction (its spilled subtree must go with it)
+            if victim.children:
+                if self.spill_store is None:
+                    continue  # interior chunk with off-device children: skip
+                self._drop_spilled_subtree(victim)
+            del victim.parent.children[victim.chunk]
+            del self._node_of_block[b]
+            self.pool.recycle_parked(b)
+            return True
+        return False
+
+    # ---- host-store pressure (HostBlockStore.evictor protocol) ----
+    def drop_one_spilled(self) -> bool:
+        """Drop the LRU spilled *leaf* from the host tier (then the chunk
+        is really gone and costs a re-prefill, like a plain eviction).
+        Chunks pinned by an in-progress ``commit`` are never dropped."""
+        victim: _Node | None = None
+        for node in self._spilled:
+            if node.children or node in self._pinned_spilled:
+                continue
             if victim is None or node.stamp < victim.stamp:
                 victim = node
         if victim is None:
             return False
+        self.spill_store.drop(victim)
+        self._spilled.discard(victim)
         del victim.parent.children[victim.chunk]
-        del self._node_of_block[victim.block]
-        self.pool.recycle_parked(victim.block)
         return True

@@ -3,7 +3,6 @@
 Next token is always ``(cur + 1) % VOCAB``, so the exact answer of every
 request — including where EOS lands — is computable in closed form.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -43,21 +42,6 @@ class FakeLM:
         # stateless model: the paged cache carries no information either,
         # but keeps the per-slot leaf contract so slot scatters typecheck
         return {"dummy": jnp.zeros((1, n_slots, 1), jnp.float32)}
-
-    @staticmethod
-    def paged_scatter_prefill(cfg, cache, row_cache, block_ids, slots, block_size,
-                              start_pos=None, suffix_lens=None):
-        del block_ids, block_size, start_pos, suffix_lens  # no K/V to page
-        return jax.tree.map(lambda c, rc: c.at[:, slots].set(rc), cache, row_cache)
-
-    @staticmethod
-    def paged_prefill_suffix(cfg, pol, params, batch, cache, block_tables, start,
-                             block_size, attend_len):
-        # the fake model is stateless, so suffix logits need no prefix K/V
-        tokens = batch["tokens"]
-        return FakeLM._logits(tokens), {
-            "dummy": jnp.zeros((1, tokens.shape[0], 1), jnp.float32)
-        }
 
     @staticmethod
     def paged_copy_block(cfg, cache, src, dst):

@@ -321,3 +321,186 @@ def test_prefix_index_random_traffic_invariants(n_blocks, seed):
     while pool.reclaimable_blocks:
         assert idx.evict_one(), "zero-ref cached block not reclaimable"
     assert pool.free_blocks == n_blocks
+
+
+# ------------------------------------------------------------------ #
+# host tier: bounded spill store + demote / re-admit lifecycle
+# ------------------------------------------------------------------ #
+def _tiered(n_blocks, bs=4, max_bytes=1024, nbytes=8):
+    """Pool + store + index wired the way the engine does it, with a
+    fetch_block that returns the chunk's own tokens as the 'payload' so
+    tests can check demote->re-admit round-trips content-identically."""
+    from repro.serving.kv_cache import HostBlockStore
+
+    pool = BlockPool(n_blocks, bs)
+    store = HostBlockStore(max_bytes)
+    idx = PrefixIndex(
+        pool, spill_store=store,
+        fetch_block=lambda b: (idx._node_of_block[b].chunk, nbytes),
+    )
+    return pool, store, idx
+
+
+def test_host_store_put_peek_pop_and_byte_bound():
+    from repro.serving.kv_cache import HostBlockStore
+
+    with pytest.raises(ValueError, match="positive byte budget"):
+        HostBlockStore(0)
+    store = HostBlockStore(100)
+    assert store.put("a", "PA", 60)
+    with pytest.raises(ValueError, match="duplicate"):
+        store.put("a", "PA", 1)
+    assert "a" in store and len(store) == 1 and store.peek("a") == "PA"
+    assert not store.put("big", "PB", 101)  # can never fit the budget
+    assert not store.put("b", "PB", 60)  # would overflow, no evictor to help
+    assert store.used_bytes == 60 and store.n_puts == 1
+    assert store.pop("a") == "PA" and store.used_bytes == 0 and len(store) == 0
+
+
+def test_demotion_then_readmission_roundtrips_content():
+    """Pool pressure demotes the LRU parked leaf to the host store; a
+    later prefix hit re-admits it onto a fresh device block with the
+    exact payload the demotion fetched (never recomputed)."""
+    pool, store, idx = _tiered(4)
+    A, B = (1, 1, 1, 1), (2, 2, 2, 2)
+    tAB, _ = idx.commit(idx.plan(_toks(A, B) + [9]))  # 3 blocks: A, B, tail
+    pool.free(tAB)  # A and B park, tail block recycles
+    # a cold 9-token request needs 3 fresh blocks; free=1 -> demote leaf B
+    tC, _ = idx.commit(idx.plan([7] * 9))
+    assert idx.n_demotions == 1 and idx.n_spilled == 1
+    assert len(store) == 1 and store.used_bytes == 8
+    assert idx.lookup(_toks(A, B))[1].block is None, "leaf B must spill, not parent A"
+    pool.free(tC)
+    # warm request over A+B: A shares on-device, B re-admits from host
+    p = idx.plan(_toks(A, B) + [5, 5])
+    assert p is not None and p.start == 8
+    assert p.shared == [tAB[0]] and [n.chunk for n in p.readmit] == [B]
+    t2, cow = idx.commit(p)
+    assert cow is None and idx.n_readmits == 1
+    # B is back on device (its own alloc pressure may have demoted OTHER
+    # parked chunks — that's the tier working, not a failure)
+    assert all(n.chunk != B for n in idx._spilled)
+    assert idx.lookup(_toks(A, B))[1].block == t2[1]
+    assert p.uploads[0] == (B, t2[1]), "payload must be the demoted chunk, verbatim"
+    assert t2[0] == tAB[0]
+    pool.free(t2)
+
+
+def test_spilled_boundary_chunk_uploads_as_host_cow():
+    """A full-prefix hit whose boundary chunk is spilled needs no device
+    copy: the host payload uploads straight into the request's private
+    block and the spilled entry stays authoritative."""
+    pool, store, idx = _tiered(4)
+    A, B = (1, 1, 1, 1), (2, 2, 2, 2)
+    tAB, _ = idx.commit(idx.plan(_toks(A, B)))
+    pool.free(tAB)
+    tC, _ = idx.commit(idx.plan([7] * 9))  # demotes leaf B
+    pool.free(tC)
+    while pool.reclaimable_blocks:  # clear C's parked chunks off-device too
+        assert idx.evict_one()
+    p = idx.plan(_toks(A, B))
+    assert p is not None and p.host_cow and p.cow_src is None
+    assert p.start == len(_toks(A, B)) - 1
+    t2, cow_dst = idx.commit(p)
+    assert cow_dst is not None and t2[1] == cow_dst
+    assert (B, cow_dst) in p.uploads
+    assert idx.lookup(_toks(A, B))[1].block is None, "spilled entry stays authoritative"
+    assert any(n.chunk == B for n in idx._spilled) and len(store) >= 1
+    pool.free(t2)
+
+
+def test_store_pressure_drops_lru_spilled_leaf():
+    """An over-budget put makes room by dropping the LRU spilled LEAF;
+    a store too small for even one chunk forces plain eviction instead
+    (chunk gone from the trie, no demotion counted)."""
+    # store holds exactly one 8-byte chunk: demoting a second drops the first
+    pool, store, idx = _tiered(4, max_bytes=8)
+    A, B = (1, 1, 1, 1), (2, 2, 2, 2)
+    tAB, _ = idx.commit(idx.plan(_toks(A, B)))
+    pool.free(tAB)
+    assert idx.evict_one()  # demote leaf B -> store full
+    assert idx.evict_one()  # demote A: store drops spilled leaf B to make room
+    assert store.n_drops == 1 and idx.n_demotions == 2 and idx.n_spilled == 1
+    assert idx.lookup(_toks(A, B)) and len(idx.lookup(_toks(A, B))) == 1, (
+        "dropped chunk B must leave the trie; A survives spilled"
+    )
+    assert pool.free_blocks == 4
+    # a store that cannot fit ANY chunk degenerates to plain eviction
+    pool2, store2, idx2 = _tiered(4, max_bytes=4, nbytes=8)
+    t, _ = idx2.commit(idx2.plan(_toks(A)))
+    pool2.free(t)
+    assert idx2.evict_one()
+    assert idx2.n_demotions == 0 and idx2.n_spilled == 0 and store2.n_puts == 0
+    assert idx2.lookup(_toks(A)) == []
+
+
+@given(
+    n_blocks=st.integers(2, 16),
+    store_chunks=st.integers(1, 4),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=25, deadline=None)
+def test_tiered_prefix_index_random_traffic_invariants(n_blocks, store_chunks, seed):
+    """Random admit/retire traffic over a SPILL-TIERED index: every
+    device block is exactly one of free/parked/owned; every cached chunk
+    is exactly one of device-backed or spilled; the host store never
+    exceeds its byte budget; spilled nodes never have device-resident
+    children (leaf-first across the tier boundary); and every re-admitted
+    payload is byte-identical to what demotion fetched."""
+    import random
+
+    rng = random.Random(seed)
+    bs, nbytes = 4, 16
+    pool, store, idx = _tiered(n_blocks, bs=bs, max_bytes=store_chunks * nbytes,
+                               nbytes=nbytes)
+    vocab = [(i, i, i, i) for i in range(1, 5)]
+    tables: list[list[int]] = []
+    for _ in range(150):
+        if tables and rng.random() < 0.45:
+            pool.free(tables.pop(rng.randrange(len(tables))))
+        else:
+            chunks = [rng.choice(vocab) for _ in range(rng.randint(0, 2))]
+            tail = [9] * rng.randint(1, bs - 1) if rng.random() < 0.7 else []
+            tokens = _toks(*chunks) + tail
+            if not tokens:
+                continue
+            plan = idx.plan(tokens)
+            if plan is None:
+                continue
+            table, cow_dst = idx.commit(plan)
+            # re-admitted payloads come back verbatim (fetch_block stored
+            # the chunk's own tokens, so identity is checkable)
+            n_r = len(plan.readmit)
+            assert [p for p, _ in plan.uploads[:n_r]] == [n.chunk for n in plan.readmit]
+            if plan.host_cow:
+                assert plan.uploads[n_r][0] == plan.cow_node.chunk
+                assert plan.uploads[n_r][1] == cow_dst
+            if cow_dst is not None and plan.cow_src is not None:
+                pool.free([plan.cow_src])  # unpin, as the engine does post-copy
+            assert len(table) == blocks_for(len(tokens) + 1, bs)
+            tables.append(table)
+        # ---- invariants ----
+        owned = {b for t in tables for b in t}
+        free, parked = set(pool._free), set(pool._parked)
+        assert not (free & owned) and not (parked & owned) and not (free & parked)
+        assert len(free) + len(parked) + len(owned) == n_blocks, (
+            "every device block must be exactly one of free/parked/owned"
+        )
+        device_nodes = set(idx._node_of_block.values())
+        assert not (device_nodes & idx._spilled), (
+            "a cached chunk must be exactly one of device-backed or spilled"
+        )
+        for node in device_nodes:
+            assert node.block is not None
+        assert 0 <= store.used_bytes <= store.max_bytes, "store blew its byte bound"
+        assert store.used_bytes == nbytes * len(store)
+        for node in idx._spilled:
+            assert node.block is None and node in store
+            assert all(c.block is None for c in node.children.values()), (
+                "spilled chunk with a device-resident child breaks leaf-first"
+            )
+    for t in tables:
+        pool.free(t)
+    while pool.reclaimable_blocks:
+        assert idx.evict_one(), "zero-ref cached block not reclaimable"
+    assert pool.free_blocks == n_blocks

@@ -320,3 +320,117 @@ def test_per_request_budgets_real_lm(small_lm):
         assert (np.asarray(got) == np.asarray(ref)[:n]).all(), (
             "budgeted prefix diverged from uncapped generation"
         )
+
+
+# ------------------------------------------------------------------ #
+# tenant SLO classes: priority / weighted-fair / fifo admission order
+# ------------------------------------------------------------------ #
+def test_weighted_fair_stride_ratio_is_deterministic():
+    """Stride scheduling: under contention a weight-2 tenant gets exactly
+    2x the admissions of a weight-1 tenant, in a deterministic order
+    (pass advances by 1/weight, ties break by rid)."""
+    s = Scheduler(tenant_weights={"a": 2.0, "b": 1.0})
+    for _ in range(8):
+        s.submit(np.arange(3), tenant="a")
+    for _ in range(8):
+        s.submit(np.arange(3), tenant="b")
+    order = [s.pop_ready().tenant for _ in range(9)]
+    assert order == ["a", "b", "a", "a", "b", "a", "a", "b", "a"]
+    assert order.count("a") == 2 * order.count("b")
+    with pytest.raises(ValueError, match="positive"):
+        Scheduler(tenant_weights={"a": 0.0})
+
+
+def test_priority_preempts_queue_but_not_within_tenant_fifo():
+    """A higher class admits first across tenants regardless of arrival;
+    WITHIN a tenant, FIFO is absolute — a late high-priority request
+    never overtakes its own tenant's queue head."""
+    s = Scheduler()
+    lo = [s.submit(np.arange(3), tenant="t", priority=0) for _ in range(2)]
+    hi = s.submit(np.arange(3), tenant="u", priority=5)
+    assert s.pop_ready().rid == hi  # class preempts the queue
+    assert [s.pop_ready().rid, s.pop_ready().rid] == lo
+    s2 = Scheduler()
+    first = s2.submit(np.arange(3), priority=0)
+    s2.submit(np.arange(3), priority=9)  # same tenant, behind the head
+    assert s2.pop_ready().rid == first
+
+
+def test_fifo_flag_restores_global_arrival_order():
+    s = Scheduler(tenant_weights={"a": 5.0}, fifo=True)
+    rids = [
+        s.submit(np.arange(3), tenant=t, priority=p)
+        for t, p in [("a", 0), ("b", 9), ("a", 0), ("b", 0)]
+    ]
+    assert [s.pop_ready().rid for _ in range(4)] == rids
+
+
+def test_late_tenant_joins_at_current_virtual_time():
+    """A tenant submitting its first request mid-run starts at the
+    incumbents' pass, not zero — otherwise it would monopolize admission
+    until its virtual time caught up."""
+    s = Scheduler(tenant_weights={"a": 1.0, "late": 1.0})
+    for _ in range(4):
+        s.submit(np.arange(3), tenant="a")
+    for _ in range(3):
+        s.pop_ready()
+    for _ in range(4):
+        s.submit(np.arange(3), tenant="late")
+    assert s._pass["late"] == pytest.approx(s._pass["a"])
+    assert s.pop_ready().tenant == "a", "late joiner must not jump the queue"
+
+
+def test_gate_rejection_preserves_tenant_order():
+    """A gate-rejected selection keeps the request at its queue head and
+    must not advance the tenant's pass (no charge without admission)."""
+    s = Scheduler(tenant_weights={"a": 1.0, "b": 1.0})
+    ra = s.submit(np.arange(9), tenant="a")
+    s.submit(np.arange(2), tenant="b")
+    assert s.pop_ready(admit_if=lambda r: len(r.tokens) < 5) is None
+    assert s._pass["a"] == 0.0
+    assert s.pop_ready(admit_if=lambda r: True).rid == ra
+
+
+# ------------------------------------------------------------------ #
+# stats windows: per-serve deltas vs scheduler lifetime
+# ------------------------------------------------------------------ #
+def test_latency_stats_window_vs_lifetime():
+    """begin_window() resets the TOP-LEVEL stats to the new window while
+    ``"lifetime"`` keeps accumulating — the per-serve-call view of a
+    resident engine (satellite: per-window deltas in latency_stats)."""
+    s = Scheduler()
+    s.submit(np.arange(3))
+    s.finish(s.pop_ready(), np.arange(2))
+    s.record_prefix_stats(
+        {"prefix_lookups": 1, "prefix_hits": 1},
+        lifetime={"prefix_lookups": 1, "prefix_hits": 1},
+    )
+    s.record_tenant_admit("default", prefill_tokens=3, prefill_tokens_saved=0)
+    st = s.latency_stats()
+    assert st["n_done"] == 1 and st["lifetime"]["n_done"] == 1
+    assert st["prefix_hit_rate"] == 1.0
+    assert st["tenants"]["default"]["n_admitted"] == 1
+    time.sleep(0.002)
+    s.begin_window()
+    st = s.latency_stats()
+    # fresh window: completions, prefix gauges, and tenant admits reset...
+    assert st["n_done"] == 0 and "p50_s" not in st
+    assert "prefix_hit_rate" not in st and "tenants" not in st
+    # ...while the lifetime view keeps everything
+    assert st["lifetime"]["n_done"] == 1
+    assert st["lifetime"]["prefix_hit_rate"] == 1.0
+    assert st["lifetime"]["tenants"]["default"]["n_admitted"] == 1
+    s.submit(np.arange(3)), s.submit(np.arange(3))
+    s.finish(s.pop_ready(), np.arange(4))
+    s.finish(s.pop_ready(), np.arange(4))
+    s.record_prefix_stats(
+        {"prefix_lookups": 2, "prefix_hits": 1},
+        lifetime={"prefix_lookups": 3, "prefix_hits": 2},
+    )
+    s.record_tenant_admit("default", prefill_tokens=3)
+    st = s.latency_stats()
+    assert st["n_done"] == 2 and st["lifetime"]["n_done"] == 3
+    assert st["prefix_hit_rate"] == 0.5
+    assert st["lifetime"]["prefix_hit_rate"] == pytest.approx(2 / 3)
+    assert st["tenants"]["default"]["n_admitted"] == 1
+    assert st["lifetime"]["tenants"]["default"]["n_admitted"] == 2

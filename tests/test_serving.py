@@ -89,9 +89,9 @@ def test_engine_queue_drains(small_lm):
 def test_paged_matches_contiguous_bitwise(small_lm, block_size):
     """Acceptance: for the same admission order, the paged engine must
     produce the contiguous engine's tokens BIT-IDENTICALLY on a ragged
-    prompt/budget workload — same prefill, same bucketed admission
-    groups, same masked-softmax lane count (cache_len here is a multiple
-    of every tested block size), only the K/V storage layout differs."""
+    prompt/budget workload — same admission order, same masked-softmax
+    lane count (cache_len here is a multiple of every tested block
+    size), only the K/V storage layout and dispatch shape differ."""
     cfg, params = small_lm
     base_kw = dict(max_batch=2, max_prompt_len=11, max_new_tokens=5, sched_chunk=2)
     rng = np.random.default_rng(42)
@@ -145,10 +145,12 @@ def test_paged_more_slots_than_stripes_same_hbm(small_lm):
 # ------------------------------------------------------------------ #
 def test_paged_oom_retires_early_without_corruption(monkeypatch):
     """Two requests whose full budgets need 6 blocks contend for a
-    4-block pool: both must retire early at the chunk boundary where the
-    pool runs dry, each with an exact closed-form PREFIX — a failed
-    allocation truncates its own request and can never corrupt the
-    neighbor's tokens."""
+    4-block pool: whichever row hits the dry pool first retires early
+    with an exact closed-form PREFIX and the ``truncated`` marker — a
+    failed allocation truncates its own request and can never corrupt
+    the neighbor's tokens.  The neighbor inherits the freed blocks and
+    is allowed to finish its full budget (pool recycling, not fate
+    sharing)."""
     # cache_len = 8+6 = 14 -> 4 blocks of 4 per worst-case request
     eng = make_fake_engine(
         monkeypatch, max_batch=2, max_new_tokens=6, sched_chunk=3,
@@ -160,12 +162,14 @@ def test_paged_oom_retires_early_without_corruption(monkeypatch):
     res = eng.serve(sched)
     for e, rid in zip(ends, rids):
         got, full = res[rid], expected_answer(e, 6)
-        assert 1 <= len(got) < len(full), "pool pressure must truncate, not kill"
+        assert 1 <= len(got) <= len(full), "pool pressure must truncate, not kill"
         assert list(got) == full[: len(got)], f"end={e}: corrupted prefix {list(got)}"
         # OOM truncation is flagged, not silent: status stays terminal
-        # "done" but the request carries the degradation marker
-        assert sched.results[rid].status == "done" and sched.results[rid].truncated
-    assert sched.latency_stats()["n_truncated"] == 2
+        # "done" and short answers carry the degradation marker exactly
+        assert sched.results[rid].status == "done"
+        assert sched.results[rid].truncated == (len(got) < len(full))
+    assert 1 <= sched.latency_stats()["n_truncated"] <= 2
+    assert any(len(res[rid]) < 6 for rid in rids), "pool never ran dry?"
 
 
 def test_paged_blocks_recycle_across_requests(monkeypatch):
@@ -321,29 +325,35 @@ def test_prefix_cache_config_validation(small_lm):
     ssm = smoke_config(get_config("mamba2-1.3b")).with_overrides(dtype="float32")
     with pytest.raises(ValueError, match="all-attention"):
         ServeEngine(ssm, POL, {}, ServeConfig(prefix_cache=True, paged=True))
-    # configs the dense+suffix pipeline cannot serve bit-consistently —
-    # pallas attention, prompts longer than attn_chunk, non-f32 caches —
-    # are no longer rejected: they auto-route to the unified chunked-
-    # prefill path, where cold and warm rows both attend through the pool
+    with pytest.raises(ValueError, match="all-attention"):
+        ServeEngine(ssm, POL, {}, ServeConfig(paged=True))
+    # EVERY paged engine runs the unified chunked-prefill path now —
+    # including the configs the retired dense+suffix pipeline could not
+    # serve (pallas attention, prompts beyond attn_chunk, non-f32 caches)
     for c, kw in [
+        (cfg, dict(max_prompt_len=16)),
         (cfg.with_overrides(attn_chunk=8), dict(max_prompt_len=16)),
         (cfg.with_overrides(attn_impl="pallas"), {}),
         (cfg.with_overrides(dtype="bfloat16"), dict(max_prompt_len=16)),
     ]:
         eng = ServeEngine(c, POL, params, ServeConfig(prefix_cache=True, paged=True, **kw))
-        assert eng._unified, "restricted prefix config must auto-route to unified"
-    # a conforming config (f32, naive attn, prompts within attn_chunk)
-    # keeps the legacy dense+suffix pipeline
-    assert not ServeEngine(
-        cfg, POL, params, ServeConfig(prefix_cache=True, paged=True, max_prompt_len=16)
-    )._unified
+        assert eng._unified, "paged engines must always run the unified path"
+    # token_budget defaults on for paged engines (whole-prompt lanes)
+    eng = ServeEngine(cfg, POL, params, ServeConfig(paged=True, max_prompt_len=16))
+    assert eng._unified and eng._token_budget == 16
     # explicit token_budget has its own preconditions
     with pytest.raises(ValueError, match="requires.*paged"):
         ServeEngine(cfg, POL, params, ServeConfig(token_budget=8, paged=False))
-    with pytest.raises(ValueError, match="all-attention"):
-        ServeEngine(ssm, POL, {}, ServeConfig(token_budget=8, paged=True))
     with pytest.raises(ValueError, match="token_budget"):
         ServeEngine(cfg, POL, params, ServeConfig(token_budget=0, paged=True))
+    # host spill tier requires the prefix cache under it
+    with pytest.raises(ValueError, match="spill_bytes"):
+        ServeEngine(cfg, POL, params, ServeConfig(paged=True, spill_bytes=1 << 20))
+    with pytest.raises(ValueError, match="spill_bytes"):
+        ServeEngine(
+            cfg, POL, params,
+            ServeConfig(paged=True, prefix_cache=True, spill_bytes=0),
+        )
 
 
 # ------------------------------------------------------------------ #
@@ -371,12 +381,12 @@ def test_bucketed_admission_dispatch_count(monkeypatch):
 # unified chunked prefill: one mixed dispatch per engine step
 # ------------------------------------------------------------------ #
 @pytest.mark.parametrize("block_size", [4, 8, 16])
-def test_unified_matches_legacy_paged_bitwise(small_lm, block_size):
+def test_unified_matches_contiguous_oracle_bitwise(small_lm, block_size):
     """Acceptance: for the same admission order, the unified token-budget
-    engine must produce the PR-5 pipeline's tokens BIT-IDENTICALLY on a
-    ragged prompt/budget workload — prompts chunk across steps (budget 3
-    splits every prompt) and decode rides the same dispatches, yet every
-    emitted token matches the dedicated admit-prefill path."""
+    engine must produce the CONTIGUOUS oracle's tokens BIT-IDENTICALLY on
+    a ragged prompt/budget workload — prompts chunk across steps (budget
+    3 splits every prompt) and decode rides the same dispatches, yet
+    every emitted token matches the dedicated-stripe baseline."""
     cfg, params = small_lm
     base_kw = dict(max_batch=2, max_prompt_len=11, max_new_tokens=5, sched_chunk=2)
     rng = np.random.default_rng(42)
@@ -385,10 +395,8 @@ def test_unified_matches_legacy_paged_bitwise(small_lm, block_size):
         for n in (9, 11, 6, 3, 11, 7)
     ]
     budgets = [5, 1, 4, 5, 2, 5]
-    legacy = ServeEngine(
-        cfg, POL, params, ServeConfig(paged=True, block_size=block_size, **base_kw)
-    )
-    want = legacy.serve_prompts(prompts, max_new_tokens=budgets)
+    oracle = ServeEngine(cfg, POL, params, ServeConfig(**base_kw))
+    want = oracle.serve_prompts(prompts, max_new_tokens=budgets)
     for tb in (3, 11):
         uni = ServeEngine(
             cfg, POL, params,
@@ -397,17 +405,18 @@ def test_unified_matches_legacy_paged_bitwise(small_lm, block_size):
         got = uni.serve_prompts(prompts, max_new_tokens=budgets)
         for i, (w, g) in enumerate(zip(want, got)):
             assert np.array_equal(w, g), (
-                f"tb={tb} prompt {i}: unified {list(g)} != legacy {list(w)}"
+                f"tb={tb} prompt {i}: unified {list(g)} != contiguous {list(w)}"
             )
         assert uni.admit_dispatches == 0 and uni.mixed_dispatches > 0
 
 
 @pytest.mark.parametrize("block_size", [4, 8, 16])
-def test_unified_prefix_shared_matches_dense_pipeline_bitwise(small_lm, block_size):
+def test_unified_prefix_shared_matches_contiguous_oracle_bitwise(small_lm, block_size):
     """Prefix sharing through the unified path (host-ordered pending
-    chunks instead of dependency waves) must reproduce the dense+suffix
-    pipeline bit-for-bit on the same COW + sibling workload, and still
-    actually share (hits, tokens saved)."""
+    chunks) must reproduce the CONTIGUOUS oracle bit-for-bit on a COW +
+    sibling workload — cold prompts, a same-pass sibling that waits on
+    pending chunks, full-prefix hits crossing the COW boundary block —
+    and still actually share (hits, tokens saved)."""
     cfg, params = small_lm
     base_kw = dict(max_batch=2, max_prompt_len=20, max_new_tokens=5, sched_chunk=2)
     rng = np.random.default_rng(42)
@@ -422,11 +431,8 @@ def test_unified_prefix_shared_matches_dense_pipeline_bitwise(small_lm, block_si
         np.concatenate([pre, tails[2]]),
     ]
     budgets = [5, 1, 4, 5, 2, 3]
-    legacy = ServeEngine(
-        cfg, POL, params,
-        ServeConfig(paged=True, prefix_cache=True, block_size=block_size, **base_kw),
-    )
-    want = legacy.serve_prompts(prompts, max_new_tokens=budgets)
+    oracle = ServeEngine(cfg, POL, params, ServeConfig(**base_kw))
+    want = oracle.serve_prompts(prompts, max_new_tokens=budgets)
     uni = ServeEngine(
         cfg, POL, params,
         ServeConfig(paged=True, prefix_cache=True, block_size=block_size,
@@ -434,14 +440,14 @@ def test_unified_prefix_shared_matches_dense_pipeline_bitwise(small_lm, block_si
     )
     got = uni.serve_prompts(prompts, max_new_tokens=budgets)
     for i, (w, g) in enumerate(zip(want, got)):
-        assert np.array_equal(w, g), f"prompt {i}: unified {list(g)} != dense {list(w)}"
+        assert np.array_equal(w, g), f"prompt {i}: shared {list(g)} != contiguous {list(w)}"
     assert uni.prefix_hits >= 3 and uni.prefill_tokens_saved > 0
 
 
 def test_unified_lifts_dense_pipeline_restrictions(small_lm):
-    """The configs the dense+suffix pipeline rejected — pallas attention
-    and prompts longer than attn_chunk — must now SERVE through the
-    auto-routed unified path with hit-vs-miss bit-parity (cold and warm
+    """The configs the retired dense+suffix pipeline could not serve —
+    pallas attention and prompts longer than attn_chunk — must serve
+    through the unified path with hit-vs-miss bit-parity (cold and warm
     rows both attend through the pool, so sharing cannot change tokens)."""
     cfg, params = small_lm
     base_kw = dict(max_batch=2, max_prompt_len=20, max_new_tokens=4, sched_chunk=2,
@@ -491,31 +497,26 @@ def test_unified_dispatch_count_o1_per_step(monkeypatch):
 # ------------------------------------------------------------------ #
 # admission deadlock: typed error + graceful force-done
 # ------------------------------------------------------------------ #
-def test_resolve_admission_waves_orders_and_raises():
-    from repro.serving.engine import AdmissionDeadlock, resolve_admission_waves
+def test_resolve_fill_deps_orders_and_raises():
+    from repro.serving.engine import AdmissionDeadlock, resolve_fill_deps
 
-    def rec(slot, deps, writes):
-        return dict(slot=slot, deps=frozenset(deps), writes=frozenset(writes))
-
-    # a well-formed chain resolves in dependency order
-    a, b, c = rec(0, [], [1]), rec(1, [1], [2]), rec(2, [2], [])
-    waves = resolve_admission_waves([c, b, a])
-    assert [sorted(r["slot"] for r in w) for w in waves] == [[0], [1], [2]]
-    # a cycle raises a typed error carrying the resolved prefix + stuck rows
-    x, y = rec(3, [20], [21]), rec(4, [21], [20])
+    # fills with satisfied deps run (slot order); blocked ones wait
+    deps = {0: frozenset(), 1: frozenset({7}), 2: frozenset({5})}
+    assert resolve_fill_deps(deps, {7}) == [0, 2]
+    assert resolve_fill_deps({}, {7}) == []
+    # every fill blocked -> typed error carrying the stuck slots
     with pytest.raises(AdmissionDeadlock) as ei:
-        resolve_admission_waves([a, x, y])
-    assert [r["slot"] for w in ei.value.waves for r in w] == [0]
-    assert sorted(r["slot"] for r in ei.value.stuck) == [3, 4]
+        resolve_fill_deps({3: frozenset({20}), 4: frozenset({21})}, {20, 21})
+    assert sorted(ei.value.stuck) == [3, 4]
     assert "stalled" in str(ei.value)
 
 
 def test_admission_deadlock_force_dones_stuck_row(monkeypatch):
-    """Regression for the former ``assert warm`` crash: a stuck warm
-    admission must retire with an EMPTY, deadlocked-flagged result (like
-    OOM truncation: degrade, never wedge or corrupt), its pool blocks and
-    cached-chunk registrations rolled back so later requests — including
-    an identical resubmission — still serve exactly."""
+    """A stuck warm admission must retire with an EMPTY, deadlocked-
+    flagged result (like OOM truncation: degrade, never wedge or
+    corrupt), its pool blocks and cached-chunk registrations rolled back
+    so later requests — including an identical resubmission — still
+    serve exactly."""
     import repro.serving.engine as engine_mod
     from repro.serving.engine import AdmissionDeadlock
 
@@ -523,16 +524,17 @@ def test_admission_deadlock_force_dones_stuck_row(monkeypatch):
         monkeypatch, max_batch=2, max_new_tokens=4, sched_chunk=2,
         paged=True, block_size=4, n_pool_blocks=8, prefix_cache=True,
     )
-    real = engine_mod.resolve_admission_waves
+    real = engine_mod.resolve_fill_deps
     tripped = []
 
-    def sabotage(pre_admits):
-        if pre_admits and not tripped:  # wedge only the first warm wave
+    def sabotage(fill_deps, pending):
+        warm = [i for i, d in fill_deps.items() if d]
+        if warm and not tripped:  # wedge only the first warm admission
             tripped.append(True)
-            raise AdmissionDeadlock([], list(pre_admits))
-        return real(pre_admits)
+            raise AdmissionDeadlock([], warm)
+        return real(fill_deps, pending)
 
-    monkeypatch.setattr(engine_mod, "resolve_admission_waves", sabotage)
+    monkeypatch.setattr(engine_mod, "resolve_fill_deps", sabotage)
     pre = np.full((4,), 7, np.int32)  # one full block -> shareable chunk
     prompts = [
         np.concatenate([pre, np.array([10], np.int32)]),  # cold
@@ -548,3 +550,124 @@ def test_admission_deadlock_force_dones_stuck_row(monkeypatch):
     assert list(res[rids[2]]) == expected_answer(20, 4), "pool state corrupted by rollback"
     st = sched.latency_stats()
     assert st["n_deadlocked"] == 1 and st["n_truncated"] == 0
+
+
+# ------------------------------------------------------------------ #
+# resident engine: warm restart + tiered (spill) prefix cache
+# ------------------------------------------------------------------ #
+def test_warm_restart_reuses_resident_prefix_index(small_lm):
+    """Acceptance: the prefix index + block pool survive across serve()
+    calls on one engine — a second call over the same prompts is all
+    hits (prefill tokens saved reported per window), stays bit-identical
+    to a cold engine on the same admission order, and reset_cache()
+    drops the residency for an explicit cold start."""
+    cfg, params = small_lm
+    mk = lambda: ServeConfig(max_batch=2, max_prompt_len=20, max_new_tokens=4,
+                             sched_chunk=2, paged=True, prefix_cache=True,
+                             block_size=4)
+    rng = np.random.default_rng(7)
+    pre = rng.integers(8, cfg.vocab_size, size=12).astype(np.int32)
+    prompts = [
+        np.concatenate([pre, rng.integers(8, cfg.vocab_size, size=n).astype(np.int32)])
+        for n in (2, 3)
+    ]
+    eng = ServeEngine(cfg, POL, params, mk())
+    s1 = Scheduler()
+    rids1 = s1.submit_many(prompts, 4)
+    r1 = eng.serve(s1)
+    st1 = s1.latency_stats()
+    s2 = Scheduler()
+    rids2 = s2.submit_many(prompts, 4)
+    r2 = eng.serve(s2)
+    st2 = s2.latency_stats()
+    # call 2 rides the resident index: every prompt hits, prefill saved
+    assert st1["prefix_hits"] == 1  # only the same-pass sibling hit cold
+    assert st2["prefix_hits"] == len(prompts) and st2["prefix_hit_rate"] == 1.0
+    assert st2["prefill_tokens_saved"] >= len(prompts) * len(pre)
+    # warm results == cold engine on the same admission order, bit-exact
+    cold = ServeEngine(cfg, POL, params, mk()).serve_prompts(prompts, max_new_tokens=4)
+    for rid1, rid2, w in zip(rids1, rids2, cold):
+        assert np.array_equal(r1[rid1], w)
+        assert np.array_equal(r2[rid2], w), "warm restart changed tokens"
+    # scheduler window covers ONE call; engine lifetime covers both
+    assert st2["prefix_lookups"] == len(prompts)
+    assert st2["lifetime"]["prefix_lookups"] == 2 * len(prompts)
+    assert eng.prefix_lookups == 2 * len(prompts)
+    # explicit cold start: residency dropped, hits gone
+    eng.reset_cache()
+    s3 = Scheduler()
+    s3.submit_many(prompts, 4)
+    eng.serve(s3)
+    assert s3.latency_stats()["prefix_hits"] == 1
+
+
+def test_spilled_chain_readmits_bit_identical(small_lm):
+    """Acceptance: a cached chain demoted to the host tier under pool
+    pressure re-admits by upload (not re-prefill) and decodes
+    BIT-IDENTICALLY to its never-evicted first serve."""
+    cfg, params = small_lm
+    scfg = ServeConfig(max_batch=1, max_prompt_len=8, max_new_tokens=4,
+                       sched_chunk=2, paged=True, prefix_cache=True,
+                       block_size=4, n_pool_blocks=3, spill_bytes=4 << 20)
+    rng = np.random.default_rng(9)
+    a = rng.integers(8, cfg.vocab_size, size=8).astype(np.int32)
+    b = rng.integers(8, cfg.vocab_size, size=8).astype(np.int32)
+    eng = ServeEngine(cfg, POL, params, scfg)
+    cold_a = eng.serve_prompts([a], max_new_tokens=4)[0]  # cold reference
+    eng.serve_prompts([b], max_new_tokens=4)  # pool pressure demotes a's chain
+    assert eng._index.n_demotions >= 1 and eng._index.n_spilled >= 1
+    assert 0 <= eng._spill_store.used_bytes <= scfg.spill_bytes
+    sched = Scheduler()
+    rids = sched.submit_many([a], 4)
+    warm_a = eng.serve(sched)[rids[0]]
+    assert eng._index.n_readmits >= 1, "spilled chain must come back by upload"
+    assert np.array_equal(warm_a, cold_a), "re-admitted chain changed tokens"
+    st = sched.latency_stats()
+    assert st["spill_readmits"] >= 1 and st["prefix_hits"] == 1
+    assert st["lifetime"]["spill_demotions"] == eng._index.n_demotions
+
+
+# ------------------------------------------------------------------ #
+# per-tenant SLO classes through the engine
+# ------------------------------------------------------------------ #
+def test_tenant_priority_and_fifo_admission_order(monkeypatch):
+    """Priority preempts the QUEUE (interactive requests submitted after
+    a batch flood still admit first) while running slots always finish
+    on their own terms; ``fifo=True`` restores global arrival order.
+    Answers stay exact for every tenant and per-tenant stats surface."""
+    from _fake_lm import VOCAB
+
+    def run(fifo):
+        eng = make_fake_engine(monkeypatch, max_batch=1, max_new_tokens=4, sched_chunk=2)
+        sched = Scheduler(tenant_weights={"interactive": 4.0, "batch": 1.0}, fifo=fifo)
+        b_rids = sched.submit_many(
+            [prompt_ending(e) for e in (10, 20, 30)], 4, tenants="batch"
+        )
+        i_rids = sched.submit_many(
+            [prompt_ending(e) for e in (40, 50)], 4, tenants="interactive", priorities=1
+        )
+        res = eng.serve(sched)
+        for e, rid in zip((10, 20, 30), b_rids):
+            assert list(res[rid]) == expected_answer(e, 4)
+        for e, rid in zip((40, 50), i_rids):
+            assert list(res[rid]) == expected_answer(e, 4)
+        return sched, b_rids, i_rids
+
+    sched, b_rids, i_rids = run(fifo=False)
+    starts = {rid: sched.results[rid].started_at for rid in b_rids + i_rids}
+    # the interactive class preempted the queue: both its requests
+    # admitted before any batch request despite submitting last
+    assert max(starts[r] for r in i_rids) < min(starts[r] for r in b_rids)
+    # FIFO within each tenant never reorders
+    assert starts[b_rids[0]] < starts[b_rids[1]] < starts[b_rids[2]]
+    st = sched.latency_stats()
+    assert st["tenants"]["interactive"]["n_done"] == 2
+    assert st["tenants"]["batch"]["n_done"] == 3
+    assert st["tenants"]["batch"]["n_admitted"] == 3
+    assert st["tenants"]["interactive"]["tokens_out"] == 8
+    assert "p95_s" in st["tenants"]["batch"]
+
+    sched, b_rids, i_rids = run(fifo=True)
+    starts = {rid: sched.results[rid].started_at for rid in b_rids + i_rids}
+    # arrival-order baseline: the batch flood admits first
+    assert max(starts[r] for r in b_rids) < min(starts[r] for r in i_rids)
