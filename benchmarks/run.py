@@ -64,6 +64,12 @@ def main(argv=None) -> None:
         print(f"{name},{us:.1f},{derived}")
     e2e_rows += cp_rows
 
+    print("\n== speculative decoding: draft-k/verify-1 on the paged engine ==")
+    sp_rows = e2e_pipeline.run_spec_decode()
+    for name, us, derived in sp_rows:
+        print(f"{name},{us:.1f},{derived}")
+    e2e_rows += sp_rows
+
     print("\n== federation resilience under injected faults (breaker on/off) ==")
     from benchmarks import federation_faults
 

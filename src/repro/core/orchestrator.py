@@ -136,6 +136,20 @@ class Orchestrator:
             return self.selector.select(q_tokens, self.providers, self.selector_top_p)
         return self.providers  # broadcast policy (paper's basic setup)
 
+    def query_routes(self, queries: Sequence[str]) -> list[list[DataProvider]] | None:
+        """Per-query provider subsets in SELECTOR ORDER (score-descending
+        — the order the sequential path collects and aggregates in, which
+        the rank tie-break depends on).  ``None`` when the selector is
+        off: broadcast to all."""
+        if self.selector is None or not self.selector_top_p:
+            return None
+        return [
+            self.selector.select(
+                self.tok.encode(q, max_len=24), self.providers, self.selector_top_p
+            )
+            for q in queries
+        ]
+
     # ------------------------------------------------------------------ #
     def _roundtrip(self, p, tokens_for) -> dict:
         """One sealed request/response exchange with provider ``p``.  The
@@ -371,31 +385,51 @@ class Orchestrator:
 
         return self._collect(self.select_providers(query_text), tokens_for)
 
-    def collect_contexts_batch(self, queries: Sequence[str]) -> list[dict]:
+    def collect_contexts_batch(
+        self, queries: Sequence[str], *, routes: list[list[DataProvider]] | None = None
+    ) -> list[dict]:
         """Steps 1-3 for a query batch: ONE sealed request per provider
         carries all (B, S) query tokens; each response holds (B, m)
         scores/ids and (B, m, S_c) chunk tokens.  Sealing/serialization
         round-trips drop from B*P to P and every provider embeds the whole
-        batch in one kernel call.  Broadcast-only: selector routing is
-        per-query, so routed setups must use the sequential path (as
-        ``answer_batch`` does automatically)."""
-        if self.selector is not None and self.selector_top_p:
-            raise ValueError(
-                "collect_contexts_batch broadcasts to all providers; "
-                "selector routing requires the per-query collect_contexts path"
-            )
+        batch in one kernel call.
+
+        Selector routing (``selector_top_p > 0``) rides the same fan-out
+        ragged: only providers selected by at least one query receive a
+        request, and within a selected provider's (B, S) block the rows of
+        queries that did NOT route to it are masked to all-PAD (the
+        embedder masks PAD, and the response rows of masked queries are
+        discarded at aggregation).  ``routes`` lets a caller that already
+        computed ``query_routes`` pass them in instead of re-embedding."""
+        queries = list(queries)
         base = [self.tok.encode(q, max_len=24) for q in queries]
+        if routes is None:
+            routes = self.query_routes(queries)
+        if routes is None:
+            fan, mine_of = self.providers, None
+        else:
+            mine_of = {}  # provider id -> query rows routed to it
+            for b, sub in enumerate(routes):
+                for p in sub:
+                    mine_of.setdefault(int(p.provider_id), set()).add(b)
+            fan = [p for p in self.providers if int(p.provider_id) in mine_of]
 
         def tokens_for(p):
             rows = base
             if self.rewriter is not None:  # personalized expansion (§2.2)
                 rows = [self.rewriter.rewrite(r, p.provider_id) for r in base]
             width = max(len(r) for r in rows)
+            if mine_of is not None:
+                mine = mine_of[int(p.provider_id)]
+                rows = [
+                    r if b in mine else np.full((width,), PAD, np.int32)
+                    for b, r in enumerate(rows)
+                ]
             return np.stack(
                 [np.pad(r, (0, width - len(r))) for r in rows]
             ).astype(np.int32)  # PAD tail; the embedder masks PAD
 
-        return self._collect(self.providers, tokens_for)
+        return self._collect(fan, tokens_for)
 
     def _gate_responses(self, responses: list[dict]) -> tuple[list[dict], dict | None]:
         """Aggregator-side poisoning gate (opt-in, ``score_gate``): each
@@ -561,22 +595,59 @@ class Orchestrator:
             out["prompt"] = prompt
         return out
 
+    @staticmethod
+    def _response_row(r: dict, b: int) -> dict:
+        """Row ``b`` of a provider's batched response, shaped exactly like
+        the sequential per-query response (m,) / (m, S_c)."""
+        return {
+            "provider": r["provider"],
+            "scores": np.asarray(r["scores"])[b],
+            "chunk_ids": np.asarray(r["chunk_ids"])[b],
+            "chunk_tokens": np.asarray(r["chunk_tokens"])[b],
+        }
+
+    def _aggregate_routed(
+        self, queries: Sequence[str], responses: list[dict], routes
+    ) -> list[dict]:
+        """Step 4 under selector routing: per query, slice out the rows of
+        ITS providers in selector order (the order the sequential path
+        concatenates in — rank tie-breaks depend on it), quorum-check the
+        routed subset, and aggregate exactly like ``aggregate`` does.
+        Returns (per-query contexts, per-query responding-provider
+        counts)."""
+        by_pid = {int(r["provider"]): r for r in responses}
+        outs, n_prov = [], []
+        for b, q in enumerate(queries):
+            rs = [
+                self._response_row(by_pid[int(p.provider_id)], b)
+                for p in routes[b]
+                if int(p.provider_id) in by_pid
+            ]
+            self._quorum_check(rs)
+            outs.append(self.aggregate(q, rs))
+            n_prov.append(len(rs))
+        return outs, n_prov
+
     def answer_batch(self, queries: Sequence[str]) -> list[dict]:
         """Algorithm 1 over a query batch: one sealed round-trip per
-        provider for the whole batch, batched aggregation, and (when the
-        generator exposes ``generate_batch``) batched decoding.  Returns
-        per-query result dicts identical to ``answer``."""
+        provider for the whole batch (selector-routed setups fan out
+        ragged — only selected providers, non-selected query rows PAD-
+        masked), batched aggregation, and (when the generator exposes
+        ``generate_batch``) batched decoding.  Returns per-query result
+        dicts identical to ``answer``."""
         queries = list(queries)
         if not queries:
             return []
-        if self.selector is not None and self.selector_top_p:
-            # per-query routing can hit different provider subsets; keep
-            # Algorithm 1 semantics by falling back to the sequential path
-            return [self.answer(q) for q in queries]
-        responses = self.collect_contexts_batch(queries)
-        contexts = self.aggregate_batch(queries, responses)
+        routes = self.query_routes(queries)
+        responses = self.collect_contexts_batch(queries, routes=routes)
+        if routes is None:
+            contexts = self.aggregate_batch(queries, responses)
+            n_prov = [len(responses)] * len(queries)
+        else:
+            contexts, n_prov = self._aggregate_routed(queries, responses, routes)
         outs = [
-            {"context": ctx, "n_providers": len(responses)} for ctx in contexts
+            {"context": ctx, "n_providers": n}
+            for ctx, n in zip(contexts, n_prov)
         ]
         if self.generator is not None:
             width = self._prompt_max_len()

@@ -8,6 +8,7 @@ providers + enclave orchestrator, and answer queries.
   python -m repro.launch.serve --queries 16 --token-budget 32 --prefix-cache
   python -m repro.launch.serve --queries 16 --prefix-cache --repeat 3
   python -m repro.launch.serve --queries 16 --generate --tenants 'interactive=4:1,batch=1'
+  python -m repro.launch.serve --queries 16 --draft-k 3 --token-budget 32
 
 Uses the bag embedder + lexical-overlap reranker by default (training-free
 CPU path).  ``--generate`` stands up a reduced-LM ``ServeEngine`` and
@@ -56,7 +57,7 @@ def make_demo_engine(max_new_tokens: int = 16, paged: bool = False,
                      block_size: int = 32, pool_blocks: int | None = None,
                      max_batch: int = 4, prefix_cache: bool = False,
                      token_budget: int | None = None,
-                     spill_bytes: int | None = None):
+                     spill_bytes: int | None = None, draft_k: int = 0):
     """Reduced-LM ServeEngine (random-init, CPU-sized) + generator adapter
     for the scheduler-driven serving demo.  ``paged=True`` swaps the
     per-slot cache stripes for the shared block pool (``--block-size``
@@ -66,7 +67,10 @@ def make_demo_engine(max_new_tokens: int = 16, paged: bool = False,
     prefill lanes, default whole-prompt); ``prefix_cache=True`` adds the
     RESIDENT refcounted prefix index on top, so repeated context preambles
     prefill once and share blocks across serve calls; ``spill_bytes``
-    bounds an optional host-RAM demotion tier under it."""
+    bounds an optional host-RAM demotion tier under it; ``draft_k > 0``
+    turns on draft-k/verify-1 speculative decoding (self-speculation —
+    the demo drafter IS the target, the accept-rate ceiling; a real
+    deployment passes a small ``draft_config``/``draft_params`` pair)."""
     import jax
 
     from repro.configs import get_config, smoke_config
@@ -84,7 +88,7 @@ def make_demo_engine(max_new_tokens: int = 16, paged: bool = False,
             max_batch=max_batch, max_prompt_len=256, max_new_tokens=max_new_tokens,
             paged=paged, block_size=block_size, n_pool_blocks=pool_blocks,
             prefix_cache=prefix_cache, token_budget=token_budget,
-            spill_bytes=spill_bytes,
+            spill_bytes=spill_bytes, draft_k=draft_k,
         ),
     )
     return engine_generator(engine)
@@ -167,6 +171,16 @@ def main(argv=None):
         "(implies --paged --generate; composes with --prefix-cache)",
     )
     ap.add_argument(
+        "--draft-k", type=int, default=0, metavar="K",
+        help="speculative decoding: a resident drafter (self-speculation "
+        "in the demo) proposes K greedy tokens per slot from its own "
+        "paged pool; the target verifies all K+1 lanes in ONE mixed "
+        "dispatch and greedy accept-prefix commits the matching run plus "
+        "one correction token — outputs stay bit-identical to plain "
+        "decode at up to K+1 tokens per target forward (implies --paged "
+        "--generate; composes with --token-budget and --prefix-cache)",
+    )
+    ap.add_argument(
         "--repeat", type=int, default=1,
         help="serve the query set N times through ONE resident "
         "engine+index (the repeat/retry traffic a prefix cache "
@@ -215,7 +229,7 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.spill_mb is not None:
         args.prefix_cache = True
-    if args.prefix_cache or args.token_budget is not None:
+    if args.prefix_cache or args.token_budget is not None or args.draft_k > 0:
         args.paged = args.generate = True
     if args.tenants is not None:
         args.generate = True
@@ -247,6 +261,7 @@ def main(argv=None):
             pool_blocks=args.pool_blocks, max_batch=args.max_batch,
             prefix_cache=args.prefix_cache, token_budget=args.token_budget,
             spill_bytes=int(args.spill_mb * 2**20) if args.spill_mb else None,
+            draft_k=args.draft_k,
         ) if args.generate else None,
     )
     if args.kill_provider is not None:
@@ -360,6 +375,14 @@ def main(argv=None):
                 f"{st['decode_dispatches']} decode + "
                 f"{st['mixed_dispatches']} mixed over {st['engine_steps']} "
                 f"engine steps ({st['dispatches_per_step']:.2f}/step)"
+            )
+        if "spec_tokens_per_round" in st:
+            print(
+                f"speculation: {st['spec_tokens_per_round']:.2f} tokens/round "
+                f"at accept rate {st.get('spec_accept_rate', 0.0):.0%} "
+                f"(draft_k={args.draft_k}), "
+                f"{st['dispatches_per_spec_round']:.2f} dispatches/spec round "
+                f"over {st['spec_rounds']} rounds"
             )
         if "prefix_lookups" in st:
             print(

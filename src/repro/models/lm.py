@@ -337,6 +337,30 @@ def mixed_step(cfg: ModelConfig, pol: ShardingPolicy, params, tokens, cache,
     return L.head_apply(cfg, pol, params, h), cache
 
 
+def verify_step(cfg: ModelConfig, pol: ShardingPolicy, params, tokens, cache,
+                block_tables, q_start, q_len, block_size: int):
+    """Speculative draft-k/verify-1 target pass: score ``k + 1`` candidate
+    positions per row in ONE dispatch.
+
+    This is ``mixed_step`` run over VERIFY descriptors — each speculating
+    row ``b`` carries ``(slot=b, q_start=committed position, q_len=k+1,
+    kv_len=q_start+q_len)``: lane 0 is the row's last committed token,
+    lanes 1..k the drafter's proposals.  Because each layer scatters the
+    lane K/V into the pool BEFORE attending (write-then-attend), lane
+    ``j``'s logits equal exactly what a plain 1-token decode would
+    produce after emitting lanes ``< j`` — so per-lane argmaxes feed the
+    engine's greedy accept-prefix and outputs stay bit-identical to
+    non-speculative decode.  Rejected lanes need no device rollback: the
+    engine only advances its committed position by the accepted run, and
+    the next verify window re-writes every stale position before any
+    lane can attend to it.  Rows with ``q_len == 1`` degenerate to plain
+    decode lanes; ``q_len == 0`` rows are inert (K/V to the trash
+    block).  Returns ``(logits (B, W, V), cache)``."""
+    return mixed_step(
+        cfg, pol, params, tokens, cache, block_tables, q_start, q_len, block_size
+    )
+
+
 def cache_pspecs(cfg: ModelConfig, pol: ShardingPolicy):
     """PartitionSpec tree matching init_cache structure."""
     blk = {}

@@ -154,6 +154,46 @@ def resolve_fill_deps(fill_deps: dict[int, frozenset], pending) -> list[int]:
     return runnable
 
 
+def accept_prefix(draft, target, *, q_len=None, rem=None, done=None, eos=EOS):
+    """Greedy draft-k/verify-1 acceptance: per row, the committed run is
+    the longest common prefix of ``draft`` and the target's per-lane
+    argmaxes PLUS exactly one target-sourced correction token.
+
+    ``draft``: ``(B, k)`` drafter proposals; ``target``: ``(B, k + 1)``
+    target argmaxes where lane ``j`` is the target's next token after the
+    row has emitted ``target[:j]`` (valid only while ``draft[:j] ==
+    target[:j]`` — the causal verify dispatch guarantees this).  Lane
+    ``j`` commits iff every draft before it matched, no earlier
+    committed lane was EOS (plain decode stops after emitting EOS), and
+    the optional clips hold: ``q_len`` (live verify lanes this round),
+    ``rem`` (per-row remaining token budget), ``done``.  All clip masks
+    are prefix-monotone, so the committed lanes are a contiguous run
+    ``target[:n_emit]`` — bit-identical to what plain greedy decode
+    would emit one token at a time.
+
+    Returns ``(n_emit, can_emit)``: committed token count ``(B,)`` and
+    the per-lane commit mask ``(B, k + 1)``."""
+    d = jnp.asarray(draft)
+    t = jnp.asarray(target)
+    b, k = d.shape
+    j = jnp.arange(k + 1)
+    one = jnp.ones((b, 1), jnp.int32)
+    ok = jnp.cumprod(
+        jnp.concatenate([one, (d == t[:, :k]).astype(jnp.int32)], axis=1), axis=1
+    ).astype(bool)
+    no_eos = jnp.cumprod(
+        jnp.concatenate([one, (t[:, :k] != eos).astype(jnp.int32)], axis=1), axis=1
+    ).astype(bool)
+    can = ok & no_eos
+    if q_len is not None:
+        can = can & (j[None, :] < jnp.asarray(q_len)[:, None])
+    if rem is not None:
+        can = can & (j[None, :] < jnp.asarray(rem)[:, None])
+    if done is not None:
+        can = can & ~jnp.asarray(done)[:, None]
+    return can.sum(axis=1).astype(jnp.int32), can
+
+
 @dataclasses.dataclass
 class ServeConfig:
     max_batch: int = 8  # decode slots (continuous) / chunk size (lock-step)
@@ -183,6 +223,22 @@ class ServeConfig:
     # their K/V to host memory and re-admit by upload instead of
     # re-prefill.  None disables tiering (eviction discards)
     spill_bytes: int | None = None
+    # speculative decoding (draft-k / verify-1, paged-only): a resident
+    # drafter model proposes ``draft_k`` greedy tokens per decode slot
+    # each round; the target model scores all ``draft_k + 1`` positions
+    # in its ONE mixed dispatch (each speculating row becomes a
+    # ``(slot, q_start, q_len=k+1, kv_len)`` verify descriptor) and
+    # commits the longest matching prefix plus one corrected token.
+    # Greedy accept-prefix keeps outputs BIT-identical to plain decode;
+    # 0 disables speculation entirely (the engine runs today's path
+    # byte-for-byte)
+    draft_k: int = 0
+    # drafter architecture + params.  None defaults to the target model
+    # (self-speculation — useful for parity tests; every draft accepted).
+    # A real deployment points these at a small config (e.g.
+    # ``configs/smollm_360m``) sharing the target's vocab
+    draft_config: ModelConfig | None = None
+    draft_params: object | None = None
 
 
 class ServeEngine:
@@ -243,6 +299,41 @@ class ServeEngine:
         self._token_budget = (
             scfg.token_budget if scfg.token_budget is not None else scfg.max_prompt_len
         )
+        if scfg.draft_k < 0:
+            raise ValueError(f"draft_k={scfg.draft_k} must be >= 0")
+        if scfg.draft_k > 0:
+            if not scfg.paged:
+                raise ValueError(
+                    "draft_k (speculative decoding) requires paged=True: the "
+                    "verify dispatch reads and writes K/V through the shared "
+                    "block pool"
+                )
+            if self._token_budget < scfg.draft_k + 1:
+                raise ValueError(
+                    f"token_budget={self._token_budget} cannot fit one verify "
+                    f"descriptor of q_len={scfg.draft_k + 1} (draft_k + 1)"
+                )
+            if scfg.draft_config is not None and scfg.draft_params is None:
+                raise ValueError(
+                    "draft_config without draft_params: a drafter with its "
+                    "own architecture needs its own weights"
+                )
+            dcfg = scfg.draft_config if scfg.draft_config is not None else cfg
+            if dcfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"drafter vocab_size={dcfg.vocab_size} != target "
+                    f"vocab_size={cfg.vocab_size}: greedy accept-prefix "
+                    "compares token ids across the two models"
+                )
+            if any(dcfg.mixer_kind(i) != "attn" for i in range(dcfg.n_layers)):
+                raise ValueError(
+                    "draft_config must be all-attention: the drafter decodes "
+                    "through its own paged pool"
+                )
+            self._draft_cfg = dcfg
+            self._draft_params = (
+                scfg.draft_params if scfg.draft_params is not None else params
+            )
         t_cap = scfg.max_new_tokens
         # dispatch observability: fused admit prefills (bucketed admission
         # benchmark), fused decode chunks, and unified mixed steps — the
@@ -258,6 +349,16 @@ class ServeEngine:
         self.prefill_tokens_total = 0
         self.prefill_tokens_saved = 0
         self.prefix_shared_total = 0  # blocks adopted by reference (cumulative)
+        # speculative-decoding observability (engine lifetime): one
+        # drafter dispatch + one verify dispatch per spec round is the
+        # O(2)-dispatch bound CI guards; accept rate and tokens/step
+        # derive from the proposed/accepted/emitted tallies
+        self.draft_dispatches = 0
+        self.draft_fill_dispatches = 0  # drafter prefill-only (admission cost)
+        self.spec_rounds = 0
+        self.spec_tokens_proposed = 0
+        self.spec_tokens_accepted = 0
+        self.spec_tokens_emitted = 0
         # resident paged state: created lazily on first paged serve and
         # reused by every later call (reset_cache() drops it)
         self._pool: BlockPool | None = None
@@ -266,6 +367,15 @@ class ServeEngine:
         self._cache = None
         self._index: PrefixIndex | None = None
         self._spill_store: HostBlockStore | None = None
+        # drafter resident state (draft_k > 0): a second, independent
+        # BlockPool + per-slot tables + paged cache for the drafter —
+        # same block geometry as the target pool, sized by the drafter's
+        # (smaller) layer stack.  No prefix index: the drafter re-prefills
+        # every prompt in full through its own chunked fill lanes
+        self._draft_pool: BlockPool | None = None
+        self._draft_row_tables: list[BlockTable] | None = None
+        self._draft_tables_h: np.ndarray | None = None
+        self._draft_cache = None
         self._serving = False
 
         def prefill_fn(params, tokens, lengths, cache_len=cache_len):
@@ -396,6 +506,137 @@ class ServeEngine:
             )
             return cache, cur, lengths, emitted, done, budget, out
 
+        kd = scfg.draft_k
+
+        def spec_mixed_rows(params, cache, cur, lengths, emitted, done, budget, out,
+                            tok, q_start_h, q_len, is_spec, drafts, row_len, b_new,
+                            tables):
+            """ONE unified engine step in speculative mode: fill chunks
+            advance exactly as in ``mixed_rows``, while each speculating
+            row (``is_spec``) becomes a VERIFY descriptor ``(slot,
+            q_start = lengths + emitted - 1, q_len <= draft_k + 1,
+            kv_len)``: lane 0 carries the row's last committed token
+            ``cur``, lanes 1..q_len-1 carry the drafter's proposals.  The
+            target's per-lane argmaxes are what plain greedy decode would
+            emit one token at a time, so ``accept_prefix`` commits the
+            longest matching run plus one corrected token — bit-identical
+            outputs, > 1 token per dispatch.
+
+            Rollback is positional, not a device copy: only ``emitted``
+            advances (by ``n_emit``), so rejected lanes' K/V sit BEYOND
+            the committed position.  The next round's verify window
+            starts at the new ``q_start`` and re-writes every stale
+            position before any lane attends to it (the kernel's
+            write-then-attend contract), so a rejection can never leak
+            state; q_len-masked dead lanes scatter to the trash block as
+            always."""
+            b = scfg.max_batch
+            rows = jnp.arange(b)
+            q_start = jnp.where(is_spec, lengths + emitted - 1, q_start_h)
+            tok = tok.at[:, 0].set(jnp.where(is_spec, cur, tok[:, 0]))
+            tok = tok.at[:, 1 : kd + 1].set(
+                jnp.where(is_spec[:, None], drafts, tok[:, 1 : kd + 1])
+            )
+            logits, cache = LM.verify_step(
+                cfg, pol, params, tok, cache, tables, q_start, q_len, bs
+            )
+            # fill rows: next token off the chunk's last live lane
+            last = jnp.take_along_axis(
+                logits, jnp.maximum(q_len - 1, 0)[:, None, None], axis=1
+            )[:, 0, :]
+            nxt = jnp.argmax(last, -1).astype(jnp.int32)
+            completes = (~is_spec) & (q_len > 0) & (q_start + q_len >= row_len)
+            # spec rows: per-lane targets + greedy accept-prefix
+            tgt = jnp.argmax(logits[:, : kd + 1, :], -1).astype(jnp.int32)
+            n_emit, can = accept_prefix(
+                drafts, tgt, q_len=q_len, rem=budget - emitted, done=done
+            )
+            n_emit = jnp.where(is_spec, n_emit, 0)
+            can = can & is_spec[:, None]
+            # committed run lands at the row's own emitted offsets (the
+            # decode_chunk ragged-merge pattern); clamped lanes rewrite
+            # the spare t_cap column with its own value
+            j = jnp.arange(kd + 1)
+            idx = jnp.minimum(emitted[:, None] + j[None, :], t_cap)
+            keep = out[rows[:, None], idx]
+            out = out.at[rows[:, None], idx].set(jnp.where(can, tgt, keep))
+            # fill completion seeds the slot exactly like admit_rows
+            seeded = jnp.zeros((b, t_cap + 1), jnp.int32).at[:, 0].set(nxt)
+            out = jnp.where(completes[:, None], seeded, out)
+            last_emit = jnp.take_along_axis(
+                tgt, jnp.maximum(n_emit - 1, 0)[:, None], axis=1
+            )[:, 0]
+            cur = jnp.where(n_emit > 0, last_emit, cur)
+            cur = jnp.where(completes, nxt, cur)
+            lengths = jnp.where(completes, row_len, lengths)
+            budget = jnp.where(completes, b_new, budget)
+            emitted = jnp.where(completes, 1, emitted + n_emit)
+            done = jnp.where(
+                completes,
+                (nxt == EOS) | (b_new <= 1),
+                done | ((n_emit > 0) & ((last_emit == EOS) | (emitted >= budget))),
+            )
+            return cache, cur, lengths, emitted, done, budget, out
+
+        def make_draft_rows(with_fill: bool):
+            dcfg = getattr(self, "_draft_cfg", cfg)
+
+            def draft_body(dparams, dcache, cur, dec_pos, d_dec_tables):
+                # k greedy drafter steps — ONE host dispatch; each step
+                # writes the fed token's K/V then attends, so a stale
+                # (rejected) position is always re-written before read.
+                # The loop rides mixed_step (q_len=1 lanes), the SAME
+                # kernel path the target verifies through: under
+                # self-speculation the proposal at a position is then the
+                # identical computation to the target's verify lane, so
+                # near-tied argmaxes cannot flip between the two models
+                # (accept rate hits the drafter-quality ceiling instead
+                # of fp-noise)
+                one = jnp.ones((scfg.max_batch,), jnp.int32)
+
+                def body(t, st):
+                    tok, dc, c = st
+                    logits, dc = LM.mixed_step(
+                        dcfg, pol, dparams, tok[:, None], dc, d_dec_tables,
+                        dec_pos + t, one, bs,
+                    )
+                    nxt = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)
+                    return nxt, dc, c.at[:, t].set(nxt)
+
+                c = jnp.zeros((scfg.max_batch, max(kd, 1)), jnp.int32)
+                last, dcache, c = jax.lax.fori_loop(0, kd, body, (cur, dcache, c))
+                # write the k-th proposal's K/V too (logits discarded): a
+                # full accept advances the committed position PAST it, and
+                # an unwritten hole there would corrupt every later draft
+                # for the row — write-then-attend must cover all k
+                # proposed positions, not just the k-1 the loop feeds
+                _, dcache = LM.mixed_step(
+                    dcfg, pol, dparams, last[:, None], dcache, d_dec_tables,
+                    dec_pos + kd, one, bs,
+                )
+                return c, dcache
+
+            if not with_fill:
+                return draft_body
+
+            def draft_rows(dparams, dcache, d_tok, d_q_start, d_q_len,
+                           cur, dec_pos, d_tables, d_dec_tables):
+                """Drafter fill chunks + k draft steps fused into ONE
+                dispatch: rows still streaming their prompt into the
+                drafter pool advance through a mixed step (q_len == 0
+                rows are inert), then every drafter-ready row proposes
+                ``draft_k`` greedy tokens.  Rows excluded from drafting
+                this round arrive with an all-trash ``d_dec_tables``
+                row, so their draft-loop writes land in the trash
+                block."""
+                _, dcache = LM.mixed_step(
+                    dcfg, pol, dparams, d_tok, dcache, d_tables,
+                    d_q_start, d_q_len, bs,
+                )
+                return draft_body(dparams, dcache, cur, dec_pos, d_dec_tables)
+
+            return draft_rows
+
         def make_decode_chunk(paged: bool):
             def decode_chunk(params, cache, cur, lengths, emitted, done, budget, out,
                              n_steps, tables=None):
@@ -458,6 +699,10 @@ class ServeEngine:
         self._upload_block = jax.jit(upload_block)
         self._mixed_rows = jax.jit(mixed_rows)
         self._decode_chunk = jax.jit(make_decode_chunk(scfg.paged))
+        if scfg.draft_k > 0:
+            self._spec_mixed_rows = jax.jit(spec_mixed_rows)
+            self._draft_rows = jax.jit(make_draft_rows(with_fill=True))
+            self._draft_tokens = jax.jit(make_draft_rows(with_fill=False))
         self.queue: list[np.ndarray] = []
 
     def submit(self, prompt_tokens: np.ndarray):
@@ -518,6 +763,18 @@ class ServeEngine:
             (scfg.max_batch, self._blocks_per_slot), self._trash_block, np.int32
         )
         self._cache = self._init_serve_cache()
+        if scfg.draft_k > 0:
+            self._draft_pool = BlockPool(self._n_pool_blocks, scfg.block_size)
+            self._draft_row_tables = [
+                BlockTable(self._draft_pool) for _ in range(scfg.max_batch)
+            ]
+            self._draft_tables_h = np.full(
+                (scfg.max_batch, self._blocks_per_slot), self._trash_block, np.int32
+            )
+            self._draft_cache = LM.init_paged_cache(
+                self._draft_cfg, self._n_pool_blocks + 1, scfg.block_size,
+                scfg.max_batch, dtype=jnp.dtype(self._draft_cfg.dtype),
+            )
         if scfg.prefix_cache:
             store = (
                 HostBlockStore(scfg.spill_bytes)
@@ -541,6 +798,10 @@ class ServeEngine:
         self._cache = None
         self._index = None
         self._spill_store = None
+        self._draft_pool = None
+        self._draft_row_tables = None
+        self._draft_tables_h = None
+        self._draft_cache = None
 
     # ------------------------------------------------------------------ #
     # lock-step path (deterministic baseline)
@@ -705,6 +966,12 @@ class ServeEngine:
             "admit_dispatches": self.admit_dispatches,
             "decode_dispatches": self.decode_dispatches,
             "mixed_dispatches": self.mixed_dispatches,
+            "draft_dispatches": self.draft_dispatches,
+            "draft_fill_dispatches": self.draft_fill_dispatches,
+            "spec_rounds": self.spec_rounds,
+            "spec_tokens_proposed": self.spec_tokens_proposed,
+            "spec_tokens_accepted": self.spec_tokens_accepted,
+            "spec_tokens_emitted": self.spec_tokens_emitted,
         }
 
     def _serve_unified(self, scheduler: Scheduler, drain: bool):
@@ -779,9 +1046,36 @@ class ServeEngine:
         fills: list[dict | None] = [None] * B
         pending_blocks: dict[int, tuple[int, int]] = {}
         planned: dict[int, object] = {}
+        # speculative decoding (draft_k > 0): the drafter mirrors the
+        # target's fill machinery against its own pool.  d_fills[slot] is
+        # the drafter's prompt stream (ALWAYS the full prompt — the
+        # drafter has no prefix cache); a decode row speculates only once
+        # its drafter fill completes (it sits out decode meanwhile — pure
+        # scheduling, outputs are unaffected).  d_broken marks rows whose
+        # drafter ran out of pool blocks mid-flight: they keep verifying
+        # (garbage drafts can only be accepted when they MATCH the
+        # target, so correctness never depends on the drafter)
+        spec = scfg.draft_k > 0
+        kd = scfg.draft_k
+        d_pool = self._draft_pool
+        d_row_tables = self._draft_row_tables
+        d_tables_h = self._draft_tables_h
+        d_fills: list[dict | None] = [None] * B
+        d_broken = np.zeros((B,), bool)
+        dr0, sr0 = self.draft_dispatches, self.spec_rounds
+        sp0, sa0 = self.spec_tokens_proposed, self.spec_tokens_accepted
+        se0, df0 = self.spec_tokens_emitted, self.draft_fill_dispatches
         self._serving = True
 
         def admit_gate(req: Request) -> bool:
+            # dual-pool gate: the drafter re-prefills the full prompt, so
+            # admission also requires drafter blocks for prompt + first
+            # draft position (checked FIRST — a target-side prefix plan
+            # is only memoized for requests that clear both pools)
+            if spec and not d_pool.can_alloc(
+                blocks_for(min(len(req.tokens), width) + 1, bs)
+            ):
+                return False
             if index is not None:
                 plan = index.plan(req.tokens[-width:])
                 if plan is not None:
@@ -892,6 +1186,14 @@ class ServeEngine:
                     fills[slot] = dict(
                         p=p, length=length, b_new=b_new, pos=start, cow=cow, deps=deps
                     )
+                    if spec:
+                        d_tb = d_row_tables[slot]
+                        if not d_tb.extend_to(length + 1):
+                            raise RuntimeError("draft admit raced the draft pool")
+                        d_tables_h[slot, :] = self._trash_block
+                        d_tables_h[slot, : d_tb.n_blocks] = d_tb.ids
+                        d_fills[slot] = dict(p=p, length=length, pos=0)
+                        d_broken[slot] = False
                     # inert on device until the fill's last chunk seeds the
                     # slot (mixed_rows `completes`); done=True keeps any
                     # decode lane from touching it meanwhile
@@ -911,6 +1213,12 @@ class ServeEngine:
                     mixed_dispatches=self.mixed_dispatches - m0,
                     steps=steps,
                     lifetime=self._dispatch_lifetime(),
+                    draft_dispatches=self.draft_dispatches - dr0,
+                    draft_fill_dispatches=self.draft_fill_dispatches - df0,
+                    spec_rounds=self.spec_rounds - sr0,
+                    spec_tokens_proposed=self.spec_tokens_proposed - sp0,
+                    spec_tokens_accepted=self.spec_tokens_accepted - sa0,
+                    spec_tokens_emitted=self.spec_tokens_emitted - se0,
                 )
                 if not active:
                     if drain or scheduler.closed:
@@ -946,13 +1254,194 @@ class ServeEngine:
                             pool.free([fl["cow"][0]])
                         row_tables[i].release()
                         tables_h[i, :] = self._trash_block
+                        if spec:
+                            if d_row_tables[i].ids:
+                                d_row_tables[i].release()
+                            d_tables_h[i, :] = self._trash_block
+                            d_fills[i] = None
                         scheduler.finish(req, empty, deadlocked=True)
                         slots[i], fills[i] = None, None
                         em_h[i], dn_h[i] = 1, True
                         yield req.rid, empty
                     continue
 
-                if runnable:
+                if spec:
+                    # ---- speculative round: O(2) dispatches ----
+                    # (1) ONE drafter dispatch: drafter prompt chunks for
+                    #     rows still streaming + k greedy proposals for
+                    #     every drafter-ready decode row
+                    # (2) ONE target dispatch: verify descriptors
+                    #     (q_len <= k+1) for speculating rows + target
+                    #     fill chunks in the remaining token-budget lanes
+                    # A decode row whose drafter fill is still streaming
+                    # sits out (inert lane) — scheduling only, greedy
+                    # outputs are position-independent
+                    spec_rows = [i for i in dec_rows if d_fills[i] is None]
+                    d_fill_rows = [i for i in range(B) if d_fills[i] is not None]
+                    draft_ok: list[int] = []
+                    for i in spec_rows:
+                        if d_broken[i]:
+                            continue
+                        if int(bu_h[i] - em_h[i]) < 2 or (
+                            int(self._cache_len_padded - (ln_h[i] + em_h[i] - 1)) < 2
+                        ):
+                            continue  # a 1-token tail can't accept any draft
+                        # +1: the k-loop writes K/V for every proposal
+                        # including d_k at dec_pos + kd (see draft_body)
+                        need = int(ln_h[i] + em_h[i] + kd)
+                        if need > self._cache_len_padded:
+                            continue  # cache tail: draft to trash this round
+                        d_tb = d_row_tables[i]
+                        if d_tb.n_tokens_capacity < need:
+                            n0 = d_tb.n_blocks
+                            if d_tb.extend_to(need):
+                                d_tables_h[i, n0 : d_tb.n_blocks] = d_tb.ids[n0:]
+                            else:
+                                # drafter pool OOM: drop its chain; the row
+                                # keeps verifying garbage drafts (an accept
+                                # requires a target MATCH, so outputs never
+                                # depend on the drafter)
+                                d_broken[i] = True
+                                d_row_tables[i].release()
+                                d_tables_h[i, :] = self._trash_block
+                                continue
+                        draft_ok.append(i)
+                    # rows excluded from drafting write into the trash block
+                    d_dec_tab = np.full_like(d_tables_h, self._trash_block)
+                    for i in draft_ok:
+                        d_dec_tab[i] = d_tables_h[i]
+                    dec_pos_h = (ln_h + em_h - 1).astype(np.int32)
+                    drafts = None
+                    if d_fill_rows:
+                        d_tok = np.zeros((B, W), np.int32)
+                        d_qs = np.zeros((B,), np.int32)
+                        d_ql = np.zeros((B,), np.int32)
+                        d_lanes = W
+                        for i in d_fill_rows:
+                            if d_lanes <= 0:
+                                break
+                            fl = d_fills[i]
+                            take = min(fl["length"] - fl["pos"], d_lanes)
+                            d_tok[i, :take] = fl["p"][fl["pos"] : fl["pos"] + take]
+                            d_qs[i] = fl["pos"]
+                            d_ql[i] = take
+                            d_lanes -= take
+                            fl["pos"] += take
+                            if fl["pos"] >= fl["length"]:
+                                d_fills[i] = None
+                        drafts, self._draft_cache = self._draft_rows(
+                            self._draft_params, self._draft_cache,
+                            jnp.asarray(d_tok), jnp.asarray(d_qs), jnp.asarray(d_ql),
+                            cur, jnp.asarray(dec_pos_h), jnp.asarray(d_tables_h),
+                            jnp.asarray(d_dec_tab),
+                        )
+                        # a dispatch that only streams drafter prompt
+                        # chunks is admission overhead (the drafter's
+                        # prefill), not a per-round cost
+                        if draft_ok:
+                            self.draft_dispatches += 1
+                        else:
+                            self.draft_fill_dispatches += 1
+                    elif draft_ok:
+                        drafts, self._draft_cache = self._draft_tokens(
+                            self._draft_params, self._draft_cache, cur,
+                            jnp.asarray(dec_pos_h), jnp.asarray(d_dec_tab),
+                        )
+                        self.draft_dispatches += 1
+                    tok = np.zeros((B, W), np.int32)
+                    q_start_h = np.zeros((B,), np.int32)
+                    q_len_h = np.zeros((B,), np.int32)
+                    is_spec_h = np.zeros((B,), bool)
+                    row_len_h = np.zeros((B,), np.int32)
+                    b_new_h = np.ones((B,), np.int32)
+                    oom = np.zeros((B,), bool)
+                    lanes = W
+                    # verify lanes first (fills absorb the wait), drafted
+                    # rows before un-drafted ones: a round that paid for a
+                    # drafter k-loop always lands >= one q_len >= 2 verify
+                    draft_set = set(draft_ok)
+                    for i in draft_ok + [r for r in spec_rows if r not in draft_set]:
+                        if lanes <= 0:
+                            break
+                        rem = int(bu_h[i] - em_h[i])
+                        space = int(self._cache_len_padded - (ln_h[i] + em_h[i] - 1))
+                        v = min(kd + 1, rem, space, lanes)
+                        if v < 1:
+                            continue
+                        need_tok = min(
+                            ln_h[i] + em_h[i] - 1 + v, self._cache_len_padded
+                        )
+                        tb = row_tables[i]
+                        if tb.n_tokens_capacity < need_tok:
+                            n0 = tb.n_blocks
+                            if tb.extend_to(int(need_tok)):
+                                tables_h[i, n0 : tb.n_blocks] = tb.ids[n0:]
+                            else:
+                                oom[i] = True
+                                dn_h[i] = True
+                                oom_slots.add(i)
+                                continue
+                        is_spec_h[i] = True
+                        q_len_h[i] = v
+                        lanes -= v
+                    for i in runnable:
+                        if lanes <= 0:
+                            break
+                        fl = fills[i]
+                        if fl["cow"] is not None:
+                            src, dst = fl["cow"]
+                            self._cache = self._cow_copy(
+                                self._cache, jnp.int32(src), jnp.int32(dst)
+                            )
+                            pool.free([src])
+                            fl["cow"] = None
+                        take = min(fl["length"] - fl["pos"], lanes)
+                        tok[i, :take] = fl["p"][fl["pos"] : fl["pos"] + take]
+                        q_start_h[i] = fl["pos"]
+                        q_len_h[i] = take
+                        row_len_h[i] = fl["length"]
+                        b_new_h[i] = fl["b_new"]
+                        lanes -= take
+                        fl["pos"] += take
+                        mine = [
+                            b for b, (s, e) in pending_blocks.items()
+                            if s == i and e <= fl["pos"]
+                        ]
+                        for b in mine:
+                            del pending_blocks[b]
+                        if fl["pos"] >= fl["length"]:
+                            fills[i] = None
+                    if oom.any():
+                        done = jnp.logical_or(done, jnp.asarray(oom))
+                    if is_spec_h.any() or q_len_h.any():
+                        em_before = em_h.copy()
+                        (self._cache, cur, lengths, emitted, done, budget, out) = (
+                            self._spec_mixed_rows(
+                                self.params, self._cache, cur, lengths, emitted,
+                                done, budget, out,
+                                jnp.asarray(tok), jnp.asarray(q_start_h),
+                                jnp.asarray(q_len_h), jnp.asarray(is_spec_h),
+                                drafts if drafts is not None
+                                else jnp.zeros((B, kd), jnp.int32),
+                                jnp.asarray(row_len_h), jnp.asarray(b_new_h),
+                                jnp.asarray(tables_h),
+                            )
+                        )
+                        self.mixed_dispatches += 1
+                        steps += 1
+                        em_h, dn_h = np.array(emitted), np.array(done)
+                        if is_spec_h.any():
+                            committed = em_h[is_spec_h] - em_before[is_spec_h]
+                            self.spec_tokens_emitted += int(committed.sum())
+                            self.spec_tokens_proposed += int(
+                                (q_len_h[is_spec_h] - 1).sum()
+                            )
+                            self.spec_tokens_accepted += int(
+                                np.maximum(committed - 1, 0).sum()
+                            )
+                            if (q_len_h[is_spec_h] > 1).any():
+                                self.spec_rounds += 1
+                elif runnable:
                     # ---- ONE mixed dispatch: decode lanes + fill chunks ----
                     tok = np.zeros((B, W), np.int32)
                     q_start_h = np.zeros((B,), np.int32)
@@ -1065,6 +1554,12 @@ class ServeEngine:
                         slots[i] = None
                         row_tables[i].release()
                         tables_h[i, :] = self._trash_block
+                        if spec:
+                            if d_row_tables[i].ids:
+                                d_row_tables[i].release()
+                            d_tables_h[i, :] = self._trash_block
+                            d_fills[i] = None
+                            d_broken[i] = False
                         yield req.rid, ans
         finally:
             # the pool/index outlive this call, so an abandoned stream must
@@ -1084,6 +1579,11 @@ class ServeEngine:
                 if row_tables[i].ids:
                     row_tables[i].release()
                 tables_h[i, :] = self._trash_block
+                if spec:
+                    d_fills[i] = None
+                    if d_row_tables[i].ids:
+                        d_row_tables[i].release()
+                    d_tables_h[i, :] = self._trash_block
             report_prefix()
             self._serving = False
 

@@ -143,13 +143,22 @@ class Scheduler:
     slot pool.  See the module docstring for the admission order."""
 
     def __init__(self, tenant_weights: dict[str, float] | None = None,
-                 fifo: bool = False):
+                 fifo: bool = False, deadline_slack_s: float | None = None):
         self._queues: dict[str, collections.deque[Request]] = {}
         self._weights = {k: float(v) for k, v in (tenant_weights or {}).items()}
         bad = [k for k, v in self._weights.items() if v <= 0]
         if bad:
             raise ValueError(f"tenant weight(s) must be positive: {bad}")
+        if deadline_slack_s is not None and deadline_slack_s < 0:
+            raise ValueError(f"deadline_slack_s={deadline_slack_s} must be >= 0")
         self._fifo = bool(fifo)
+        # deadline-aware admission boost: a queue head within this many
+        # seconds of its admission-deadline expiry is promoted to top
+        # priority (fair-share heads can otherwise starve into expiry
+        # behind heavier tenants).  None disables the boost; expiry
+        # accounting itself is untouched — an already-overdue head still
+        # expires before selection ever sees it
+        self._deadline_slack = deadline_slack_s
         self._pass: dict[str, float] = {}  # stride-scheduling virtual time
         self._next_rid = 0
         self._lock = threading.Lock()
@@ -340,9 +349,22 @@ class Scheduler:
             if self._fifo:
                 req = min(heads, key=lambda r: r.rid)
             else:
-                top = max(r.priority for r in heads)
+                # deadline boost: heads whose expiry is within the slack
+                # outrank every priority class (they would expire waiting
+                # their fair-share turn); ties among urgent heads fall
+                # back to the same weighted-fair order
+                urgent = [
+                    r for r in heads
+                    if self._deadline_slack is not None
+                    and r.deadline_s is not None
+                    and r.deadline_s - (now - r.submitted_at) <= self._deadline_slack
+                ]
+                eligible = urgent
+                if not eligible:
+                    top = max(r.priority for r in heads)
+                    eligible = [r for r in heads if r.priority == top]
                 req = min(
-                    (r for r in heads if r.priority == top),
+                    eligible,
                     key=lambda r: (self._pass.get(r.tenant, 0.0), r.rid),
                 )
             if admit_if is not None and not admit_if(req):
@@ -430,14 +452,33 @@ class Scheduler:
 
     def record_dispatch_stats(self, *, admit_dispatches: int, decode_dispatches: int,
                               mixed_dispatches: int, steps: int,
-                              lifetime: dict | None = None):
+                              lifetime: dict | None = None,
+                              draft_dispatches: int = 0,
+                              draft_fill_dispatches: int = 0,
+                              spec_rounds: int = 0,
+                              spec_tokens_proposed: int = 0,
+                              spec_tokens_accepted: int = 0,
+                              spec_tokens_emitted: int = 0):
         """Dispatch counters for THIS serve window (engine deltas,
         overwritten each pass): fused admit prefills, fused decode
         chunks, and unified mixed prefill+decode dispatches, plus the
         number of engine scheduler steps — ``latency_stats`` derives
         ``dispatches_per_step`` from them (the O(1)-per-step regression
         gauge of the unified path).  ``lifetime`` optionally carries the
-        engine's cumulative totals for the nested lifetime view."""
+        engine's cumulative totals for the nested lifetime view.
+
+        Speculative engines (``draft_k > 0``) additionally report:
+        drafter k-loop dispatches, drafter prefill-only dispatches
+        (``draft_fill_dispatches`` — admission cost, like target
+        prefill, excluded from the per-round bound), spec rounds
+        (verify dispatches that carried at least one ``q_len > 1``
+        descriptor), and per-round token
+        tallies (proposed drafts / accepted drafts / committed tokens,
+        where committed includes the correction token).  These stay OUT
+        of ``dispatches_per_step`` — ``latency_stats`` derives the
+        speculative gauges ``spec_accept_rate``,
+        ``spec_tokens_per_round`` (the tokens/step > 1 headline), and
+        ``dispatches_per_spec_round`` (the O(2) bound) from them."""
         with self._lock:
             self._dispatch = {
                 "admit_dispatches": int(admit_dispatches),
@@ -445,6 +486,15 @@ class Scheduler:
                 "mixed_dispatches": int(mixed_dispatches),
                 "engine_steps": int(steps),
             }
+            if draft_dispatches or draft_fill_dispatches or spec_rounds:
+                self._dispatch.update(
+                    draft_dispatches=int(draft_dispatches),
+                    draft_fill_dispatches=int(draft_fill_dispatches),
+                    spec_rounds=int(spec_rounds),
+                    spec_tokens_proposed=int(spec_tokens_proposed),
+                    spec_tokens_accepted=int(spec_tokens_accepted),
+                    spec_tokens_emitted=int(spec_tokens_emitted),
+                )
             if lifetime is not None:
                 self._dispatch_lifetime = {k: int(v) for k, v in lifetime.items()}
 
@@ -524,6 +574,22 @@ class Scheduler:
                         + self._dispatch["decode_dispatches"]
                         + self._dispatch["mixed_dispatches"]
                     ) / self._dispatch["engine_steps"]
+                if self._dispatch.get("spec_tokens_proposed"):
+                    gauges["spec_accept_rate"] = (
+                        self._dispatch["spec_tokens_accepted"]
+                        / self._dispatch["spec_tokens_proposed"]
+                    )
+                if self._dispatch.get("spec_rounds"):
+                    gauges["spec_tokens_per_round"] = (
+                        self._dispatch["spec_tokens_emitted"]
+                        / self._dispatch["spec_rounds"]
+                    )
+                    # every drafter dispatch + its paired verify dispatch;
+                    # the unified-path O(2)-per-spec-round regression gauge
+                    gauges["dispatches_per_spec_round"] = (
+                        self._dispatch.get("draft_dispatches", 0)
+                        + self._dispatch["spec_rounds"]
+                    ) / self._dispatch["spec_rounds"]
             if self._prefix is not None:
                 gauges.update(self._derive_prefix(self._prefix))
             lifetime = _percentiles(all_reqs)

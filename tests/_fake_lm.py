@@ -19,18 +19,26 @@ class FakeLM:
     (2 - e - 1) % vocab + 1 tokens after prefill."""
 
     @staticmethod
-    def _logits(tokens):
-        nxt = (tokens + 1) % VOCAB
+    def _logits(tokens, offset=1):
+        nxt = (tokens + offset) % VOCAB
         return jnp.eye(VOCAB, dtype=jnp.float32)[nxt]
+
+    @staticmethod
+    def _offset(params):
+        # params rides the offset so a speculative DRAFTER can follow a
+        # deliberately different rule than the target (offset=2 drafts
+        # always diverge -> every draft rejected, outputs must not move)
+        return params.get("offset", 1) if isinstance(params, dict) else 1
 
     @staticmethod
     def prefill(cfg, pol, params, batch, cache_len=None):
         tokens = batch["tokens"]
-        return FakeLM._logits(tokens), FakeLM.init_cache(cfg, tokens.shape[0], cache_len)
+        logits = FakeLM._logits(tokens, FakeLM._offset(params))
+        return logits, FakeLM.init_cache(cfg, tokens.shape[0], cache_len)
 
     @staticmethod
     def decode_step(cfg, pol, params, cache, tokens, pos, block_tables=None, block_size=0):
-        return FakeLM._logits(tokens), cache
+        return FakeLM._logits(tokens, FakeLM._offset(params)), cache
 
     @staticmethod
     def init_cache(cfg, batch, cache_len, dtype=jnp.float32, abstract=False):
@@ -52,7 +60,16 @@ class FakeLM:
                    block_size):
         # stateless next-token rule: per-lane logits are all the unified
         # engine reads (it takes lane q_len - 1), so no pool K/V needed
-        return FakeLM._logits(tokens), cache
+        return FakeLM._logits(tokens, FakeLM._offset(params)), cache
+
+    @staticmethod
+    def verify_step(cfg, pol, params, tokens, cache, block_tables, q_start, q_len,
+                    block_size):
+        # the stateless rule is position-free, so per-lane verify logits
+        # ARE the plain-decode logits — same contract as LM.verify_step
+        return FakeLM.mixed_step(
+            cfg, pol, params, tokens, cache, block_tables, q_start, q_len, block_size
+        )
 
 
 def expected_answer(end_token: int, budget: int) -> list[int]:

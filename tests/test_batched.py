@@ -83,6 +83,36 @@ def test_answer_batch_quorum_violation_raises(corpus):
         sys_.orchestrator.answer_batch([corpus.queries[0].text])
 
 
+def test_answer_batch_selector_routing_matches_sequential(corpus):
+    """Satellite: selector_top_p setups used to fall back to B sequential
+    ``answer()`` calls; the routed batch path (ragged fan-out, non-
+    selected query rows PAD-masked) must stay bit-identical to the
+    sequential selector path while sending at most ONE sealed request per
+    SELECTED provider and none to providers no query routed to."""
+    from repro.core.advanced import ProviderSelector
+
+    sys_ = _make_system(corpus)
+    orch = sys_.orchestrator
+    orch.selector = ProviderSelector(sys_.providers, sys_.embed_fn)
+    orch.selector_top_p = 2
+    texts = [q.text for q in corpus.queries[:8]]
+    seq = [orch.answer(t) for t in texts]
+    for p in sys_.providers:
+        p.n_requests = 0
+    bat = orch.answer_batch(texts)
+    assert len(bat) == len(seq)
+    for s, b in zip(seq, bat):
+        _assert_context_equal(s["context"], b["context"])
+        assert s["n_providers"] == b["n_providers"] == 2
+    routes = orch.query_routes(texts)
+    sel_ids = {int(p.provider_id) for sub in routes for p in sub}
+    for p in sys_.providers:
+        want = 1 if int(p.provider_id) in sel_ids else 0
+        assert p.n_requests == want, (
+            f"provider {p.provider_id}: {p.n_requests} requests, want {want}"
+        )
+
+
 def test_batched_retrieve_matches_per_query(corpus):
     sys_ = _make_system(corpus)
     p = sys_.providers[0]

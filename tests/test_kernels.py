@@ -274,6 +274,48 @@ def test_mixed_prefill_trash_blocks_never_leak():
     assert_allclose(np.asarray(base), np.asarray(poisoned), rtol=0, atol=0)
 
 
+def test_mixed_prefill_verify_rows_match_per_lane_decode():
+    """Speculative VERIFY descriptors — ``q_len = k + 1`` starting at the
+    row's committed position — must be lane-for-lane identical to k+1
+    independent decode descriptors over the same resident pool K/V: the
+    kernel-level fact that makes draft-k/verify-1 greedy accept-prefix
+    bit-identical to plain 1-token decode."""
+    from repro.kernels.chunked_prefill.kernel import mixed_prefill_attention_pallas
+    from repro.kernels.chunked_prefill.ref import mixed_prefill_attention_ref
+
+    b, w, h, kv, dh, bs, n_t = 3, 5, 4, 2, 16, 8, 3
+    rng = np.random.default_rng(17)
+    kk = jax.random.PRNGKey(11)
+    n_pool = b * n_t + 1
+    q = jax.random.normal(kk, (b, w, h, dh))
+    kp = jax.random.normal(jax.random.fold_in(kk, 1), (n_pool, bs, kv, dh))
+    vp = jax.random.normal(jax.random.fold_in(kk, 2), (n_pool, bs, kv, dh))
+    tables = jnp.asarray(
+        rng.permutation(n_pool - 1)[: b * n_t].reshape(b, n_t), jnp.int32
+    )
+    k = w - 1  # draft_k: verify q_len = k + 1 = w lanes
+    q0 = [3, 7, 0]  # per-row committed position (q_start)
+    desc_v = jnp.asarray(
+        [[i, q0[i], k + 1, q0[i] + k + 1] for i in range(b)], jnp.int32
+    )
+    o_v = mixed_prefill_attention_ref(q, kp, vp, tables, desc_v)
+    o_vp = mixed_prefill_attention_pallas(q, kp, vp, tables, desc_v)
+    assert_allclose(np.asarray(o_vp), np.asarray(o_v), rtol=2e-5, atol=2e-5)
+    assert_allclose(
+        np.asarray(o_v), _mixed_oracle_np(q, kp, vp, tables, desc_v),
+        rtol=1e-5, atol=1e-5,
+    )
+    # verify lane j == a plain q_len=1 decode descriptor at q_start + j
+    for j in range(k + 1):
+        desc_d = jnp.asarray(
+            [[i, q0[i] + j, 1, q0[i] + j + 1] for i in range(b)], jnp.int32
+        )
+        o_d = mixed_prefill_attention_ref(q[:, j : j + 1], kp, vp, tables, desc_d)
+        assert_allclose(
+            np.asarray(o_v)[:, j], np.asarray(o_d)[:, 0], rtol=1e-6, atol=1e-6
+        )
+
+
 # ---------------- ssd scan ----------------
 @pytest.mark.parametrize("b,l,h,hd,ds", [(1, 16, 2, 8, 8), (2, 32, 4, 16, 8), (2, 64, 2, 32, 16)])
 def test_ssd_chunk_sweep(b, l, h, hd, ds):

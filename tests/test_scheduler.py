@@ -391,6 +391,53 @@ def test_gate_rejection_preserves_tenant_order():
     assert s.pop_ready(admit_if=lambda r: True).rid == ra
 
 
+def test_deadline_boost_promotes_near_expiry_head():
+    """Satellite: a queue head whose deadline expires within the
+    configured slack outranks EVERY priority class — it admits before an
+    equal-priority (and even higher-priority) rival submitted earlier —
+    while expiry accounting stays untouched: an already-overdue head
+    still expires instead of being boost-admitted."""
+    s = Scheduler(deadline_slack_s=1.0)
+    rival = s.submit(np.arange(3), tenant="a", priority=0)  # equal prio, lower rid
+    hi = s.submit(np.arange(3), tenant="b", priority=5)  # higher class
+    urgent = s.submit(np.arange(3), tenant="c", priority=0, deadline_s=0.5)
+    relaxed = s.submit(np.arange(3), tenant="d", priority=0, deadline_s=60.0)
+    # within-slack head first, then normal class/fair order resumes
+    assert s.pop_ready().rid == urgent
+    assert s.pop_ready().rid == hi
+    assert s.pop_ready().rid == rival
+    assert s.pop_ready().rid == relaxed
+
+    # without the slack, the same workload admits by class then rid:
+    # the boost is opt-in, not a default behavior change
+    s2 = Scheduler()
+    s2.submit(np.arange(3), tenant="a", priority=0)
+    hi2 = s2.submit(np.arange(3), tenant="b", priority=5)
+    s2.submit(np.arange(3), tenant="c", priority=0, deadline_s=0.5)
+    assert s2.pop_ready().rid == hi2
+
+    # expiry accounting unchanged: an overdue head expires in passing,
+    # it is never boost-admitted past its deadline
+    s3 = Scheduler(deadline_slack_s=1.0)
+    dead = s3.submit(np.arange(3), deadline_s=0.0, tenant="a")
+    live = s3.submit(np.arange(3), tenant="b")
+    time.sleep(0.01)
+    assert s3.pop_ready().rid == live
+    assert s3.results[dead].status == "expired"
+    assert s3.latency_stats()["lifetime"]["n_expired"] == 1
+
+    # a gate-rejected boosted head stays at its head without being
+    # charged fair-share pass (same no-charge rule as normal selection)
+    s4 = Scheduler(deadline_slack_s=1.0)
+    ru = s4.submit(np.arange(9), tenant="a", deadline_s=0.5)
+    assert s4.pop_ready(admit_if=lambda r: False) is None
+    assert s4._pass.get("a", 0.0) == 0.0
+    assert s4.pop_ready(admit_if=lambda r: True).rid == ru
+
+    with pytest.raises(ValueError, match="deadline_slack_s"):
+        Scheduler(deadline_slack_s=-0.1)
+
+
 # ------------------------------------------------------------------ #
 # stats windows: per-serve deltas vs scheduler lifetime
 # ------------------------------------------------------------------ #

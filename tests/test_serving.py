@@ -671,3 +671,146 @@ def test_tenant_priority_and_fifo_admission_order(monkeypatch):
     starts = {rid: sched.results[rid].started_at for rid in b_rids + i_rids}
     # arrival-order baseline: the batch flood admits first
     assert max(starts[r] for r in b_rids) < min(starts[r] for r in i_rids)
+
+
+# ------------------------------------------------------------------ #
+# speculative decoding: draft-k/verify-1 through the unified dispatch
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("block_size", [4, 8, 16])
+def test_spec_decode_matches_plain_bitwise(small_lm, block_size):
+    """Acceptance: draft-k/verify-1 speculation must be BIT-identical to
+    plain greedy decode for the same admission order — self-speculation
+    (drafter == target) on the ragged prompt/budget workload the paged
+    parity suite uses, across block sizes, with verify rounds riding the
+    same token-budget dispatch as chunked prefill lanes."""
+    cfg, params = small_lm
+    base_kw = dict(max_batch=2, max_prompt_len=11, max_new_tokens=5, sched_chunk=2)
+    rng = np.random.default_rng(42)
+    prompts = [
+        rng.integers(8, cfg.vocab_size, size=n).astype(np.int32)
+        for n in (9, 11, 6, 3, 11, 7)
+    ]
+    budgets = [5, 1, 4, 5, 2, 5]
+    plain = ServeEngine(
+        cfg, POL, params,
+        ServeConfig(paged=True, block_size=block_size, token_budget=5, **base_kw),
+    )
+    want = plain.serve_prompts(prompts, max_new_tokens=budgets)
+    spec = ServeEngine(
+        cfg, POL, params,
+        ServeConfig(paged=True, block_size=block_size, token_budget=5,
+                    draft_k=3, **base_kw),
+    )
+    got = spec.serve_prompts(prompts, max_new_tokens=budgets)
+    for i, (w, g) in enumerate(zip(want, got)):
+        assert np.array_equal(w, g), f"prompt {i}: spec {list(g)} != plain {list(w)}"
+    # self-speculation drafts the target's own tokens: accepts happen
+    assert spec.spec_rounds > 0 and spec.spec_tokens_accepted > 0
+    assert spec.decode_dispatches == 0, "spec rounds must ride the mixed dispatch"
+
+
+def test_spec_decode_prefix_cache_matches_plain_bitwise(small_lm):
+    """Speculation composes with the prefix cache: a COW + sibling
+    workload (cold prompts, same-pass sibling, full-prefix hits) under
+    draft-k must still match the plain contiguous oracle bit-for-bit
+    while the cache actually shares."""
+    cfg, params = small_lm
+    base_kw = dict(max_batch=2, max_prompt_len=20, max_new_tokens=5, sched_chunk=2)
+    rng = np.random.default_rng(42)
+    pre = rng.integers(8, cfg.vocab_size, size=16).astype(np.int32)
+    tails = [rng.integers(8, cfg.vocab_size, size=n).astype(np.int32) for n in (1, 3, 2)]
+    prompts = [
+        np.concatenate([pre, tails[0]]),
+        np.concatenate([pre, tails[1]]),  # same-pass sibling
+        pre.copy(),                        # full-prefix hit -> COW boundary
+        rng.integers(8, cfg.vocab_size, size=9).astype(np.int32),
+        pre.copy(),
+        np.concatenate([pre, tails[2]]),
+    ]
+    budgets = [5, 1, 4, 5, 2, 3]
+    oracle = ServeEngine(cfg, POL, params, ServeConfig(**base_kw))
+    want = oracle.serve_prompts(prompts, max_new_tokens=budgets)
+    spec = ServeEngine(
+        cfg, POL, params,
+        ServeConfig(paged=True, prefix_cache=True, block_size=8, token_budget=7,
+                    draft_k=3, **base_kw),
+    )
+    got = spec.serve_prompts(prompts, max_new_tokens=budgets)
+    for i, (w, g) in enumerate(zip(want, got)):
+        assert np.array_equal(w, g), f"prompt {i}: spec {list(g)} != oracle {list(w)}"
+    assert spec.prefix_hits >= 3 and spec.spec_tokens_accepted > 0
+
+
+def test_spec_decode_divergent_drafter_never_changes_tokens(monkeypatch):
+    """A drafter that ALWAYS disagrees (offset-2 rule vs the target's
+    offset-1) must reject every draft — zero accepts — and the outputs
+    still match plain decode exactly: correctness never depends on the
+    drafter, only throughput does."""
+    kw = dict(max_batch=3, max_new_tokens=6, sched_chunk=2,
+              paged=True, block_size=4, token_budget=6)
+    ends = [250, 0, 10, 253, 99, 30]
+    budgets = [6, 3, 2, 6, 1, 4]
+    eng = make_fake_engine(monkeypatch, draft_k=3, draft_params={"offset": 2}, **kw)
+    sched = Scheduler()
+    rids = sched.submit_many([prompt_ending(e) for e in ends], budgets)
+    res = eng.serve(sched)
+    for e, b, rid in zip(ends, budgets, rids):
+        assert list(res[rid]) == expected_answer(e, b), f"end={e} budget={b}"
+    assert eng.spec_tokens_proposed > 0 and eng.spec_tokens_accepted == 0
+    st = sched.latency_stats()
+    assert st["spec_accept_rate"] == 0.0
+    # every lane still emits the target's lane-0 correction token
+    assert st["spec_tokens_per_round"] >= 1.0
+
+
+def test_spec_decode_dispatch_count_o2_per_round(monkeypatch):
+    """CI guard: a speculative round costs at most TWO device dispatches
+    — one drafter call (fill or k-token loop) + one target verify — with
+    zero legacy decode dispatches, and self-speculation (perfect drafter)
+    emits > 1 token per verify round."""
+    eng = make_fake_engine(
+        monkeypatch, max_batch=4, max_new_tokens=6, sched_chunk=2,
+        paged=True, block_size=4, token_budget=8, draft_k=3,
+    )
+    ends = [250, 10, 99, 30, 200, 1]
+    sched = Scheduler()
+    rids = sched.submit_many([prompt_ending(e) for e in ends], 6)
+    res = eng.serve(sched)
+    for e, rid in zip(ends, rids):
+        assert list(res[rid]) == expected_answer(e, 6)
+    assert eng.decode_dispatches == 0 and eng.admit_dispatches == 0
+    assert eng.spec_rounds > 0
+    assert eng.draft_dispatches <= eng.spec_rounds, "O(2): <= 1 drafter call per round"
+    st = sched.latency_stats()
+    assert st["dispatches_per_spec_round"] <= 2.0
+    assert st["spec_tokens_per_round"] > 1.0, "perfect drafter must beat 1 token/round"
+    assert st["spec_accept_rate"] > 0.5
+    assert st["engine_steps"] == st["mixed_dispatches"] + st["decode_dispatches"]
+    # draft dispatches are overhead, not engine steps: the per-step gauge
+    # still reads one TARGET dispatch per step
+    assert st["dispatches_per_step"] == 1.0
+
+
+def test_spec_decode_config_validation(small_lm, monkeypatch):
+    cfg, params = small_lm
+    with pytest.raises(ValueError, match="requires paged"):
+        ServeEngine(cfg, POL, params, ServeConfig(draft_k=3))
+    with pytest.raises(ValueError, match="must be >= 0"):
+        ServeEngine(cfg, POL, params, ServeConfig(draft_k=-1, paged=True))
+    with pytest.raises(ValueError, match="cannot fit one verify"):
+        ServeEngine(
+            cfg, POL, params,
+            ServeConfig(draft_k=4, paged=True, token_budget=4, max_prompt_len=8),
+        )
+    with pytest.raises(ValueError, match="draft_config without draft_params"):
+        ServeEngine(
+            cfg, POL, params,
+            ServeConfig(draft_k=3, paged=True, draft_config=cfg, max_prompt_len=8),
+        )
+    small = cfg.with_overrides(vocab_size=cfg.vocab_size // 2)
+    with pytest.raises(ValueError, match="vocab_size"):
+        ServeEngine(
+            cfg, POL, params,
+            ServeConfig(draft_k=3, paged=True, draft_config=small, draft_params={},
+                        max_prompt_len=8),
+        )

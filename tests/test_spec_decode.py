@@ -1,0 +1,136 @@
+"""Property tests for the greedy accept-prefix rule of speculative
+decoding (draft-k/verify-1), plus the draft_k=0 identity guarantee.
+
+The accepted run over random draft/target streams must equal the longest
+common prefix of the two streams plus EXACTLY ONE target-sourced
+correction token — that is what makes spec decode bit-identical to plain
+greedy decode — and ``draft_k=0`` must be byte-identical to the
+non-speculative engine (the spec branch never runs).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from _fake_lm import expected_answer, make_fake_engine, prompt_ending
+from repro.data.tokenizer import EOS
+from repro.serving.engine import accept_prefix
+from repro.serving.scheduler import Scheduler
+
+VOCAB = 5  # tiny alphabet: collisions and EOS (=2) occur naturally
+
+
+def _streams(seed: int, k: int, rows: int = 4):
+    """Random draft/target streams with a planted match prefix per row so
+    every LCP length 0..k gets exercised."""
+    rng = np.random.default_rng(seed)
+    t = rng.integers(0, VOCAB, size=(rows, k + 1)).astype(np.int32)
+    d = rng.integers(0, VOCAB, size=(rows, k)).astype(np.int32)
+    for r in range(rows):
+        m = int(rng.integers(0, k + 1))
+        d[r, :m] = t[r, :m]
+    return d, t
+
+
+def _expected_n_emit(d, t, *, q_len, rem, done):
+    """Closed-form oracle: lane j emits iff drafts 0..j-1 all matched,
+    no earlier lane emitted EOS, and j clears the q_len/budget caps."""
+    k = d.shape[0]
+    n = 0
+    if not done:
+        for j in range(k + 1):
+            if j >= q_len or j >= rem:
+                break
+            if any(d[i] != t[i] for i in range(j)):
+                break
+            if any(t[i] == EOS for i in range(j)):
+                break
+            n = j + 1
+    return n
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=1 << 31),
+       k=st.sampled_from([1, 2, 3, 4]))
+def test_accept_prefix_is_lcp_plus_one_correction(seed, k):
+    """Uncapped rounds: the accepted run is the draft/target LCP plus
+    exactly one target correction token (EOS in the target stream ends
+    the run at the EOS lane)."""
+    d, t = _streams(seed, k)
+    rows = d.shape[0]
+    q_len = np.full((rows,), k + 1, np.int32)
+    rem = np.full((rows,), k + 1, np.int32)
+    done = np.zeros((rows,), bool)
+    n_emit, can = accept_prefix(d, t, q_len=q_len, rem=rem, done=done)
+    n_emit, can = np.asarray(n_emit), np.asarray(can)
+    for r in range(rows):
+        n = int(n_emit[r])
+        lcp = 0
+        while lcp < k and d[r, lcp] == t[r, lcp] and t[r, lcp] != EOS:
+            lcp += 1
+        eos_cut = any(t[r, i] == EOS for i in range(lcp))
+        if not eos_cut:
+            # LCP drafts accepted + exactly one correction token, always
+            assert n == lcp + 1, f"row {r}: n_emit {n} != lcp {lcp} + 1"
+            assert (d[r, :lcp] == t[r, :lcp]).all()
+        # emitted tokens are target-sourced: accepted drafts ARE the
+        # matching target lanes, the last token is the correction
+        assert n >= 1, "a live row always emits at least the correction"
+        assert (can[r, :n]).all() and not can[r, n:].any(), "prefix mask"
+        if t[r, : n - 1].size:
+            assert EOS not in t[r, : n - 1], "nothing emits past EOS"
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=1 << 31),
+       k=st.sampled_from([1, 2, 3, 4]),
+       q_len_raw=st.integers(min_value=0, max_value=5),
+       rem_raw=st.integers(min_value=0, max_value=6),
+       is_done=st.sampled_from([False, True]))
+def test_accept_prefix_respects_caps(seed, k, q_len_raw, rem_raw, is_done):
+    """Capped rounds: n_emit never exceeds the verify descriptor length,
+    the remaining token budget, or a finished row (which emits zero)."""
+    d, t = _streams(seed, k)
+    rows = d.shape[0]
+    q_len = np.full((rows,), min(q_len_raw, k + 1), np.int32)
+    rem = np.full((rows,), rem_raw, np.int32)
+    done = np.full((rows,), is_done, bool)
+    n_emit, can = accept_prefix(d, t, q_len=q_len, rem=rem, done=done)
+    n_emit, can = np.asarray(n_emit), np.asarray(can)
+    for r in range(rows):
+        want = _expected_n_emit(
+            d[r], t[r], q_len=int(q_len[r]), rem=int(rem[r]), done=is_done
+        )
+        assert int(n_emit[r]) == want, f"row {r}"
+        assert int(can[r].sum()) == want
+        # committed lanes are contiguous from lane 0 (positional rollback
+        # depends on this: everything past n_emit is stale, nothing gaps)
+        assert (can[r, :want]).all() and not can[r, want:].any()
+
+
+def test_draft_k_zero_is_byte_identical_to_plain_decode(monkeypatch):
+    """draft_k=0 IS the plain engine: same bytes out, zero speculative
+    state or dispatches — the spec branch never runs."""
+    kw = dict(max_batch=3, max_new_tokens=6, sched_chunk=2,
+              paged=True, block_size=4, token_budget=6)
+    ends = [250, 0, 10, 253, 99, 30]
+    budgets = [6, 3, 2, 6, 1, 4]
+
+    def run(draft_k):
+        eng = make_fake_engine(monkeypatch, draft_k=draft_k, **kw)
+        sched = Scheduler()
+        rids = sched.submit_many([prompt_ending(e) for e in ends], budgets)
+        res = eng.serve(sched)
+        return eng, sched, [np.asarray(res[r]) for r in rids]
+
+    eng0, sched0, outs0 = run(draft_k=0)
+    for e, b, got in zip(ends, budgets, outs0):
+        assert list(got) == expected_answer(e, b)
+    assert eng0.draft_dispatches == 0 and eng0.spec_rounds == 0
+    assert eng0._draft_pool is None, "draft_k=0 must not allocate a drafter pool"
+    st0 = sched0.latency_stats()
+    assert "spec_accept_rate" not in st0, "no speculative gauges when spec is off"
+    # and a speculating engine emits the same BYTES on the same workload
+    _, _, outs3 = run(draft_k=3)
+    for a, b in zip(outs0, outs3):
+        assert a.tobytes() == b.tobytes()
