@@ -8,7 +8,18 @@ across PRs without parsing stdout.
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
+
+# the sharded-capacity rows need >= 4 devices; claim them before any
+# transitive jax import (no-op if the operator already set a count)
+if "jax" not in sys.modules and (
+    "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
+):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=4 " + os.environ.get("XLA_FLAGS", "")
+    )
 
 
 def main(argv=None) -> None:
@@ -46,11 +57,23 @@ def main(argv=None) -> None:
         print(f"{name},{us:.1f},{derived}")
     e2e_rows += sched_rows
 
+    print("\n== pipelined serve_stream vs phase-barrier serve ==")
+    ov_rows = e2e_pipeline.run_pipeline_overlap()
+    for name, us, derived in ov_rows:
+        print(f"{name},{us:.1f},{derived}")
+    e2e_rows += ov_rows
+
     print("\n== paged vs contiguous KV cache at equal HBM (short-prompt workload) ==")
     kv_rows = e2e_pipeline.run_paged_capacity()
     for name, us, derived in kv_rows:
         print(f"{name},{us:.1f},{derived}")
     e2e_rows += kv_rows
+
+    print("\n== sharded KV pool over the mesh at matched per-shard HBM ==")
+    sh_rows = e2e_pipeline.run_sharded_capacity()
+    for name, us, derived in sh_rows:
+        print(f"{name},{us:.1f},{derived}")
+    e2e_rows += sh_rows
 
     print("\n== prefix-cache reuse on shared-preamble micro-batches ==")
     px_rows = e2e_pipeline.run_prefix_reuse()
@@ -69,6 +92,12 @@ def main(argv=None) -> None:
     for name, us, derived in sp_rows:
         print(f"{name},{us:.1f},{derived}")
     e2e_rows += sp_rows
+
+    print("\n== tenant SLO: weighted-fair vs FIFO + warm restart ==")
+    tn_rows = e2e_pipeline.run_tenant_slo()
+    for name, us, derived in tn_rows:
+        print(f"{name},{us:.1f},{derived}")
+    e2e_rows += tn_rows
 
     print("\n== federation resilience under injected faults (breaker on/off) ==")
     from benchmarks import federation_faults

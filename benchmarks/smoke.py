@@ -1,11 +1,15 @@
-"""Tier-1-adjacent smoke: run the quickstart example under a 60s budget.
+"""Tier-1-adjacent smoke: run the quickstart example under a 60s budget,
+then the sharded-serving capacity/parity arm under its own budget.
 
     python benchmarks/smoke.py
 
 Exercises the full import surface + Algorithm 1 end to end (providers,
 attested channels, batched eval) in a subprocess, so CI surfaces both
 perf regressions (budget blown) and import breakage without waiting for
-the full benchmark suite.  Exit code 0 iff the example succeeds in time.
+the full benchmark suite.  The second subprocess fakes 4 host devices
+(XLA_FLAGS) and runs ``e2e_pipeline.run_sharded_capacity`` — the 4-shard
+pool must admit >= 3x the 1-shard slots at matched per-shard HBM with
+bit-identical answers.  Exit code 0 iff both arms succeed in time.
 """
 from __future__ import annotations
 
@@ -16,31 +20,53 @@ import time
 
 BUDGET_S = 60
 
+_SHARDED_SNIPPET = """
+import sys
+sys.path.insert(0, "src")
+from benchmarks import e2e_pipeline
+for name, us, derived in e2e_pipeline.run_sharded_capacity(n_requests=16):
+    print(f"{name},{us:.1f},{derived}")
+"""
 
-def main() -> int:
-    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    env = dict(os.environ, JAX_PLATFORMS=os.environ.get("JAX_PLATFORMS", "cpu"))
+
+def _arm(name, cmd, cwd, env, budget=BUDGET_S) -> int:
     t0 = time.monotonic()
     try:
         r = subprocess.run(
-            [sys.executable, os.path.join(repo, "examples", "quickstart.py")],
-            cwd=repo,
-            env=env,
-            timeout=BUDGET_S,
-            capture_output=True,
-            text=True,
+            cmd, cwd=cwd, env=env, timeout=budget, capture_output=True, text=True
         )
     except subprocess.TimeoutExpired:
-        print(f"smoke_quickstart,FAIL,budget {BUDGET_S}s exceeded")
+        print(f"{name},FAIL,budget {budget}s exceeded")
         return 1
     dt = time.monotonic() - t0
     if r.returncode != 0:
         print(r.stdout[-2000:])
         print(r.stderr[-2000:], file=sys.stderr)
-        print(f"smoke_quickstart,FAIL,exit {r.returncode}")
+        print(f"{name},FAIL,exit {r.returncode}")
         return 1
-    print(f"smoke_quickstart,{dt*1e6:.0f},budget {BUDGET_S}s")
+    print(f"{name},{dt*1e6:.0f},budget {budget}s")
     return 0
+
+
+def main() -> int:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, JAX_PLATFORMS=os.environ.get("JAX_PLATFORMS", "cpu"))
+    rc = _arm(
+        "smoke_quickstart",
+        [sys.executable, os.path.join(repo, "examples", "quickstart.py")],
+        repo, env,
+    )
+    env_sharded = dict(
+        env,
+        XLA_FLAGS="--xla_force_host_platform_device_count=4 "
+        + env.get("XLA_FLAGS", ""),
+    )
+    rc |= _arm(
+        "smoke_sharded_parity",
+        [sys.executable, "-c", _SHARDED_SNIPPET],
+        repo, env_sharded,
+    )
+    return rc
 
 
 if __name__ == "__main__":

@@ -4,7 +4,10 @@ import functools
 import jax
 
 from repro.kernels.chunked_prefill.kernel import mixed_prefill_attention_pallas
-from repro.kernels.chunked_prefill.ref import mixed_prefill_attention_ref
+from repro.kernels.chunked_prefill.ref import (  # noqa: F401  (partials re-export)
+    mixed_prefill_attention_ref,
+    mixed_prefill_partials,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))

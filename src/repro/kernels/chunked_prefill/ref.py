@@ -54,3 +54,50 @@ def mixed_prefill_attention_ref(q, k_pool, v_pool, block_tables, desc):
     p = jnp.where(valid[:, None, None], p, 0.0)
     out = jnp.einsum("rkgws,rskd->rwkgd", p, v_view)
     return out.reshape(r, w, h, dh).astype(q.dtype)
+
+
+def mixed_prefill_partials(q, k_pool, v_pool, block_tables, desc, owned=None):
+    """Flash-softmax partials of the mixed oracle — the per-shard half of
+    the distributed dispatch.
+
+    Same contract as ``mixed_prefill_attention_ref`` but stops before
+    normalization, returning ``(o, m, l)``: un-normalized weighted values
+    ``o`` (R, KV, G, W, dh), row max ``m`` and partition sum ``l`` (R,
+    KV, G, W, 1), ready for ``serving/dist_decode.combine_partials``.
+
+    ``owned`` (same leading shape as ``block_tables``, bool) marks the
+    block-table entries resident on this shard; non-owned positions are
+    masked out of ``valid``.  A shard owning NONE of a row's blocks (row
+    affinity) contributes exact zeros — ``m = -1e30``, ``l = 0``,
+    ``o = 0`` — so the cross-shard combine passes the owner's partials
+    through bitwise.  ``owned=None`` means "owns everything": with one
+    shard the combine then reduces to ``o / l``, the bitwise reference
+    for every N-shard run.
+    """
+    r, w, h, dh = q.shape
+    bs, kv = k_pool.shape[1], k_pool.shape[2]
+    tbl = block_tables[desc[:, 0]]  # (R, n_t)
+    s_pad = tbl.shape[1] * bs
+    k_view = k_pool[tbl].reshape(r, s_pad, kv, dh).astype(jnp.float32)
+    v_view = v_pool[tbl].reshape(r, s_pad, kv, dh).astype(jnp.float32)
+    qr = q.astype(jnp.float32).reshape(r, w, kv, h // kv, dh)
+    logits = jnp.einsum("rwkgd,rskd->rkgws", qr, k_view) / np.sqrt(dh)
+    lane = jnp.arange(w)
+    kpos = jnp.arange(s_pad)
+    qpos = desc[:, 1][:, None] + lane[None, :]  # (R, W)
+    valid = (
+        (kpos[None, None, :] <= qpos[:, :, None])
+        & (kpos[None, None, :] < desc[:, 3][:, None, None])
+        & (lane[None, :, None] < desc[:, 2][:, None, None])
+    )  # (R, W, S)
+    if owned is not None:
+        own_pos = jnp.repeat(owned[desc[:, 0]], bs, axis=1)  # (R, s_pad)
+        valid = valid & own_pos[:, None, :]
+    vb = valid[:, None, None]  # (R, 1, 1, W, S)
+    logits = jnp.where(vb, logits, -1e30)
+    m = logits.max(-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    e = jnp.where(vb, e, 0.0)  # all-masked rows: l and o exactly 0
+    l = e.sum(-1, keepdims=True)
+    o = jnp.einsum("rkgws,rskd->rkgwd", e, v_view)
+    return o, m, l

@@ -9,6 +9,7 @@ providers + enclave orchestrator, and answer queries.
   python -m repro.launch.serve --queries 16 --prefix-cache --repeat 3
   python -m repro.launch.serve --queries 16 --generate --tenants 'interactive=4:1,batch=1'
   python -m repro.launch.serve --queries 16 --draft-k 3 --token-budget 32
+  python -m repro.launch.serve --queries 16 --shards 4 --block-size 8
 
 Uses the bag embedder + lexical-overlap reranker by default (training-free
 CPU path).  ``--generate`` stands up a reduced-LM ``ServeEngine`` and
@@ -18,6 +19,26 @@ latency (see examples/federated_medqa.py for the trained-LM loop)."""
 from __future__ import annotations
 
 import argparse
+import os
+import sys
+
+# --shards N partitions the KV pool over N devices; on a CPU host that
+# means faking the device count, which only works BEFORE jax first
+# imports — peek argv here, ahead of every repro/jax import below
+if "--shards" in sys.argv or any(a.startswith("--shards=") for a in sys.argv):
+    try:
+        _i = sys.argv.index("--shards")
+        _n = int(sys.argv[_i + 1])
+    except (ValueError, IndexError):
+        _n = next(
+            (int(a.split("=", 1)[1]) for a in sys.argv if a.startswith("--shards=")),
+            1,
+        )
+    if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={max(_n, 1)} "
+            + os.environ.get("XLA_FLAGS", "")
+        )
 
 import numpy as np
 
@@ -57,7 +78,8 @@ def make_demo_engine(max_new_tokens: int = 16, paged: bool = False,
                      block_size: int = 32, pool_blocks: int | None = None,
                      max_batch: int = 4, prefix_cache: bool = False,
                      token_budget: int | None = None,
-                     spill_bytes: int | None = None, draft_k: int = 0):
+                     spill_bytes: int | None = None, draft_k: int = 0,
+                     shards: int | None = None):
     """Reduced-LM ServeEngine (random-init, CPU-sized) + generator adapter
     for the scheduler-driven serving demo.  ``paged=True`` swaps the
     per-slot cache stripes for the shared block pool (``--block-size``
@@ -70,7 +92,10 @@ def make_demo_engine(max_new_tokens: int = 16, paged: bool = False,
     bounds an optional host-RAM demotion tier under it; ``draft_k > 0``
     turns on draft-k/verify-1 speculative decoding (self-speculation —
     the demo drafter IS the target, the accept-rate ceiling; a real
-    deployment passes a small ``draft_config``/``draft_params`` pair)."""
+    deployment passes a small ``draft_config``/``draft_params`` pair);
+    ``shards`` partitions the block pool over that many mesh devices and
+    runs every engine step as ONE distributed mixed dispatch —
+    bit-identical to the single-shard engine (tests/test_sharded_serving)."""
     import jax
 
     from repro.configs import get_config, smoke_config
@@ -88,7 +113,7 @@ def make_demo_engine(max_new_tokens: int = 16, paged: bool = False,
             max_batch=max_batch, max_prompt_len=256, max_new_tokens=max_new_tokens,
             paged=paged, block_size=block_size, n_pool_blocks=pool_blocks,
             prefix_cache=prefix_cache, token_budget=token_budget,
-            spill_bytes=spill_bytes, draft_k=draft_k,
+            spill_bytes=spill_bytes, draft_k=draft_k, shards=shards,
         ),
     )
     return engine_generator(engine)
@@ -181,6 +206,13 @@ def main(argv=None):
         "--generate; composes with --token-budget and --prefix-cache)",
     )
     ap.add_argument(
+        "--shards", type=int, default=None, metavar="N",
+        help="partition the paged KV pool over N mesh devices (row-affine "
+        "blocks, one distributed mixed dispatch per step, bit-identical "
+        "to --shards 1); on a CPU host the launcher fakes N host devices "
+        "via XLA_FLAGS before jax loads (implies --paged --generate)",
+    )
+    ap.add_argument(
         "--repeat", type=int, default=1,
         help="serve the query set N times through ONE resident "
         "engine+index (the repeat/retry traffic a prefix cache "
@@ -229,7 +261,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.spill_mb is not None:
         args.prefix_cache = True
-    if args.prefix_cache or args.token_budget is not None or args.draft_k > 0:
+    if (args.prefix_cache or args.token_budget is not None or args.draft_k > 0
+            or args.shards is not None):
         args.paged = args.generate = True
     if args.tenants is not None:
         args.generate = True
@@ -261,7 +294,7 @@ def main(argv=None):
             pool_blocks=args.pool_blocks, max_batch=args.max_batch,
             prefix_cache=args.prefix_cache, token_budget=args.token_budget,
             spill_bytes=int(args.spill_mb * 2**20) if args.spill_mb else None,
-            draft_k=args.draft_k,
+            draft_k=args.draft_k, shards=args.shards,
         ) if args.generate else None,
     )
     if args.kill_provider is not None:
@@ -368,7 +401,14 @@ def main(argv=None):
                     f", KV blocks {st['free_blocks']} free now / "
                     f"{st['min_free_blocks']} at peak ({args.block_size} tok/block)"
                 )
+            if args.shards is not None:
+                line += f" over {args.shards} pool shard(s)"
             print(line)
+            if args.draft_k > 0 and "draft_free_blocks" in st:
+                print(
+                    f"drafter pool: {st['draft_free_blocks']} blocks free now / "
+                    f"{st['min_draft_free_blocks']} at peak"
+                )
         if "engine_steps" in st and st["engine_steps"]:
             print(
                 f"dispatches: {st['admit_dispatches']} admit + "

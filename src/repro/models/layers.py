@@ -212,7 +212,75 @@ def attn_decode(cfg: ModelConfig, pol: ShardingPolicy, p, x, k_cache, v_cache, p
     return out, k_cache, v_cache
 
 
-def attn_decode_paged(cfg: ModelConfig, pol: ShardingPolicy, p, x, k_pool, v_pool, pos, block_tables, block_size: int):
+def _paged_attn_sharded(cfg: ModelConfig, q, k_new, v_new, k_pool, v_pool,
+                        block_tables, q_start, q_len, block_size: int, mesh):
+    """Distributed write-then-attend over a SHARDED block pool.
+
+    ``k_pool``/``v_pool``: ``(n_shards, n_local + 1, block_size, KV, hd)``
+    laid out ``P("data", ...)`` — each device holds its shard's blocks
+    plus a per-shard trash block at local index ``n_local``.
+    ``block_tables`` carries GLOBAL block ids (shard ``b // n_local``,
+    local id ``b % n_local``; the global trash id ``n_shards * n_local``
+    maps to every shard's local trash automatically, since its "shard"
+    equals ``n_shards`` and matches nobody).
+
+    Each shard scatters only the fresh lanes whose target block it owns
+    (everything else lands in its local trash) and runs the
+    ``kernels/chunked_prefill`` partials over its own table entries, with
+    non-owned entries masked to exact zeros.  The allocator's row
+    affinity puts ALL of a row's blocks on one shard, so the
+    ``dist_decode.combine_partials`` merge passes the owner's partials
+    through bitwise — an N-shard run is bit-identical to the 1-shard run
+    (asserted in tests/test_sharded_serving.py).
+
+    Returns ``(out, k_pool, v_pool)`` with ``out``: ``(B, W, H, hd)``
+    (wo projection is the caller's, outside the shard_map).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.kernels.chunked_prefill.ref import mixed_prefill_partials
+    from repro.runtime.compat import shard_map
+    from repro.serving.dist_decode import combine_partials
+
+    b, w, h, dh = q.shape
+    kv = k_pool.shape[3]
+    n_local = k_pool.shape[1] - 1
+    s_pad = block_tables.shape[1] * block_size
+    rows = jnp.arange(b)
+
+    def body(q, k_sh, v_sh, k_new, v_new, tables, q_start, q_len):
+        k_sh, v_sh = k_sh[0], v_sh[0]  # (n_local+1, bs, KV, hd)
+        my = jax.lax.axis_index("data")
+        owned = (tables // n_local) == my  # (B, n_t)
+        loc_tbl = jnp.where(owned, tables % n_local, n_local)
+        lane = jnp.arange(w)
+        live = lane[None, :] < q_len[:, None]
+        pos_c = jnp.minimum(q_start[:, None] + lane[None, :], s_pad - 1)
+        bid_g = tables[rows[:, None], pos_c // block_size]
+        mine = live & ((bid_g // n_local) == my)
+        bid = jnp.where(mine, bid_g % n_local, n_local)
+        off = pos_c % block_size
+        k_sh = k_sh.at[bid, off].set(k_new.astype(k_sh.dtype))
+        v_sh = v_sh.at[bid, off].set(v_new.astype(v_sh.dtype))
+        desc = jnp.stack(
+            [rows, q_start, q_len, q_start + q_len], axis=1
+        ).astype(jnp.int32)
+        o, m, l = mixed_prefill_partials(q, k_sh, v_sh, loc_tbl, desc, owned=owned)
+        out = combine_partials(o, m, l, axis_name="data")  # (B,KV,G,W,dh)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, w, kv * (h // kv), dh)
+        return out.astype(q.dtype), k_sh[None], v_sh[None]
+
+    fn = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(), P("data"), P("data"), P(), P(), P(), P(), P()),
+        out_specs=(P(), P("data"), P("data")),
+        check_vma=False,
+    )
+    return fn(q, k_pool, v_pool, k_new, v_new, block_tables, q_start, q_len)
+
+
+def attn_decode_paged(cfg: ModelConfig, pol: ShardingPolicy, p, x, k_pool, v_pool, pos, block_tables, block_size: int, mesh=None):
     """Single-token decode against a PAGED KV cache.
 
     ``k_pool``/``v_pool``: ``(n_pool, block_size, KV, hd)`` shared block
@@ -241,6 +309,17 @@ def attn_decode_paged(cfg: ModelConfig, pol: ShardingPolicy, p, x, k_pool, v_poo
     b = x.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
     q, k_new, v_new = attn_qkv(cfg, pol, p, x, pos[:, None])
+    if k_pool.ndim == 5:
+        # sharded pool (n_shards, n_local+1, bs, KV, hd): decode is the
+        # W=1 case of the distributed mixed dispatch.  A free slot's
+        # all-trash table matches no shard, so its (discarded) lane
+        # outputs exact zeros instead of trash-block garbage
+        out, k_pool, v_pool = _paged_attn_sharded(
+            cfg, q, k_new, v_new, k_pool, v_pool, block_tables,
+            pos, jnp.ones((b,), jnp.int32), block_size, mesh,
+        )
+        out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+        return out, k_pool, v_pool
     rows = jnp.arange(b)
     bid = block_tables[rows, pos // block_size]  # (B,) pool block per row
     off = pos % block_size
@@ -270,7 +349,7 @@ def attn_decode_paged(cfg: ModelConfig, pol: ShardingPolicy, p, x, k_pool, v_poo
 
 
 def attn_mixed_paged(cfg: ModelConfig, pol: ShardingPolicy, p, x, k_pool, v_pool,
-                     positions, block_tables, block_size: int, q_len):
+                     positions, block_tables, block_size: int, q_len, mesh=None):
     """UNIFIED mixed prefill+decode attention against a paged KV cache:
     one dispatch serves any mix of cold prefill chunks, warm suffix
     chunks riding shared prefix blocks, and 1-token decode rows.
@@ -302,6 +381,17 @@ def attn_mixed_paged(cfg: ModelConfig, pol: ShardingPolicy, p, x, k_pool, v_pool
     """
     b, w = x.shape[0], x.shape[1]
     q, k_new, v_new = attn_qkv(cfg, pol, p, x, positions)
+    if k_pool.ndim == 5:
+        # sharded pool: distributed dispatch — per-shard scatter +
+        # chunked-prefill partials, merged by dist_decode's combine
+        out, k_pool, v_pool = _paged_attn_sharded(
+            cfg, q, k_new, v_new, k_pool, v_pool, block_tables,
+            positions[:, 0], q_len, block_size, mesh,
+        )
+        out = pol.shard(out, "act_batch", "act_seq", "act_heads", None)
+        out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+        out = pol.shard(out, "act_batch", "act_seq", "act_embed")
+        return out, k_pool, v_pool
     s_pad = block_tables.shape[1] * block_size
     lane = jnp.arange(w)
     live = lane[None, :] < q_len[:, None]  # (B, W)

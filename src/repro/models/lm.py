@@ -92,16 +92,17 @@ def _run_position(cfg, pol, i, pp, h, positions, mode, cache_in, pos, paged=None
     cache_out = None
     if cfg.mixer_kind(i) == "attn":
         if mode == "decode" and paged is not None:
-            tables, bs = paged
+            tables, bs, mesh = paged
             o, k_c, v_c = L.attn_decode_paged(
-                cfg, pol, pp["attn"], x, cache_in["k"], cache_in["v"], pos, tables, bs
+                cfg, pol, pp["attn"], x, cache_in["k"], cache_in["v"], pos, tables, bs,
+                mesh=mesh,
             )
             cache_out = {"k": k_c, "v": v_c}
         elif mode == "mixed":
-            tables, bs, q_len = paged
+            tables, bs, q_len, mesh = paged
             o, k_c, v_c = L.attn_mixed_paged(
                 cfg, pol, pp["attn"], x, cache_in["k"], cache_in["v"],
-                positions, tables, bs, q_len,
+                positions, tables, bs, q_len, mesh=mesh,
             )
             cache_out = {"k": k_c, "v": v_c}
         elif mode == "decode":
@@ -255,25 +256,35 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.bfloat16,
     return blk
 
 
-def init_paged_cache(cfg: ModelConfig, n_pool_blocks: int, block_size: int, n_slots: int, dtype=jnp.bfloat16):
+def init_paged_cache(cfg: ModelConfig, n_pool_blocks: int, block_size: int, n_slots: int, dtype=jnp.bfloat16,
+                     n_shards: int | None = None):
     """Paged decode cache: attention K/V live in a shared block pool
     ``(n_layer_blocks, n_pool_blocks, block_size, kv, hd)`` indexed through
     per-request block tables; SSM/conv state has no sequence axis to page,
     so those leaves keep the per-slot ``(n_layer_blocks, n_slots, ...)``
     layout of ``init_cache``.  The caller reserves one pool index as the
-    trash block that unallocated table entries point at."""
+    trash block that unallocated table entries point at.
+
+    ``n_shards``: sharded serving layout — pool leaves gain a leading
+    shard axis ``(n_layer_blocks, n_shards, n_pool_blocks, block_size,
+    kv, hd)`` (the caller passes the PER-SHARD block count incl. the
+    per-shard trash as ``n_pool_blocks`` and lays the shard axis out
+    ``P(None, "data", ...)``)."""
     kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
     h, hdm, g, ds, w = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state, cfg.conv_width
 
     def mk(shape, dt):
         return jnp.zeros((cfg.n_blocks,) + shape, dt)
 
+    pool_shape = (n_pool_blocks, block_size, kv, hd)
+    if n_shards is not None:
+        pool_shape = (n_shards,) + pool_shape
     blk = {}
     for j in range(cfg.scan_period):
         if cfg.mixer_kind(j) == "attn":
             blk[f"pos{j}"] = {
-                "k": mk((n_pool_blocks, block_size, kv, hd), dtype),
-                "v": mk((n_pool_blocks, block_size, kv, hd), dtype),
+                "k": mk(pool_shape, dtype),
+                "v": mk(pool_shape, dtype),
             }
         else:
             blk[f"pos{j}"] = {
@@ -294,21 +305,30 @@ def paged_copy_block(cfg: ModelConfig, cache, src, dst):
     prompt token's K/V write lands in it); the engine allocates ``dst``
     privately, copies, and repoints the request's table before the
     row's first mixed-dispatch write runs.  Per-slot (SSM/conv) leaves
-    have no block axis and pass through untouched."""
+    have no block axis and pass through untouched.  Sharded pool leaves
+    (6-D, see ``init_paged_cache``) copy between GLOBAL ids' (shard,
+    local) coordinates — prefix chains are row-affine, so src and dst
+    share a shard, but the copy is correct either way."""
+
+    def copy(leaf):
+        if leaf.ndim == 6:
+            n_local = leaf.shape[2] - 1
+            s_src, l_src = src // n_local, src % n_local
+            s_dst, l_dst = dst // n_local, dst % n_local
+            return leaf.at[:, s_dst, l_dst].set(leaf[:, s_src, l_src])
+        return leaf.at[:, dst].set(jnp.take(leaf, src, axis=1))
+
     out = {}
     for key, sub in cache.items():
         if "k" in sub:
-            out[key] = {
-                kk: leaf.at[:, dst].set(jnp.take(leaf, src, axis=1))
-                for kk, leaf in sub.items()
-            }
+            out[key] = {kk: copy(leaf) for kk, leaf in sub.items()}
         else:
             out[key] = sub
     return out
 
 
 def mixed_step(cfg: ModelConfig, pol: ShardingPolicy, params, tokens, cache,
-               block_tables, q_start, q_len, block_size: int):
+               block_tables, q_start, q_len, block_size: int, mesh=None):
     """UNIFIED engine step: one layer-stack pass over a mixed batch of
     prefill chunks and decode rows against the paged cache — the ONE
     dispatch the unified serving path issues per engine step, replacing
@@ -331,14 +351,14 @@ def mixed_step(cfg: ModelConfig, pol: ShardingPolicy, params, tokens, cache,
     positions = q_start[:, None] + jnp.arange(w, dtype=jnp.int32)[None, :]
     h, cache, _ = _run_blocks(
         cfg, pol, params, h, positions, mode="mixed", cache=cache,
-        paged=(block_tables, block_size, q_len),
+        paged=(block_tables, block_size, q_len, mesh),
     )
     h = L.rmsnorm(h, params["final_norm"], cfg.norm_eps)
     return L.head_apply(cfg, pol, params, h), cache
 
 
 def verify_step(cfg: ModelConfig, pol: ShardingPolicy, params, tokens, cache,
-                block_tables, q_start, q_len, block_size: int):
+                block_tables, q_start, q_len, block_size: int, mesh=None):
     """Speculative draft-k/verify-1 target pass: score ``k + 1`` candidate
     positions per row in ONE dispatch.
 
@@ -357,7 +377,8 @@ def verify_step(cfg: ModelConfig, pol: ShardingPolicy, params, tokens, cache,
     decode lanes; ``q_len == 0`` rows are inert (K/V to the trash
     block).  Returns ``(logits (B, W, V), cache)``."""
     return mixed_step(
-        cfg, pol, params, tokens, cache, block_tables, q_start, q_len, block_size
+        cfg, pol, params, tokens, cache, block_tables, q_start, q_len, block_size,
+        mesh=mesh,
     )
 
 
@@ -393,7 +414,7 @@ def prefill(cfg: ModelConfig, pol: ShardingPolicy, params, batch, cache_len: int
 
 
 def decode_step(cfg: ModelConfig, pol: ShardingPolicy, params, cache, tokens, pos,
-                block_tables=None, block_size: int = 0):
+                block_tables=None, block_size: int = 0, mesh=None):
     """One decode step.  tokens: (B,1) int32; pos: scalar int32 write
     position (attention sees [0..pos]) or (B,) per-row positions for
     ragged batches.  With ``block_tables`` (``(B, n_max_blocks)`` int32,
@@ -403,7 +424,7 @@ def decode_step(cfg: ModelConfig, pol: ShardingPolicy, params, cache, tokens, po
     h = L.embed_apply(cfg, pol, params["embed"], tokens)
     pos = jnp.asarray(pos, jnp.int32)
     positions = jnp.broadcast_to(pos[:, None] if pos.ndim == 1 else pos, tokens.shape)
-    paged = None if block_tables is None else (block_tables, block_size)
+    paged = None if block_tables is None else (block_tables, block_size, mesh)
     h, cache, _ = _run_blocks(
         cfg, pol, params, h, positions, mode="decode", cache=cache, pos=pos, paged=paged
     )

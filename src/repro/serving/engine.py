@@ -239,6 +239,19 @@ class ServeConfig:
     # ``configs/smollm_360m``) sharing the target's vocab
     draft_config: ModelConfig | None = None
     draft_params: object | None = None
+    # sharded paged serving (paged-only): partition the KV block pool
+    # over ``shards`` devices on a "data" mesh axis — pool leaves become
+    # ``(n_layer_blocks, shards, n_pool_blocks/shards + 1, bs, kv, hd)``
+    # laid out ``P(None, "data", ...)`` and every engine step runs the
+    # DISTRIBUTED mixed dispatch (per-shard scatter + partials, merged by
+    # ``dist_decode.combine_partials``).  Allocation is row-affine (a
+    # request's whole chain on one shard), which makes ``shards=N``
+    # bit-identical to ``shards=1`` for the same admission order.
+    # ``None`` (default) keeps the single-device unsharded path
+    # byte-for-byte; note ``shards=1`` runs the sharded machinery (the
+    # bitwise reference for N > 1) and differs from ``None`` only by
+    # flash-partials reassociation
+    shards: int | None = None
 
 
 class ServeEngine:
@@ -266,6 +279,42 @@ class ServeEngine:
                 )
             self._n_pool_blocks = n_pool
             self._trash_block = n_pool  # extra pool index for masked writes
+        # sharded pool geometry + mesh (built once, a closure constant of
+        # every jitted step so shard_map never retraces on it)
+        self._shards = scfg.shards
+        self._mesh = None
+        if scfg.shards is not None:
+            if not scfg.paged:
+                raise ValueError(
+                    "shards (sharded paged serving) requires paged=True: only "
+                    "the block pool partitions over the mesh"
+                )
+            if scfg.shards < 1:
+                raise ValueError(f"shards={scfg.shards} must be >= 1")
+            if self._n_pool_blocks % scfg.shards:
+                raise ValueError(
+                    f"n_pool_blocks={self._n_pool_blocks} must divide evenly "
+                    f"over shards={scfg.shards}"
+                )
+            self._n_local = self._n_pool_blocks // scfg.shards
+            if self._n_local < self._blocks_per_slot:
+                raise ValueError(
+                    f"per-shard pool ({self._n_local} blocks) cannot hold one "
+                    f"max-size request ({self._blocks_per_slot} blocks): "
+                    "allocation is row-affine, a request never spans shards"
+                )
+            devs = jax.devices()
+            if len(devs) < scfg.shards:
+                raise ValueError(
+                    f"shards={scfg.shards} needs that many devices, have "
+                    f"{len(devs)} (CPU: set XLA_FLAGS="
+                    "--xla_force_host_platform_device_count before importing jax)"
+                )
+            from repro.runtime import compat
+
+            self._mesh = compat.make_mesh(
+                np.array(devs[: scfg.shards]), ("data",)
+            )
         if scfg.prefix_cache and not scfg.paged:
             raise ValueError(
                 "prefix_cache=True requires paged=True: block tables are "
@@ -438,9 +487,18 @@ class ServeEngine:
 
         def is_pool_leaf(leaf):
             # pool-indexed K/V leaves: (n_layer_blocks, n_pool + 1, bs, ...)
+            # unsharded, (n_layer_blocks, shards, n_local + 1, bs, ...) sharded
+            if not scfg.paged:
+                return False
+            if self._shards is not None:
+                return (
+                    leaf.ndim >= 4
+                    and leaf.shape[1] == self._shards
+                    and leaf.shape[2] == self._n_local + 1
+                    and leaf.shape[3] == bs
+                )
             return (
-                scfg.paged
-                and leaf.ndim >= 3
+                leaf.ndim >= 3
                 and leaf.shape[1] == self._n_pool_blocks + 1
                 and leaf.shape[2] == bs
             )
@@ -450,12 +508,18 @@ class ServeEngine:
         def upload_block(cache, payload, b):
             """Re-admission upload: host-tier K/V payload (one array per
             pool leaf, in ``jax.tree.leaves`` order) lands in pool block
-            ``b``.  One trace total — every block has the same shape."""
+            ``b``.  One trace total — every block has the same shape.  On
+            a sharded pool the GLOBAL id resolves to (shard, local), so
+            the payload lands on the chunk's recorded owning shard."""
             leaves, treedef = jax.tree.flatten(cache)
             out, j = [], 0
             for leaf in leaves:
                 if is_pool_leaf(leaf):
-                    out.append(leaf.at[:, b].set(payload[j].astype(leaf.dtype)))
+                    if self._shards is not None:
+                        s, l = b // self._n_local, b % self._n_local
+                        out.append(leaf.at[:, s, l].set(payload[j].astype(leaf.dtype)))
+                    else:
+                        out.append(leaf.at[:, b].set(payload[j].astype(leaf.dtype)))
                     j += 1
                 else:
                     out.append(leaf)
@@ -481,7 +545,8 @@ class ServeEngine:
             q_start = jnp.where(is_decode, lengths + emitted - 1, q_start_h)
             tok = tok.at[:, 0].set(jnp.where(is_decode, cur, tok[:, 0]))
             logits, cache = LM.mixed_step(
-                cfg, pol, params, tok, cache, tables, q_start, q_len, bs
+                cfg, pol, params, tok, cache, tables, q_start, q_len, bs,
+                mesh=self._mesh,
             )
             last = jnp.take_along_axis(
                 logits, jnp.maximum(q_len - 1, 0)[:, None, None], axis=1
@@ -538,7 +603,8 @@ class ServeEngine:
                 jnp.where(is_spec[:, None], drafts, tok[:, 1 : kd + 1])
             )
             logits, cache = LM.verify_step(
-                cfg, pol, params, tok, cache, tables, q_start, q_len, bs
+                cfg, pol, params, tok, cache, tables, q_start, q_len, bs,
+                mesh=self._mesh,
             )
             # fill rows: next token off the chunk's last live lane
             last = jnp.take_along_axis(
@@ -598,7 +664,7 @@ class ServeEngine:
                     tok, dc, c = st
                     logits, dc = LM.mixed_step(
                         dcfg, pol, dparams, tok[:, None], dc, d_dec_tables,
-                        dec_pos + t, one, bs,
+                        dec_pos + t, one, bs, mesh=self._mesh,
                     )
                     nxt = jnp.argmax(logits[:, -1, :], -1).astype(jnp.int32)
                     return nxt, dc, c.at[:, t].set(nxt)
@@ -612,7 +678,7 @@ class ServeEngine:
                 # proposed positions, not just the k-1 the loop feeds
                 _, dcache = LM.mixed_step(
                     dcfg, pol, dparams, last[:, None], dcache, d_dec_tables,
-                    dec_pos + kd, one, bs,
+                    dec_pos + kd, one, bs, mesh=self._mesh,
                 )
                 return c, dcache
 
@@ -631,7 +697,7 @@ class ServeEngine:
                 block."""
                 _, dcache = LM.mixed_step(
                     dcfg, pol, dparams, d_tok, dcache, d_tables,
-                    d_q_start, d_q_len, bs,
+                    d_q_start, d_q_len, bs, mesh=self._mesh,
                 )
                 return draft_body(dparams, dcache, cur, dec_pos, d_dec_tables)
 
@@ -666,6 +732,7 @@ class ServeEngine:
                         logits, cache = LM.decode_step(
                             cfg, pol, params, cache, cur[:, None],
                             lengths + emitted - 1, block_tables=tables, block_size=bs,
+                            mesh=self._mesh,
                         )
                     else:
                         logits, cache = LM.decode_step(
@@ -722,11 +789,32 @@ class ServeEngine:
         """Device cache for the continuous path in the configured layout."""
         dtype = jnp.dtype(self.cfg.dtype)
         if self.scfg.paged:
+            if self._shards is not None:
+                # per-shard slice holds its n_local blocks + its own trash
+                return LM.init_paged_cache(
+                    self.cfg, self._n_local + 1, self.scfg.block_size,
+                    self.scfg.max_batch, dtype=dtype, n_shards=self._shards,
+                )
             return LM.init_paged_cache(
                 self.cfg, self._n_pool_blocks + 1, self.scfg.block_size,
                 self.scfg.max_batch, dtype=dtype,
             )
         return LM.init_cache(self.cfg, self.scfg.max_batch, self._cache_len, dtype=dtype)
+
+    def _place_sharded(self, cache):
+        """Lay a sharded paged cache out over the mesh: pool leaves split
+        on the shard axis ``P(None, "data", ...)``, per-slot leaves
+        replicated — each device then holds exactly its shard's blocks."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        pool_s = NamedSharding(self._mesh, P(None, "data"))
+        repl_s = NamedSharding(self._mesh, P())
+        return jax.tree.map(
+            lambda leaf: jax.device_put(
+                leaf, pool_s if self._is_pool_leaf(leaf) else repl_s
+            ),
+            cache,
+        )
 
     def cache_nbytes(self) -> int:
         """HBM held by the continuous-path decode cache (both layouts),
@@ -742,11 +830,19 @@ class ServeEngine:
         """Demotion callback for the tiered prefix cache: pull pool block
         ``b``'s K/V to host (one array per pool leaf, ``jax.tree.leaves``
         order) and return ``(payload, nbytes)``."""
-        payload = [
-            np.asarray(leaf[:, b])
-            for leaf in jax.tree.leaves(self._cache)
-            if self._is_pool_leaf(leaf)
-        ]
+        if self._shards is not None:
+            s, l = b // self._n_local, b % self._n_local
+            payload = [
+                np.asarray(leaf[:, s, l])
+                for leaf in jax.tree.leaves(self._cache)
+                if self._is_pool_leaf(leaf)
+            ]
+        else:
+            payload = [
+                np.asarray(leaf[:, b])
+                for leaf in jax.tree.leaves(self._cache)
+                if self._is_pool_leaf(leaf)
+            ]
         return payload, int(sum(p.nbytes for p in payload))
 
     def _ensure_paged_state(self):
@@ -755,26 +851,40 @@ class ServeEngine:
         if self._pool is not None:
             return
         scfg = self.scfg
-        self._pool = BlockPool(self._n_pool_blocks, scfg.block_size)
+        n_shards = self._shards if self._shards is not None else 1
+        self._pool = BlockPool(self._n_pool_blocks, scfg.block_size, n_shards=n_shards)
         self._row_tables = [BlockTable(self._pool) for _ in range(scfg.max_batch)]
         # every unallocated (or free-slot) table entry points at the
         # trash block, so masked writes can never land in live blocks
+        # (on a sharded pool the global trash id resolves to every
+        # shard's local trash — its "shard" n_pool // n_local matches none)
         self._tables_h = np.full(
             (scfg.max_batch, self._blocks_per_slot), self._trash_block, np.int32
         )
         self._cache = self._init_serve_cache()
+        if self._shards is not None:
+            self._cache = self._place_sharded(self._cache)
         if scfg.draft_k > 0:
-            self._draft_pool = BlockPool(self._n_pool_blocks, scfg.block_size)
+            self._draft_pool = BlockPool(
+                self._n_pool_blocks, scfg.block_size, n_shards=n_shards
+            )
             self._draft_row_tables = [
                 BlockTable(self._draft_pool) for _ in range(scfg.max_batch)
             ]
             self._draft_tables_h = np.full(
                 (scfg.max_batch, self._blocks_per_slot), self._trash_block, np.int32
             )
-            self._draft_cache = LM.init_paged_cache(
-                self._draft_cfg, self._n_pool_blocks + 1, scfg.block_size,
-                scfg.max_batch, dtype=jnp.dtype(self._draft_cfg.dtype),
-            )
+            if self._shards is not None:
+                self._draft_cache = self._place_sharded(LM.init_paged_cache(
+                    self._draft_cfg, self._n_local + 1, scfg.block_size,
+                    scfg.max_batch, dtype=jnp.dtype(self._draft_cfg.dtype),
+                    n_shards=self._shards,
+                ))
+            else:
+                self._draft_cache = LM.init_paged_cache(
+                    self._draft_cfg, self._n_pool_blocks + 1, scfg.block_size,
+                    scfg.max_batch, dtype=jnp.dtype(self._draft_cfg.dtype),
+                )
         if scfg.prefix_cache:
             store = (
                 HostBlockStore(scfg.spill_bytes)
@@ -1205,6 +1315,9 @@ class ServeEngine:
                     free_slots=B - len(active),
                     free_blocks=pool.free_blocks,
                     reclaimable_blocks=pool.reclaimable_blocks if index is not None else None,
+                    # drafter-pool headroom: without it a d_broken (drafter
+                    # OOM) degradation is invisible in the memory gauges
+                    draft_free_blocks=d_pool.free_blocks if spec else None,
                 )
                 report_prefix()
                 scheduler.record_dispatch_stats(

@@ -57,6 +57,23 @@ shaped ``(n_layers, n_pool, block_size, ...)``), performs the
 device->host fetch at demotion and the host->device upload at
 re-admission, and keeps the device copy of the block tables.
 
+**Sharded pools** (``BlockPool(n_blocks, bs, n_shards=N)``): global
+block ids partition into N contiguous per-shard ranges of ``n_blocks //
+N`` each (``shard_of(b) = b // n_local``), matching device pool leaves
+laid out ``(n_layers, n_shards, n_local + 1, block_size, kv, hd)`` and
+sharded ``P(None, "data", ...)`` — each device holds exactly its own
+shard's blocks plus a per-shard trash block at local index ``n_local``.
+The allocator stays a single host-side global authority; allocation is
+shard-local and **row-affine**: a ``BlockTable`` pins its shard on first
+alloc, a ``PrefixIndex`` chain records its shard at insert and keeps it
+across demotion, so every request's whole KV chain (and its cached
+prefixes) lives on exactly one shard.  The spill tier stays keyed by
+global block id / trie node; re-admission allocates on the recorded
+owning shard so the engine's ``device_put`` lands the payload back on
+the same device.  Row affinity is what lets the distributed mixed
+dispatch mask non-owner shards to exact zeros and combine partials
+bit-identically to a single-shard run (see ``serving/dist_decode.py``).
+
 Contracts / invariants (property-tested in tests/test_kv_cache.py):
   * ``alloc(n)`` is all-or-nothing: it returns ``n`` block ids or raises
     ``BlockPoolOOM`` without allocating anything (``try_alloc`` returns
@@ -110,24 +127,63 @@ class BlockPool:
     registered ``evictor`` under pressure).  Without a registered
     evictor (plain paged serving, no prefix cache) blocks never park and
     the pool degenerates to the PR-4 alloc/free manager.
+
+    **Sharded pools** (``n_shards > 1``): global block ids partition into
+    ``n_shards`` contiguous ranges of ``n_blocks // n_shards`` ids each;
+    block ``b`` lives on shard ``b // (n_blocks // n_shards)``.  The
+    allocator stays a single host-side authority, but every allocation is
+    shard-local (one LIFO free list per shard) so a request's whole block
+    table lands on ONE shard — the row-affinity contract the distributed
+    mixed dispatch's exact-zero masking depends on.  ``alloc`` with no
+    explicit shard picks the shard with the most headroom (ties break
+    low), and ``can_alloc`` answers "could some single shard hold n".
+    With ``n_shards == 1`` every path reduces bit-for-bit to the
+    unsharded allocator (same LIFO order, same eviction order).
     """
 
-    def __init__(self, n_blocks: int, block_size: int):
+    def __init__(self, n_blocks: int, block_size: int, n_shards: int = 1):
         if n_blocks <= 0 or block_size <= 0:
             raise ValueError(f"need positive pool dims, got {n_blocks}x{block_size}")
+        if n_shards <= 0 or n_blocks % n_shards:
+            raise ValueError(
+                f"n_blocks={n_blocks} must divide evenly over n_shards={n_shards}"
+            )
         self.n_blocks = int(n_blocks)
         self.block_size = int(block_size)
-        # LIFO: block 0 is handed out first, and a just-freed block is the
-        # next one reused (cache-friendly and deterministic)
-        self._free = list(range(self.n_blocks - 1, -1, -1))
+        self.n_shards = int(n_shards)
+        self._n_local = self.n_blocks // self.n_shards
+        # LIFO per shard: the shard's lowest block id is handed out first,
+        # and a just-freed block is the next one reused (cache-friendly
+        # and deterministic); with one shard this is the classic flat list
+        self._frees = [
+            list(range((s + 1) * self._n_local - 1, s * self._n_local - 1, -1))
+            for s in range(self.n_shards)
+        ]
         self._ref: dict[int, int] = {}  # owned blocks -> refcount >= 1
         self._parked: set[int] = set()  # zero-ref cached blocks (reclaimable)
         self._cached: set[int] = set()  # blocks a PrefixIndex holds (owned or parked)
         self.evictor: Any = None  # PrefixIndex registers itself here
 
     @property
+    def _free(self) -> list[int]:
+        """Flat view of every free block id (read-only; shard lists are
+        authoritative)."""
+        return [b for fl in self._frees for b in fl]
+
+    @property
     def free_blocks(self) -> int:
-        return len(self._free)
+        return sum(len(fl) for fl in self._frees)
+
+    @property
+    def free_blocks_by_shard(self) -> list[int]:
+        return [len(fl) for fl in self._frees]
+
+    def shard_of(self, b: int) -> int:
+        """Owning shard of block ``b`` (its global id's range)."""
+        return int(b) // self._n_local
+
+    def _parked_on(self, shard: int) -> int:
+        return sum(1 for b in self._parked if b // self._n_local == shard)
 
     @property
     def used_blocks(self) -> int:
@@ -144,39 +200,58 @@ class BlockPool:
     def is_parked(self, b: int) -> bool:
         return b in self._parked
 
-    def can_alloc(self, n: int) -> bool:
-        """Could ``alloc(n)`` succeed?  Counts parked blocks only when an
-        evictor is registered to actually reclaim them."""
-        avail = len(self._free) + (len(self._parked) if self.evictor is not None else 0)
-        return n <= avail
+    def _headroom(self, shard: int) -> int:
+        return len(self._frees[shard]) + (
+            self._parked_on(shard) if self.evictor is not None else 0
+        )
 
-    def _make_room(self, n: int) -> None:
-        while len(self._free) < n and self.evictor is not None:
-            if not self.evictor.evict_one():
+    def pick_shard(self, n: int) -> int:
+        """Shard with the most headroom (free + reclaimable-parked); ties
+        break toward the lowest shard id for deterministic replays."""
+        return max(range(self.n_shards), key=lambda s: (self._headroom(s), -s))
+
+    def can_alloc(self, n: int, shard: int | None = None) -> bool:
+        """Could ``alloc(n)`` succeed?  Counts parked blocks only when an
+        evictor is registered to actually reclaim them.  All ``n`` blocks
+        must come from ONE shard (row affinity); ``shard=None`` asks
+        whether the best shard could hold them."""
+        if shard is None:
+            shard = self.pick_shard(n)
+        return n <= self._headroom(shard)
+
+    def _make_room(self, n: int, shard: int) -> None:
+        while len(self._frees[shard]) < n and self.evictor is not None:
+            if not self.evictor.evict_one(shard=shard):
                 break
 
-    def alloc(self, n: int) -> list[int]:
-        """Take ``n`` blocks at refcount 1; all-or-nothing (raises
-        BlockPoolOOM).  Under pressure, parked prefix blocks are demoted
-        to the host tier (or evicted outright) LRU-first before giving
-        up."""
+    def alloc(self, n: int, shard: int | None = None) -> list[int]:
+        """Take ``n`` blocks at refcount 1 from one shard; all-or-nothing
+        (raises BlockPoolOOM).  Under pressure, parked prefix blocks *on
+        that shard* are demoted to the host tier (or evicted outright)
+        LRU-first before giving up.  ``shard=None`` picks the shard with
+        the most headroom."""
         if n < 0:
             raise ValueError(f"alloc({n})")
-        self._make_room(n)
-        if n > len(self._free):
+        if shard is None:
+            shard = self.pick_shard(n)
+        self._make_room(n, shard)
+        fl = self._frees[shard]
+        if n > len(fl):
             raise BlockPoolOOM(
-                f"need {n} blocks, {len(self._free)} free "
-                f"(+{len(self._parked)} parked)"
+                f"need {n} blocks on shard {shard}, {len(fl)} free "
+                f"(+{self._parked_on(shard)} parked)"
             )
-        ids = [self._free.pop() for _ in range(n)]
+        ids = [fl.pop() for _ in range(n)]
         for b in ids:
             self._ref[b] = 1
         return ids
 
-    def try_alloc(self, n: int) -> list[int] | None:
+    def try_alloc(self, n: int, shard: int | None = None) -> list[int] | None:
         """Like ``alloc`` but returns None on OOM (the chunk-boundary grow
         path treats OOM as an early-retire signal, not an error)."""
-        return self.alloc(n) if self.can_alloc(n) else None
+        if shard is None and self.n_shards > 1:
+            shard = self.pick_shard(n)
+        return self.alloc(n, shard=shard) if self.can_alloc(n, shard=shard) else None
 
     def share(self, ids) -> None:
         """Increment the refcount of owned blocks: a second table now
@@ -224,8 +299,10 @@ class BlockPool:
                     self._parked.add(b)
                 else:
                     recycled.append(b)
-        # reversed: freeing [a, b] then allocating 2 returns [a, b] again
-        self._free.extend(reversed(recycled))
+        # reversed: freeing [a, b] then allocating 2 returns [a, b] again;
+        # each block returns to its owning shard's list
+        for b in reversed(recycled):
+            self._frees[self.shard_of(b)].append(b)
 
     # ---- prefix-index hooks ----
     def mark_cached(self, b: int) -> None:
@@ -241,7 +318,7 @@ class BlockPool:
             raise ValueError(f"recycle_parked of non-parked block {b}")
         self._parked.remove(b)
         self._cached.discard(b)
-        self._free.append(b)
+        self._frees[self.shard_of(b)].append(b)
 
     def unmark_cached(self, b: int) -> None:
         """Drop the prefix-index claim on a block whose cached chunk was
@@ -252,7 +329,7 @@ class BlockPool:
         self._cached.discard(b)
         if b in self._parked:
             self._parked.remove(b)
-            self._free.append(b)
+            self._frees[self.shard_of(b)].append(b)
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return (
@@ -270,11 +347,17 @@ class BlockTable:
     decrement: shared prefix blocks survive under their other owners or
     park in the prefix index); ``n_tokens_capacity`` is the highest
     position count the table can currently hold.
+
+    On a sharded pool the first allocation pins the table's ``shard``
+    (the pool's pick); every later grow allocates on the same shard, so
+    a request's entire KV chain is resident on one shard — the
+    row-affinity invariant behind the distributed dispatch's bit-parity.
     """
 
     def __init__(self, pool: BlockPool):
         self.pool = pool
         self.ids: list[int] = []
+        self.shard: int | None = None
 
     @property
     def n_blocks(self) -> int:
@@ -290,10 +373,11 @@ class BlockTable:
         need = blocks_for(n_tokens, self.pool.block_size) - len(self.ids)
         if need <= 0:
             return True
-        got = self.pool.try_alloc(need)
+        got = self.pool.try_alloc(need, shard=self.shard)
         if got is None:
             return False
         self.ids.extend(got)
+        self.shard = self.pool.shard_of(self.ids[0])
         return True
 
     def adopt(self, ids) -> None:
@@ -301,11 +385,13 @@ class BlockTable:
         chain + freshly alloc'd suffix blocks, in logical order)."""
         assert not self.ids, "adopt into a non-empty table"
         self.ids = list(ids)
+        self.shard = self.pool.shard_of(self.ids[0]) if self.ids else None
 
     def release(self) -> None:
         if self.ids:
             self.pool.free(self.ids)
             self.ids = []
+        self.shard = None
 
 
 class HostBlockStore:
@@ -382,16 +468,21 @@ class _Node:
     """One cached chunk: trie node keyed by its chunk tokens under its
     parent.  Device-backed (``block`` is a pool id) or spilled
     (``block is None``; payload lives in the host store keyed by this
-    node)."""
+    node).  ``shard`` is the owning shard recorded when the chunk was
+    first cached; it survives demotion (``block is None`` keeps the
+    coordinate) so re-admission can ``device_put`` the payload back onto
+    the same shard's pool slice."""
 
-    __slots__ = ("chunk", "block", "parent", "children", "stamp")
+    __slots__ = ("chunk", "block", "parent", "children", "stamp", "shard")
 
-    def __init__(self, chunk: tuple, block: int | None, parent: "_Node | None", stamp: int):
+    def __init__(self, chunk: tuple, block: int | None, parent: "_Node | None", stamp: int,
+                 shard: int = 0):
         self.chunk = chunk
         self.block = block
         self.parent = parent
         self.children: dict[tuple, _Node] = {}
         self.stamp = stamp
+        self.shard = shard
 
 
 class PrefixPlan:
@@ -422,9 +513,10 @@ class PrefixPlan:
     """
 
     __slots__ = ("tokens", "nodes", "shared", "readmit", "cow_node", "cow_src",
-                 "host_cow", "n_fresh", "start", "n_tokens", "uploads")
+                 "host_cow", "n_fresh", "start", "n_tokens", "uploads", "shard")
 
-    def __init__(self, tokens, nodes, shared, readmit, cow_node, n_fresh, start, n_tokens):
+    def __init__(self, tokens, nodes, shared, readmit, cow_node, n_fresh, start, n_tokens,
+                 shard: int = 0):
         self.tokens = tokens
         self.nodes = nodes  # matched trie nodes, root-first
         self.shared = shared  # device block ids shared by reference
@@ -436,6 +528,7 @@ class PrefixPlan:
         self.start = start
         self.n_tokens = n_tokens  # L (prompt length within the window)
         self.uploads: list[tuple[Any, int]] = []
+        self.shard = shard  # every block in this plan lives here
 
 
 class PrefixIndex:
@@ -535,15 +628,24 @@ class PrefixIndex:
         shared = [n.block for n in chain if n.block is not None]
         readmit = [n for n in chain if n.block is None]
         n_fresh = n_total - len(chain) - (1 if cow is not None else 0)
-        # feasibility: fresh + re-admitted + COW copy must come from free
-        # blocks plus parked blocks OUTSIDE the plan's own device chain
-        # (evicting a block we are about to share/copy is self-defeating)
-        pinned = {n.block for n in nodes if n.block is not None}
-        reclaimable = sum(1 for b in self.pool._parked if b not in pinned)
         need = n_fresh + len(readmit) + (1 if cow is not None else 0)
-        if need > self.pool.free_blocks + reclaimable:
+        # row affinity: a matched chain pins the plan to the chain's
+        # recorded shard (re-admitted chunks go back where they lived);
+        # a cold miss goes to the shard with the most headroom
+        shard = nodes[0].shard if nodes else self.pool.pick_shard(need)
+        # feasibility: fresh + re-admitted + COW copy must come from free
+        # blocks plus parked blocks ON THE PLAN'S SHARD and OUTSIDE the
+        # plan's own device chain (evicting a block we are about to
+        # share/copy is self-defeating)
+        pinned = {n.block for n in nodes if n.block is not None}
+        reclaimable = sum(
+            1 for b in self.pool._parked
+            if b not in pinned and self.pool.shard_of(b) == shard
+        )
+        if need > self.pool.free_blocks_by_shard[shard] + reclaimable:
             return None
-        return PrefixPlan(tokens, nodes, shared, readmit, cow, n_fresh, start, L)
+        return PrefixPlan(tokens, nodes, shared, readmit, cow, n_fresh, start, L,
+                          shard=shard)
 
     def commit(self, plan: PrefixPlan) -> tuple[list[int], int | None]:
         """Execute a plan: acquire the shared device chain (share /
@@ -587,7 +689,10 @@ class PrefixIndex:
         if plan.host_cow:
             self._pinned_spilled.add(plan.cow_node)
         try:
-            got = pool.alloc(plan.n_fresh + len(plan.readmit) + (1 if cow else 0))
+            got = pool.alloc(
+                plan.n_fresh + len(plan.readmit) + (1 if cow else 0),
+                shard=plan.shard,
+            )
         except BlockPoolOOM:
             # plan() said feasible and the consumer is single-threaded,
             # so this means the caller raced the pool — unwind loudly
@@ -635,7 +740,7 @@ class PrefixIndex:
 
     def _insert_child(self, parent: _Node, chunk: tuple, block: int, stamp: int) -> _Node:
         assert chunk not in parent.children, "duplicate chunk insert"
-        node = _Node(chunk, block, parent, stamp)
+        node = _Node(chunk, block, parent, stamp, shard=self.pool.shard_of(block))
         parent.children[chunk] = node
         self._node_of_block[block] = node
         self.pool.mark_cached(block)
@@ -686,15 +791,19 @@ class PrefixIndex:
             self._spilled.discard(child)
             del node.children[child.chunk]
 
-    def evict_one(self) -> bool:
+    def evict_one(self, shard: int | None = None) -> bool:
         """Free one device block from the cache, LRU-first among parked
         chunks whose children are already off-device.  With a spill
         store the chunk is *demoted* (payload fetched to host, node
         repointed off-device); without one — or when the store cannot fit
         it — the chunk (and any spilled subtree chaining on it) is
-        dropped outright.  Returns False when nothing is reclaimable."""
+        dropped outright.  ``shard`` restricts victims to that shard's
+        blocks (shard-local allocation pressure must free shard-local
+        blocks).  Returns False when nothing is reclaimable."""
         cands: list[_Node] = []
         for b in self.pool._parked:
+            if shard is not None and self.pool.shard_of(b) != shard:
+                continue
             node = self._node_of_block.get(b)
             if node is None or not self._demotable(node):
                 continue

@@ -410,22 +410,27 @@ class Scheduler:
             self._dispatch = None
 
     def record_occupancy(self, *, free_slots: int | None = None, free_blocks: int | None = None,
-                         reclaimable_blocks: int | None = None):
+                         reclaimable_blocks: int | None = None,
+                         draft_free_blocks: int | None = None):
         """Engine-side memory gauges, sampled once per scheduler pass.
 
         ``free_slots``: open decode slots right now; ``free_blocks``: free
-        KV blocks (paged engines only — contiguous engines pass None);
-        ``reclaimable_blocks``: parked zero-ref prefix-cache blocks the
-        pool can evict under pressure (prefix-cache engines only).
-        Keeps the last sample plus the running minimum of each, so "how
-        close did serving get to the memory wall" (peak concurrency =
-        ``max_batch - min_free_slots``, block headroom =
+        KV blocks in the TARGET pool (paged engines only — contiguous
+        engines pass None); ``reclaimable_blocks``: parked zero-ref
+        prefix-cache blocks the pool can evict under pressure
+        (prefix-cache engines only); ``draft_free_blocks``: free blocks
+        in the DRAFTER's pool (speculative engines only — a drafter-side
+        OOM breaks speculation for the row, so its headroom needs its own
+        gauge).  Keeps the last sample plus the running minimum of each,
+        so "how close did serving get to the memory wall" (peak
+        concurrency = ``max_batch - min_free_slots``, block headroom =
         ``min_free_blocks`` + reclaimable) is answerable after the fact."""
         with self._lock:
             for key, val in (
                 ("free_slots", free_slots),
                 ("free_blocks", free_blocks),
                 ("reclaimable_blocks", reclaimable_blocks),
+                ("draft_free_blocks", draft_free_blocks),
             ):
                 if val is None:
                     continue

@@ -37,7 +37,8 @@ class FakeLM:
         return logits, FakeLM.init_cache(cfg, tokens.shape[0], cache_len)
 
     @staticmethod
-    def decode_step(cfg, pol, params, cache, tokens, pos, block_tables=None, block_size=0):
+    def decode_step(cfg, pol, params, cache, tokens, pos, block_tables=None, block_size=0,
+                    mesh=None):
         return FakeLM._logits(tokens, FakeLM._offset(params)), cache
 
     @staticmethod
@@ -46,7 +47,8 @@ class FakeLM:
         return {"dummy": jnp.zeros((1, batch, 1), jnp.float32)}
 
     @staticmethod
-    def init_paged_cache(cfg, n_pool_blocks, block_size, n_slots, dtype=jnp.float32):
+    def init_paged_cache(cfg, n_pool_blocks, block_size, n_slots, dtype=jnp.float32,
+                         n_shards=None):
         # stateless model: the paged cache carries no information either,
         # but keeps the per-slot leaf contract so slot scatters typecheck
         return {"dummy": jnp.zeros((1, n_slots, 1), jnp.float32)}
@@ -57,14 +59,14 @@ class FakeLM:
 
     @staticmethod
     def mixed_step(cfg, pol, params, tokens, cache, block_tables, q_start, q_len,
-                   block_size):
+                   block_size, mesh=None):
         # stateless next-token rule: per-lane logits are all the unified
         # engine reads (it takes lane q_len - 1), so no pool K/V needed
         return FakeLM._logits(tokens, FakeLM._offset(params)), cache
 
     @staticmethod
     def verify_step(cfg, pol, params, tokens, cache, block_tables, q_start, q_len,
-                    block_size):
+                    block_size, mesh=None):
         # the stateless rule is position-free, so per-lane verify logits
         # ARE the plain-decode logits — same contract as LM.verify_step
         return FakeLM.mixed_step(

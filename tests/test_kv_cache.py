@@ -206,18 +206,24 @@ def test_prefix_plan_excludes_own_chain_from_reclaimable():
 # property tests: random alloc/share/free/evict traffic
 # ------------------------------------------------------------------ #
 @given(
-    n_blocks=st.integers(1, 24),
+    n_shards=st.sampled_from([1, 2, 4]),
+    blocks_per_shard=st.integers(1, 6),
     seed=st.integers(0, 2**16),
 )
 @settings(max_examples=25, deadline=None)
-def test_pool_random_traffic_invariants(n_blocks, seed):
+def test_pool_random_traffic_invariants(n_shards, blocks_per_shard, seed):
     """Random alloc/share/free interleavings: refcounts never negative,
     no block simultaneously free and owned, counts conserve, OOM never
-    corrupts state."""
+    corrupts state.  At ``n_shards > 1`` the per-shard partition holds
+    throughout: every block id maps to exactly one shard, each shard's
+    free list holds only its own ids, the per-shard free gauges sum to
+    the global gauge, and every allocation lands wholly on one shard."""
     import random
 
     rng = random.Random(seed)
-    pool = BlockPool(n_blocks, 4)
+    n_blocks = n_shards * blocks_per_shard
+    pool = BlockPool(n_blocks, 4, n_shards=n_shards)
+    n_local = n_blocks // n_shards
     live: list[list[int]] = []  # tables; a block may appear in several
     for _ in range(200):
         r = rng.random()
@@ -232,9 +238,13 @@ def test_pool_random_traffic_invariants(n_blocks, seed):
             want = rng.randint(1, max(1, n_blocks // 2))
             got = pool.try_alloc(want)
             if got is None:
-                assert want > pool.free_blocks  # OOM only when truly short
+                # OOM only when no single shard could host the request
+                assert want > max(pool.free_blocks_by_shard)
             else:
                 live.append(got)
+                assert len({pool.shard_of(b) for b in got}) == 1, (
+                    "an allocation must land wholly on one shard"
+                )
         owned = {b for ids in live for b in ids}
         for b in owned:
             refs = sum(ids.count(b) for ids in live)
@@ -242,9 +252,17 @@ def test_pool_random_traffic_invariants(n_blocks, seed):
         assert pool.free_blocks + len(owned) == n_blocks, "blocks leaked"
         assert not (set(pool._free) & owned), "block both free and owned"
         assert all(0 <= b < n_blocks for b in owned)
+        # ---- per-shard partition invariants ----
+        assert sum(pool.free_blocks_by_shard) == pool.free_blocks
+        for s, fl in enumerate(pool._frees):
+            assert all(pool.shard_of(b) == s for b in fl), (
+                "free list holds a block owned by another shard"
+            )
+        assert all(pool.shard_of(b) == b // n_local for b in range(n_blocks))
     for ids in live:
         pool.free(ids)
     assert pool.free_blocks == n_blocks
+    assert pool.free_blocks_by_shard == [n_local] * n_shards
 
 
 @given(
@@ -324,15 +342,66 @@ def test_prefix_index_random_traffic_invariants(n_blocks, seed):
 
 
 # ------------------------------------------------------------------ #
+# sharded pool: partition semantics + row-affine allocation
+# ------------------------------------------------------------------ #
+def test_sharded_pool_partition_and_alloc_affinity():
+    """n_shards partitions the id space into contiguous ranges; a shard
+    arg pins allocation, no arg picks the shard with the most headroom,
+    and a shard-local OOM raises even when the GLOBAL pool has room —
+    requests never span shards."""
+    with pytest.raises(ValueError, match="divide"):
+        BlockPool(6, 4, n_shards=4)
+    pool = BlockPool(8, 4, n_shards=2)
+    assert pool.free_blocks_by_shard == [4, 4]
+    assert [pool.shard_of(b) for b in range(8)] == [0] * 4 + [1] * 4
+    a = pool.alloc(3, shard=1)
+    assert all(pool.shard_of(b) == 1 for b in a)
+    b = pool.alloc(2)  # unpinned -> shard 0 has more headroom now
+    assert all(pool.shard_of(x) == 0 for x in b)
+    # shard 1 has 1 free block: a 2-block alloc there must refuse even
+    # though the pool holds 3 free blocks globally
+    assert not pool.can_alloc(2, shard=1)
+    with pytest.raises(BlockPoolOOM):
+        pool.alloc(2, shard=1)
+    assert pool.free_blocks == 3  # failed alloc took nothing
+    pool.free(a)
+    pool.free(b)
+    assert pool.free_blocks_by_shard == [4, 4]
+
+
+def test_sharded_readmission_lands_on_recorded_shard():
+    """Demote a chain that lived on shard 1, then re-admit it under a
+    warm hit: the fresh device blocks must come from shard 1 again (the
+    node records its owning shard across the spill round-trip)."""
+    pool, store, idx = _tiered(8, n_shards=2)
+    A, B = (1, 1, 1, 1), (2, 2, 2, 2)
+    p = idx.plan(_toks(A, B) + [9])
+    p.shard = 1  # pin the cold chain to shard 1
+    t1, _ = idx.commit(p)
+    assert all(pool.shard_of(b) == 1 for b in t1)
+    pool.free(t1)  # A, B park on shard 1
+    assert idx.evict_one() and idx.evict_one()  # demote leaf B, then A
+    assert idx.n_spilled == 2 and pool.free_blocks_by_shard == [4, 4]
+    warm = idx.plan(_toks(A, B) + [5])
+    assert warm is not None and warm.shard == 1
+    assert [n.chunk for n in warm.readmit] == [A, B]
+    t2, _ = idx.commit(warm)
+    assert all(pool.shard_of(b) == 1 for b in t2), (
+        "re-admitted chain must land back on its recorded shard"
+    )
+    pool.free(t2)
+
+
+# ------------------------------------------------------------------ #
 # host tier: bounded spill store + demote / re-admit lifecycle
 # ------------------------------------------------------------------ #
-def _tiered(n_blocks, bs=4, max_bytes=1024, nbytes=8):
+def _tiered(n_blocks, bs=4, max_bytes=1024, nbytes=8, n_shards=1):
     """Pool + store + index wired the way the engine does it, with a
     fetch_block that returns the chunk's own tokens as the 'payload' so
     tests can check demote->re-admit round-trips content-identically."""
     from repro.serving.kv_cache import HostBlockStore
 
-    pool = BlockPool(n_blocks, bs)
+    pool = BlockPool(n_blocks, bs, n_shards=n_shards)
     store = HostBlockStore(max_bytes)
     idx = PrefixIndex(
         pool, spill_store=store,
@@ -435,24 +504,31 @@ def test_store_pressure_drops_lru_spilled_leaf():
 
 
 @given(
-    n_blocks=st.integers(2, 16),
+    n_shards=st.sampled_from([1, 2]),
+    blocks_per_shard=st.integers(2, 8),
     store_chunks=st.integers(1, 4),
     seed=st.integers(0, 2**16),
 )
 @settings(max_examples=25, deadline=None)
-def test_tiered_prefix_index_random_traffic_invariants(n_blocks, store_chunks, seed):
+def test_tiered_prefix_index_random_traffic_invariants(
+    n_shards, blocks_per_shard, store_chunks, seed
+):
     """Random admit/retire traffic over a SPILL-TIERED index: every
     device block is exactly one of free/parked/owned; every cached chunk
     is exactly one of device-backed or spilled; the host store never
     exceeds its byte budget; spilled nodes never have device-resident
     children (leaf-first across the tier boundary); and every re-admitted
-    payload is byte-identical to what demotion fetched."""
+    payload is byte-identical to what demotion fetched.  With a sharded
+    pool, allocation stays row-affine (every committed table lives on
+    one shard) and re-admission lands on each node's RECORDED owning
+    shard — the coordinate survives the demotion round-trip."""
     import random
 
     rng = random.Random(seed)
     bs, nbytes = 4, 16
+    n_blocks = n_shards * blocks_per_shard
     pool, store, idx = _tiered(n_blocks, bs=bs, max_bytes=store_chunks * nbytes,
-                               nbytes=nbytes)
+                               nbytes=nbytes, n_shards=n_shards)
     vocab = [(i, i, i, i) for i in range(1, 5)]
     tables: list[list[int]] = []
     for _ in range(150):
@@ -467,7 +543,14 @@ def test_tiered_prefix_index_random_traffic_invariants(n_blocks, store_chunks, s
             plan = idx.plan(tokens)
             if plan is None:
                 continue
+            recorded = [n.shard for n in plan.readmit]
             table, cow_dst = idx.commit(plan)
+            assert len({pool.shard_of(b) for b in table}) == 1, (
+                "row affinity: a committed table must live on one shard"
+            )
+            assert [pool.shard_of(n.block) for n in plan.readmit] == recorded, (
+                "re-admission must land on the recorded owning shard"
+            )
             # re-admitted payloads come back verbatim (fetch_block stored
             # the chunk's own tokens, so identity is checkable)
             n_r = len(plan.readmit)
@@ -492,6 +575,10 @@ def test_tiered_prefix_index_random_traffic_invariants(n_blocks, store_chunks, s
         )
         for node in device_nodes:
             assert node.block is not None
+            assert node.shard == pool.shard_of(node.block), (
+                "recorded shard coordinate drifted from the block's owner"
+            )
+        assert sum(pool.free_blocks_by_shard) == pool.free_blocks
         assert 0 <= store.used_bytes <= store.max_bytes, "store blew its byte bound"
         assert store.used_bytes == nbytes * len(store)
         for node in idx._spilled:
